@@ -1,0 +1,87 @@
+//! Low-rank approximation of a wide block matrix — the paper's problem
+//! {2} on a recommender-style workload.
+//!
+//!     cargo run --release --example streaming_lowrank
+//!
+//! Builds a 8192 × 4096 "user × item" preference matrix with a planted
+//! rank-12 structure plus noise, stores it as a DistBlockMatrix (the
+//! shape where no full row-set fits one machine), and compares
+//! Algorithm 7, Algorithm 8, and the ARPACK-like baseline on the same
+//! rank budget — reproducing the paper's Table 9/10 comparison on a
+//! non-synthetic-spectrum input.
+
+use dsvd::algs::{algorithm7, algorithm8, preexisting_lowrank, ArnoldiOpts, LowRankOpts};
+use dsvd::config::RunConfig;
+use dsvd::dist::DistBlockMatrix;
+use dsvd::rng::Rng;
+use dsvd::runtime::NativeCompute;
+use dsvd::verify::{spectral_norm, ResidualOp};
+use std::time::Instant;
+
+const USERS: usize = 8192;
+const ITEMS: usize = 4096;
+const RANK: usize = 12;
+
+fn main() {
+    let mut cfg = RunConfig::default();
+    cfg.executors = 32;
+    cfg.rows_per_part = 1024;
+    cfg.cols_per_part = 1024;
+    let ctx = cfg.context();
+    let be = NativeCompute;
+
+    // planted low-rank structure: preferences = user-factors · item-factorsᵀ
+    let mut rng = Rng::seed(4242);
+    let uf: Vec<Vec<f64>> = (0..RANK).map(|_| (0..USERS).map(|_| rng.gauss()).collect()).collect();
+    let vf: Vec<Vec<f64>> = (0..RANK).map(|_| (0..ITEMS).map(|_| rng.gauss()).collect()).collect();
+    let weights: Vec<f64> = (0..RANK).map(|r| 10.0 * 0.7f64.powi(r as i32)).collect();
+
+    let a = DistBlockMatrix::generate(&ctx, USERS, ITEMS, cfg.rows_per_part, cfg.cols_per_part, |i, j| {
+        let mut s = 0.0;
+        for r in 0..RANK {
+            s += weights[r] * uf[r][i] * vf[r][j];
+        }
+        // deterministic per-entry noise
+        let h = (i as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (j as u64).wrapping_mul(0xBF58476D1CE4E5B9);
+        let noise = ((h >> 11) as f64 / (1u64 << 53) as f64 - 0.5) * 0.01;
+        s + noise
+    });
+    let (nbr, nbc) = a.num_blocks();
+    println!("preference matrix {}×{} in {}×{} blocks", USERS, ITEMS, nbr, nbc);
+
+    let mut opts = LowRankOpts::new(RANK, 2);
+    opts.rows_per_part = cfg.rows_per_part;
+
+    for (name, run) in [
+        ("Algorithm 7 (randomized)", 7usize),
+        ("Algorithm 8 (Gram)", 8),
+        ("pre-existing (ARPACK-like)", 0),
+    ] {
+        let t0 = Instant::now();
+        ctx.reset_metrics();
+        let out = match run {
+            7 => algorithm7(&ctx, &be, &a, &opts),
+            8 => algorithm8(&ctx, &be, &a, &opts),
+            _ => preexisting_lowrank(&ctx, &be, &a, &ArnoldiOpts::new(RANK)),
+        };
+        let metrics = ctx.take_metrics();
+        let resid = ResidualOp { a: &a, u: &out.u, s: &out.s, v: &out.v };
+        let err = spectral_norm(&ctx, &resid, 40, 1);
+        let weakest = out.s.last().copied().unwrap_or(0.0);
+        println!(
+            "{name:28} rank={:2}  ‖A−UΣVᵀ‖₂={:.3e}  σ_min={:.3e}  CPU={:.2}s  real={:.2}s",
+            out.s.len(),
+            err,
+            weakest,
+            metrics.cpu_time,
+            t0.elapsed().as_secs_f64()
+        );
+        // every planted factor must be captured: the residual (noise floor)
+        // must sit well below the weakest retained singular value
+        assert!(
+            err < 0.1 * weakest,
+            "{name}: residual {err} not well below sigma_min {weakest}"
+        );
+    }
+    println!("streaming_lowrank OK");
+}

@@ -1,0 +1,63 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO-text artifacts for the Rust
+runtime (L3). Runs ONCE at build time (`make artifacts`); the Rust binary
+is self-contained afterwards.
+
+Interchange format is HLO **text**, not a serialized `HloModuleProto`:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import NARROW, OPERATIONS, TILE
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: pathlib.Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_lines = [f"tile={TILE}", f"narrow={NARROW}"]
+    for name, (fn, specs) in sorted(OPERATIONS.items()):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        shapes = ";".join("x".join(map(str, s.shape)) for s in specs)
+        manifest_lines.append(f"{name} inputs={shapes} sha256={digest}")
+        print(f"wrote {path} ({len(text)} chars, inputs {shapes})")
+    (out_dir / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    print(f"wrote {out_dir / 'manifest.txt'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default="../artifacts",
+        help="directory for the .hlo.txt artifacts (default: ../artifacts)",
+    )
+    args = ap.parse_args()
+    lower_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

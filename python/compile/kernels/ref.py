@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must agree with these reference
+implementations to near machine precision under pytest (see
+python/tests/). No pallas, no tiling: just the mathematical contract.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matmul_ref(a, b):
+    """Plain `a @ b` in f64."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float64)
+
+
+def gram_ref(x):
+    """`xᵀ x` in f64."""
+    return jnp.dot(x.T, x, preferred_element_type=jnp.float64)
+
+
+def gemm_acc_ref(c, a, b):
+    """`c + a @ b` in f64."""
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float64)

@@ -1,0 +1,66 @@
+"""L2: the JAX tile graphs the Rust coordinator executes through PJRT.
+
+Each function here is a complete per-partition compute graph of the
+paper's pipelines, written in JAX *calling the L1 Pallas kernels*, so a
+single `jax.jit(...).lower(...)` emits one fused HLO module per
+operation. `aot.py` lowers every entry of `OPERATIONS` once at build
+time; the Rust tile engine (rust/src/runtime/) pads arbitrary partition
+shapes onto these fixed tile shapes.
+
+Python never runs at request time — these graphs exist only to be
+lowered.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pk
+
+jax.config.update("jax_enable_x64", True)
+
+#: Tile edge shared with rust/src/runtime/engine.rs (keep in sync).
+TILE = 256
+#: Narrow right-hand-side width for thin products (A·V with small k).
+NARROW = 32
+
+
+def gemm_acc(c, a, b):
+    """`C += A·B` on one (TILE, TILE) tile — the universal GEMM step.
+
+    Used for: TSQR back-multiplication (Q·W), U = Q·Ũ, A·V projections,
+    and the DCT test-matrix generator's `U_slab · (Σ Vᵀ)`.
+    """
+    return c + pk.matmul(a, b)
+
+
+def gemm_acc_narrow(c, a, b):
+    """`C += A·B` with a (TILE, NARROW) right-hand side — thin products
+    (subspace iteration's A·Q̃ with l ≤ 32 columns, MLlib's A·(VΣ⁻¹))."""
+    return c + pk.matmul(a, b, bn=NARROW)
+
+
+def gram_acc(g, x):
+    """`G += XᵀX` on one (TILE, TILE) tile — the treeAggregate leaf of
+    Algorithms 3–4 and the stock MLlib routine."""
+    return g + pk.gram(x)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+#: name → (python callable, example argument shapes)
+OPERATIONS = {
+    "gemm_acc_f64_256": (
+        gemm_acc,
+        (_spec(TILE, TILE), _spec(TILE, TILE), _spec(TILE, TILE)),
+    ),
+    "gemm_acc_f64_256x32": (
+        gemm_acc_narrow,
+        (_spec(TILE, NARROW), _spec(TILE, TILE), _spec(TILE, NARROW)),
+    ),
+    "gram_acc_f64_256": (
+        gram_acc,
+        (_spec(TILE, TILE), _spec(TILE, TILE)),
+    ),
+}

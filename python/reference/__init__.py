@@ -1,0 +1,4 @@
+# Serial reference implementation of the paper's Algorithms 1-8
+# (the analog of the paper's Remark-3 Python codes at
+# http://tygert.com/valid.tar.gz): easy to read, numerically faithful,
+# and cross-checked against the Rust implementation by pytest.

@@ -1,0 +1,307 @@
+"""Serial numpy reference of the paper's Algorithms 1–8 (Remark 3).
+
+The paper ships a serial Python implementation alongside the Spark one
+("the Python is far easier to read and run"); this module plays that
+role for the Rust/sparklite implementation. Numerics mirror the
+distributed code exactly:
+
+* Algorithms 1–2 reconstitute Q implicitly as `B[:, :k] R₁₁⁻¹`
+  (triangular solve) after a QR — the source of the eps·cond(R₁₁)
+  orthogonality loss that double orthonormalization repairs;
+* Algorithms 3–4 use explicit column normalization (Remark 6) and the
+  √(working precision) cutoff;
+* `preexisting` reproduces MLlib's computeSVD finish (Σ = √λ, rCond
+  cutoff, no renormalization).
+
+Used by python/tests/test_reference.py for self-consistency (every
+accuracy contrast of the paper's tables) and for agreement with the
+Rust port on shared closed forms (spectra, the Devil's staircase).
+"""
+
+import numpy as np
+
+WORKING_PRECISION = 1e-11
+
+
+# ---------------------------------------------------------------------------
+# Remark 5: the SRFT mixing matrix Ω = D F S D̃ F S̃ on paired reals
+# ---------------------------------------------------------------------------
+
+
+class Srft:
+    """Random orthogonal mixing operator on R^n, as chained
+    permute→unitary-FFT→unit-circle-diagonal stages on paired reals."""
+
+    def __init__(self, n, rng, chains=2):
+        assert n >= 2
+        self.n = n
+        self.nc = n // 2  # fully paired complex slots
+        self.odd = n % 2 == 1
+        self.stages = []
+        for _ in range(chains):
+            perm = rng.permutation(self.nc)
+            theta = rng.uniform(0.0, 2.0 * np.pi, self.nc)
+            # odd n: mix the unpaired tail coordinate into the rest with a
+            # random Givens rotation per stage (keeps Ω exactly orthogonal)
+            tail = (rng.integers(0, n - 1), rng.uniform(0.0, 2.0 * np.pi)) if self.odd else None
+            self.stages.append((perm, np.exp(1j * theta), tail))
+
+    def _pack(self, x):
+        return x[0 : 2 * self.nc : 2] + 1j * x[1 : 2 * self.nc : 2]
+
+    def _unpack(self, z, x):
+        x[0 : 2 * self.nc : 2] = z.real
+        x[1 : 2 * self.nc : 2] = z.imag
+        return x
+
+    @staticmethod
+    def _givens(x, i, j, theta):
+        c, s = np.cos(theta), np.sin(theta)
+        xi, xj = x[i], x[j]
+        x[i] = c * xi - s * xj
+        x[j] = s * xi + c * xj
+
+    def forward(self, x):
+        x = np.array(x, dtype=np.float64)
+        for perm, diag, tail in reversed(self.stages):
+            if tail is not None:
+                self._givens(x, self.n - 1, tail[0], tail[1])
+            z = self._pack(x)
+            z = z[perm]
+            z = np.fft.fft(z) / np.sqrt(self.nc)
+            z = z * diag
+            x = self._unpack(z, x)
+        return x
+
+    def inverse(self, x):
+        x = np.array(x, dtype=np.float64)
+        for perm, diag, tail in self.stages:
+            z = self._pack(x)
+            z = z * np.conj(diag)
+            z = np.fft.ifft(z) * np.sqrt(self.nc)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(self.nc)
+            z = z[inv]
+            x = self._unpack(z, x)
+            if tail is not None:
+                self._givens(x, self.n - 1, tail[0], tail[1] * -1.0)
+        return x
+
+    def forward_rows(self, a):
+        return np.stack([self.forward(row) for row in a])
+
+    def inverse_cols(self, v):
+        return np.stack([self.inverse(col) for col in v.T]).T
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _significant_prefix(rdiag, wp):
+    r00 = abs(rdiag[0])
+    if r00 == 0.0:
+        return 0
+    k = 0
+    for d in rdiag:
+        if abs(d) >= r00 * wp:
+            k += 1
+        else:
+            break
+    return k
+
+
+def _implicit_q(b, wp):
+    """QR of b; Q reconstituted as b[:, :k] R₁₁⁻¹ (the Spark-faithful
+    path). Returns (q, r_kept)."""
+    r = np.linalg.qr(b, mode="r")
+    k = _significant_prefix(np.diag(r), wp)
+    if k == 0:
+        raise ValueError("matrix numerically zero at the working precision")
+    r11 = r[:k, :k]
+    q = np.linalg.solve(r11.T, b[:, :k].T).T  # b[:, :k] @ inv(r11)
+    return q, r[:k, :]
+
+
+# ---------------------------------------------------------------------------
+# Algorithms 1–4 + the stock baseline (problem {1})
+# ---------------------------------------------------------------------------
+
+
+def algorithm1(a, wp=WORKING_PRECISION, seed=0, chains=2):
+    """Randomized SVD of a tall-skinny matrix, single orthonormalization."""
+    rng = np.random.default_rng(seed)
+    om = Srft(a.shape[1], rng, chains)
+    mixed = om.forward_rows(a)
+    q, r = _implicit_q(mixed, wp)
+    ut, s, vt = np.linalg.svd(r, full_matrices=False)
+    u = q @ ut
+    v = om.inverse_cols(vt.T)
+    return u, s, v
+
+
+def algorithm2(a, wp=WORKING_PRECISION, seed=0, chains=2):
+    """Algorithm 1 with double orthonormalization — machine-precision U."""
+    rng = np.random.default_rng(seed)
+    om = Srft(a.shape[1], rng, chains)
+    mixed = om.forward_rows(a)
+    q1, r1 = _implicit_q(mixed, wp)
+    q2, r2 = _implicit_q(q1, wp)
+    t = r2 @ r1
+    ut, s, vt = np.linalg.svd(t, full_matrices=False)
+    u = q2 @ ut
+    v = om.inverse_cols(vt.T)
+    return u, s, v
+
+
+def algorithm3(a, wp=WORKING_PRECISION):
+    """Gram-based SVD with Remark 6's explicit normalization."""
+    b = a.T @ a
+    lam, v = np.linalg.eigh(b)
+    order = np.argsort(lam)[::-1]
+    v = v[:, order]
+    u_tilde = a @ v
+    sigma = np.linalg.norm(u_tilde, axis=0)
+    keep = sigma >= sigma.max() * np.sqrt(wp)
+    keep &= sigma > 0
+    u = u_tilde[:, keep] / sigma[keep]
+    return u, sigma[keep], v[:, keep]
+
+
+def algorithm4(a, wp=WORKING_PRECISION):
+    """Gram-based SVD with double orthonormalization."""
+    cutoff = np.sqrt(wp)
+    b = a.T @ a
+    lam, v_tilde = np.linalg.eigh(b)
+    v_tilde = v_tilde[:, np.argsort(lam)[::-1]]
+    y_tilde = a @ v_tilde
+    sig_tilde = np.linalg.norm(y_tilde, axis=0)
+    keep1 = (sig_tilde >= sig_tilde.max() * cutoff) & (sig_tilde > 0)
+    y = y_tilde[:, keep1] / sig_tilde[keep1]
+    v_tilde = v_tilde[:, keep1]
+    sig_tilde = sig_tilde[keep1]
+
+    z = y.T @ y
+    lam2, w = np.linalg.eigh(z)
+    w = w[:, np.argsort(lam2)[::-1]]
+    q_tilde = y @ w
+    t = np.linalg.norm(q_tilde, axis=0)
+    keep2 = (t >= t.max() * cutoff) & (t > 0)
+    q = q_tilde[:, keep2] / t[keep2]
+    w = w[:, keep2]
+    t = t[keep2]
+
+    r = (t[:, None] * w.T) * sig_tilde[None, :] @ v_tilde.T
+    p, s, vt = np.linalg.svd(r, full_matrices=False)
+    return q @ p, s, vt.T
+
+
+def preexisting(a, rcond=1e-9):
+    """Stock MLlib computeSVD: Σ = √λ, no renormalization, rCond cutoff."""
+    b = a.T @ a
+    lam, v = np.linalg.eigh(b)
+    order = np.argsort(lam)[::-1]
+    lam, v = lam[order], v[:, order]
+    sigma = np.sqrt(np.maximum(lam, 0.0))
+    keep = sigma > rcond * sigma.max()
+    sigma, v = sigma[keep], v[:, keep]
+    u = a @ (v / sigma)
+    return u, sigma, v
+
+
+# ---------------------------------------------------------------------------
+# Algorithms 5–8 (problem {2})
+# ---------------------------------------------------------------------------
+
+
+def _factor_q(y, method, wp, seed):
+    if method == "randomized":
+        u, _, _ = algorithm1(y, wp, seed)
+    else:
+        u, _, _ = algorithm3(y, wp)
+    return u
+
+
+def _factor_q_double(y, method, wp, seed):
+    if method == "randomized":
+        u, _, _ = algorithm2(y, wp, seed)
+    else:
+        u, _, _ = algorithm4(y, wp)
+    return u
+
+
+def algorithm5(a, l, iters, method="randomized", wp=WORKING_PRECISION, seed=0):
+    """Randomized subspace iteration (HMT Algorithm 4.4)."""
+    rng = np.random.default_rng(seed ^ 0xA160005)
+    q_tilde = rng.standard_normal((a.shape[1], l))
+    for j in range(iters):
+        y = a @ q_tilde
+        q = _factor_q(y, method, wp, seed + j)
+        y_tilde = a.T @ q
+        q_tilde = _factor_q(y_tilde, method, wp, seed + 100 + j)
+    y = a @ q_tilde
+    return _factor_q_double(y, method, wp, seed + 999)
+
+
+def algorithm6(a, q):
+    """B = QᵀA, small SVD, U = QŨ (HMT Algorithm 5.1)."""
+    b = q.T @ a
+    ut, s, vt = np.linalg.svd(b, full_matrices=False)
+    return q @ ut, s, vt.T
+
+
+def algorithm7(a, l, iters, wp=WORKING_PRECISION, seed=0):
+    q = algorithm5(a, l, iters, "randomized", wp, seed)
+    return algorithm6(a, q)
+
+
+def algorithm8(a, l, iters, wp=WORKING_PRECISION, seed=0):
+    q = algorithm5(a, l, iters, "gram", wp, seed)
+    return algorithm6(a, q)
+
+
+# ---------------------------------------------------------------------------
+# the paper's test matrices (equations (2), (3), (5); Appendix B)
+# ---------------------------------------------------------------------------
+
+
+def spectrum_geometric(n):
+    if n == 1:
+        return np.array([1.0])
+    j = np.arange(n)
+    return np.exp(j / (n - 1) * np.log(1e-20))
+
+
+def spectrum_lowrank(n, l):
+    s = np.zeros(n)
+    if l == 1:
+        s[0] = 1.0
+        return s
+    j = np.arange(l)
+    s[:l] = np.exp(j / (l - 1) * np.log(1e-20))
+    return s
+
+
+def devils_staircase(k):
+    """Appendix B's Scala snippet, f32 rounding included."""
+    out = []
+    for j in range(k):
+        x = int(np.round(np.float32(j) * np.float32(8.0**6) / np.float32(k)))
+        octal = oct(x)[2:]
+        binary = "".join("0" if c == "0" else "1" for c in octal)
+        out.append(int(binary, 2) / 2.0**6 / (1 - 2.0**-6))
+    return np.array(sorted(out, reverse=True))
+
+
+def dct_test_matrix(m, n, sigma):
+    """Equation (2): A = U Σ Vᵀ with orthonormal DCT bases."""
+    i = np.arange(m)[:, None]
+    j = np.arange(n)[None, :]
+    u = np.sqrt(2.0 / m) * np.cos(np.pi * (2 * i + 1) * j / (2 * m))
+    u[:, 0] = np.sqrt(1.0 / m)
+    iv = np.arange(n)[:, None]
+    jv = np.arange(n)[None, :]
+    v = np.sqrt(2.0 / n) * np.cos(np.pi * (2 * iv + 1) * jv / (2 * n))
+    v[:, 0] = np.sqrt(1.0 / n)
+    return (u * np.asarray(sigma)) @ v.T

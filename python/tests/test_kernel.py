@@ -1,0 +1,146 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps data distributions and tile/block configurations;
+deterministic tests pin the exact shapes the AOT artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+RTOL = 1e-13
+ATOL = 1e-13
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# deterministic checks at the artifact shapes
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_artifact_shape():
+    rng = np.random.default_rng(0)
+    a = rand(rng, 256, 256)
+    b = rand(rng, 256, 256)
+    got = pk.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_narrow_artifact_shape():
+    rng = np.random.default_rng(1)
+    a = rand(rng, 256, 256)
+    b = rand(rng, 256, 32)
+    got = pk.matmul(a, b, bn=32)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_gram_artifact_shape():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 256, 256)
+    got = pk.gram(x)
+    want = ref.gram_ref(x)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    # exact symmetry of the accumulated result
+    np.testing.assert_allclose(got, got.T, rtol=0, atol=1e-12)
+
+
+def test_model_graphs_match_ref():
+    from compile import model
+
+    rng = np.random.default_rng(3)
+    c = rand(rng, 256, 256)
+    a = rand(rng, 256, 256)
+    b = rand(rng, 256, 256)
+    np.testing.assert_allclose(
+        model.gemm_acc(c, a, b), ref.gemm_acc_ref(c, a, b), rtol=RTOL, atol=ATOL
+    )
+    g = rand(rng, 256, 256)
+    x = rand(rng, 256, 256)
+    np.testing.assert_allclose(
+        model.gram_acc(g, x), ref.gram_ref(x) + g, rtol=RTOL, atol=ATOL
+    )
+    cn = rand(rng, 256, 32)
+    bn = rand(rng, 256, 32)
+    np.testing.assert_allclose(
+        model.gemm_acc_narrow(cn, a, bn), ref.gemm_acc_ref(cn, a, bn), rtol=RTOL, atol=ATOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, block sizes, data scales
+# ---------------------------------------------------------------------------
+
+block_sizes = st.sampled_from([16, 32, 64, 128])
+dims = st.sampled_from([16, 32, 64, 128, 256])
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims, bm=block_sizes, bk=block_sizes, bn=block_sizes, seed=st.integers(0, 2**31))
+def test_matmul_block_sweep(m, k, n, bm, bk, bn, seed):
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    if m % bm or k % bk or n % bn:
+        return  # non-dividing blocks are rejected by construction
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, k)
+    b = rand(rng, k, n)
+    got = pk.matmul(a, b, bm=bm, bk=bk, bn=bn)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, bm=block_sizes, bn=block_sizes, seed=st.integers(0, 2**31))
+def test_gram_block_sweep(m, n, bm, bn, seed):
+    bm, bn = min(bm, m), min(bn, n)
+    if m % bm or n % bn:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, n)
+    got = pk.gram(x, bm=bm, bn=bn)
+    want = ref.gram_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    scale=st.sampled_from([1e-150, 1e-20, 1e-8, 1.0, 1e8, 1e20]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_extreme_scales(scale, seed):
+    """The paper's matrices span 1 .. 1e-20 in singular values — the tile
+    kernel must stay accurate across extreme magnitudes."""
+    rng = np.random.default_rng(seed)
+    a = rand(rng, 64, 64, scale=scale)
+    b = rand(rng, 64, 64)
+    got = pk.matmul(a, b, bm=32, bk=32, bn=32)
+    want = ref.matmul_ref(a, b)
+    # atol scaled to the product magnitude: entries that suffer catastrophic
+    # cancellation legitimately differ between summation orders
+    prod_scale = float(jnp.max(jnp.abs(a))) * float(jnp.max(jnp.abs(b))) * a.shape[1]
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14 * prod_scale)
+
+
+def test_matmul_rejects_non_dividing_blocks():
+    with pytest.raises(ValueError):
+        pk.make_matmul(100, 100, 100, bm=64, bk=64, bn=64)
+
+
+def test_zero_and_identity():
+    z = jnp.zeros((64, 64), jnp.float64)
+    np.testing.assert_array_equal(pk.matmul(z, z, bm=32, bk=32, bn=32), z)
+    eye = jnp.eye(64, dtype=jnp.float64)
+    rng = np.random.default_rng(9)
+    a = rand(rng, 64, 64)
+    np.testing.assert_allclose(pk.matmul(eye, a, bm=32, bk=32, bn=32), a, rtol=0, atol=0)

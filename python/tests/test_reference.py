@@ -1,0 +1,115 @@
+"""Tests for the serial reference implementation (python/reference):
+self-consistency against the paper's claims, agreement with numpy's SVD
+on benign inputs, and the exact accuracy contrasts of the tables.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from reference import algorithms as ref  # noqa: E402
+
+
+def errors(a, u, s, v):
+    recon = np.linalg.norm(a - (u * s) @ v.T, 2)
+    u_orth = np.abs(u.T @ u - np.eye(u.shape[1])).max()
+    v_orth = np.abs(v.T @ v - np.eye(v.shape[1])).max()
+    return recon, u_orth, v_orth
+
+
+@pytest.fixture(scope="module")
+def ill_conditioned():
+    sigma = ref.spectrum_geometric(128)
+    return ref.dct_test_matrix(1024, 128, sigma)
+
+
+def test_dct_test_matrix_has_requested_spectrum():
+    sigma = ref.spectrum_geometric(64)
+    a = ref.dct_test_matrix(256, 64, sigma)
+    s = np.linalg.svd(a, compute_uv=False)
+    np.testing.assert_allclose(s[:8], sigma[:8], rtol=1e-9)
+
+
+def test_algorithm1_profile(ill_conditioned):
+    u, s, v = ref.algorithm1(ill_conditioned)
+    recon, u_orth, v_orth = errors(ill_conditioned, u, s, v)
+    assert recon < 5e-11
+    assert 1e-10 < u_orth < 1e-3  # eps·cond(R11): visible but bounded
+    assert v_orth < 1e-12
+
+
+def test_algorithm2_machine_precision(ill_conditioned):
+    u, s, v = ref.algorithm2(ill_conditioned)
+    recon, u_orth, v_orth = errors(ill_conditioned, u, s, v)
+    assert recon < 5e-11
+    assert u_orth < 1e-12  # the headline
+    assert v_orth < 1e-12
+
+
+def test_algorithm3_half_digits(ill_conditioned):
+    u, s, v = ref.algorithm3(ill_conditioned)
+    recon, u_orth, v_orth = errors(ill_conditioned, u, s, v)
+    assert 1e-13 < recon < 5e-6  # Gram loses half the digits
+    assert u_orth < 1e-2
+    assert v_orth < 1e-12
+
+
+def test_algorithm4_double(ill_conditioned):
+    u, s, v = ref.algorithm4(ill_conditioned)
+    recon, u_orth, v_orth = errors(ill_conditioned, u, s, v)
+    assert recon < 5e-6
+    assert u_orth < 1e-12
+    assert v_orth < 1e-12
+
+
+def test_preexisting_silent_failure(ill_conditioned):
+    u, s, v = ref.preexisting(ill_conditioned)
+    _, u_orth, v_orth = errors(ill_conditioned, u, s, v)
+    assert u_orth > 1e-2  # O(1) without warning
+    assert v_orth < 1e-12
+
+
+def test_singular_values_match_numpy(ill_conditioned):
+    want = np.linalg.svd(ill_conditioned, compute_uv=False)
+    for alg in (ref.algorithm1, ref.algorithm2):
+        _, s, _ = alg(ill_conditioned)
+        np.testing.assert_allclose(s[:16], want[:16], rtol=1e-8)
+
+
+def test_algorithm7_vs_8_contrast():
+    sigma = ref.spectrum_lowrank(96, 12)
+    a = ref.dct_test_matrix(192, 96, sigma)
+    u7, s7, v7 = ref.algorithm7(a, 12, 2)
+    u8, s8, v8 = ref.algorithm8(a, 12, 2)
+    r7, uo7, _ = errors(a, u7, s7, v7)
+    r8, uo8, _ = errors(a, u8, s8, v8)
+    assert uo7 < 1e-12 and uo8 < 1e-12
+    assert r7 < r8 / 10, f"alg7 {r7} must beat alg8 {r8}"
+
+
+def test_srft_orthogonal():
+    rng = np.random.default_rng(0)
+    om = ref.Srft(32, rng)
+    x = rng.standard_normal(32)
+    y = om.forward(x)
+    assert abs(np.linalg.norm(y) - np.linalg.norm(x)) < 1e-12
+    np.testing.assert_allclose(om.inverse(y), x, atol=1e-12)
+
+
+def test_devils_staircase_matches_paper_shape():
+    s = ref.devils_staircase(2000)
+    assert len(s) == 2000
+    assert abs(s[0] - 1.0) < 1e-12
+    assert s[-1] >= 0.0
+    assert len(set(s.tolist())) < 500
+
+
+def test_staircase_agrees_with_rust_port():
+    # the Rust port (rust/src/gen.rs) small-k exact value
+    s = ref.devils_staircase(2)
+    assert abs(s[0] - 32.0 / 64.0 / (1 - 1.0 / 64.0)) < 1e-12
+    assert s[1] == 0.0

@@ -1,0 +1,54 @@
+//! Shared plumbing for the table benches (harness = false).
+//!
+//! Environment knobs:
+//!   DSVD_BENCH_SCALE   divide every m by this factor (default 1)
+//!   DSVD_BENCH_BACKEND native | pjrt (default native)
+//!   DSVD_BENCH_POWER   power iterations for error columns (default 40)
+
+use dsvd::config::{Backend, RunConfig};
+use dsvd::harness::TableRow;
+use dsvd::runtime::compute::Compute;
+use std::sync::Arc;
+
+pub fn bench_config() -> (RunConfig, Arc<dyn Compute>, usize) {
+    let scale: usize = std::env::var("DSVD_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1);
+    let mut cfg = RunConfig::default();
+    cfg.power_iters = std::env::var("DSVD_BENCH_POWER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    if let Ok(b) = std::env::var("DSVD_BENCH_BACKEND") {
+        cfg.backend = b.parse().unwrap_or(Backend::Native);
+    }
+    let be = cfg.compute().expect("backend");
+    (cfg, be, scale)
+}
+
+/// Print one table: measured rows next to the paper's reference rows.
+#[allow(dead_code)] // not every bench prints paper-reference tables
+pub fn print_table(
+    title: &str,
+    paper_rows: &[(&str, &str, &str, &str, &str, &str)],
+    rows: &[TableRow],
+) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("----------------------------------------------------------------");
+    println!("measured:");
+    println!("{}", TableRow::header());
+    for r in rows {
+        println!("{}", r.format());
+    }
+    println!("paper (original scale):");
+    println!(
+        "{:>14}  {:>10}  {:>10}  {:>12}  {:>12}  {:>12}",
+        "Algorithm", "CPU Time", "Wall-Clock", "|A-USV*|_2", "max|U*U-I|", "max|V*V-I|"
+    );
+    for (a, c, w, r, u, v) in paper_rows {
+        println!("{a:>14}  {c:>10}  {w:>10}  {r:>12}  {u:>12}  {v:>12}");
+    }
+}

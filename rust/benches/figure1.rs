@@ -1,0 +1,48 @@
+//! Regenerates Figure 1: the Devil's-staircase singular values
+//! Σ₁,₁ … Σ₂₀₀₀,₂₀₀₀ used by Appendix B (k = n = 2000) — an EXACT port
+//! of the paper's Scala snippet, at the paper's original size (no
+//! scaling needed: it is a 2000-element list).
+//!
+//! Emits `target/figure1.csv` (j, sigma_j) and prints an ASCII rendering.
+//!
+//!     cargo bench --bench figure1
+
+use dsvd::gen::devils_staircase;
+
+fn main() {
+    let k = 2000;
+    let s = devils_staircase(k);
+
+    // CSV for external plotting
+    let mut csv = String::from("j,sigma_j\n");
+    for (j, v) in s.iter().enumerate() {
+        csv.push_str(&format!("{},{}\n", j + 1, v));
+    }
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/figure1.csv", &csv).expect("write csv");
+    println!("wrote target/figure1.csv ({k} rows)");
+
+    // ASCII plot: 60 rows × 64 cols, like the paper's Fig. 1 (descending
+    // staircase from 1 to 0)
+    let (w, h) = (64usize, 24usize);
+    let mut grid = vec![vec![' '; w]; h];
+    for (j, &v) in s.iter().enumerate() {
+        let x = j * (w - 1) / (k - 1);
+        let y = ((1.0 - v) * (h - 1) as f64).round() as usize;
+        grid[y.min(h - 1)][x] = '*';
+    }
+    println!("\nFigure 1: singular values (staircase), k = n = {k}");
+    println!("1.0 ┐");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == h - 1 { "0.0 ┘" } else { "    │" };
+        println!("{label}{}", row.iter().collect::<String>());
+    }
+    println!("     j = 1 {:>width$}", format!("j = {k}"), width = w - 6);
+
+    // invariants of the construction (same checks as gen::tests)
+    assert_eq!(s.len(), k);
+    assert!((s[0] - 1.0).abs() < 1e-12);
+    assert!(s[k - 1] >= 0.0 && s[k - 1] < 1e-12);
+    let distinct: std::collections::BTreeSet<u64> = s.iter().map(|x| x.to_bits()).collect();
+    println!("\ndistinct values: {} of {k} (heavy multiplicity, as in the paper)", distinct.len());
+}

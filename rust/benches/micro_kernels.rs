@@ -1,0 +1,125 @@
+//! Micro-benchmarks + ablations of the design choices DESIGN.md §6 calls
+//! out (not a paper table — the engineering evidence behind §Perf):
+//!
+//!   * native vs PJRT/Pallas tile backend (GEMM, Gram)
+//!   * TSQR / treeAggregate fan-in (2 vs 4 vs 8)
+//!   * SRFT chain count (Remark 5: 1 vs 2 vs 3)
+//!   * implicit-Q (paper) vs explicit-Q (our upgrade) TSQR in Algorithm 1
+//!   * Gaussian vs SRFT sketch — cost of the mixing step itself
+//!
+//!     cargo bench --bench micro_kernels
+
+use dsvd::algs::{algorithm1, algorithm1_explicit_q, TallSkinnyOpts};
+use dsvd::config::RunConfig;
+use dsvd::dist::{tsqr_r, Context, DistRowMatrix};
+use dsvd::gen::{spectrum_geometric, DctTestMatrix};
+use dsvd::linalg::{blas, Matrix};
+use dsvd::rng::Rng;
+use dsvd::runtime::compute::{Compute, NativeCompute};
+use dsvd::runtime::engine::PjrtCompute;
+use dsvd::srft::Srft;
+use dsvd::verify::max_entry_gram_minus_identity;
+use std::time::Instant;
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+fn main() {
+    let mut rng = Rng::seed(1);
+
+    // ---- L3 GEMM kernel: native vs PJRT --------------------------------
+    println!("== tile kernels: native vs pjrt (GEMM 512×512×512, Gram 2048×256)");
+    let a = Matrix::from_fn(512, 512, |_, _| rng.gauss());
+    let b = Matrix::from_fn(512, 512, |_, _| rng.gauss());
+    let x = Matrix::from_fn(2048, 256, |_, _| rng.gauss());
+    let (_, t_nat) = time(|| blas::matmul(&a, &b));
+    println!("  native  gemm: {:.4}s  ({:.2} GFLOP/s)", t_nat, gflops(2.0 * 512f64.powi(3), t_nat));
+    let (_, t_gram) = time(|| blas::gram(&x));
+    println!("  native  gram: {:.4}s  ({:.2} GFLOP/s)", t_gram, gflops(2048.0 * 256.0 * 256.0, t_gram));
+    match PjrtCompute::load_default() {
+        Ok(pj) => {
+            // warm-up (compile is cached at load; first exec allocates)
+            let _ = pj.matmul(&a, &b);
+            let (_, t_pj) = time(|| pj.matmul(&a, &b));
+            println!("  pjrt    gemm: {:.4}s  ({:.2} GFLOP/s)", t_pj, gflops(2.0 * 512f64.powi(3), t_pj));
+            let _ = pj.gram(&x);
+            let (_, t_pjg) = time(|| pj.gram(&x));
+            println!("  pjrt    gram: {:.4}s  ({:.2} GFLOP/s)", t_pjg, gflops(2048.0 * 256.0 * 256.0, t_pjg));
+        }
+        Err(e) => println!("  pjrt unavailable: {e}"),
+    }
+
+    // ---- TSQR fan-in ablation ------------------------------------------
+    println!("\n== TSQR fan-in (m=32768 n=128, 64 partitions)");
+    let am = Matrix::from_fn(32768, 128, |_, _| rng.gauss());
+    for fan_in in [2usize, 4, 8, 16] {
+        let ctx = Context::new(64).with_fan_in(fan_in);
+        let d = DistRowMatrix::from_matrix(&am, 512);
+        ctx.reset_metrics();
+        let (_r, t) = time(|| tsqr_r(&ctx, &d));
+        let m = ctx.metrics();
+        println!(
+            "  fan-in {fan_in:2}: {t:.3}s real, {} stages, {} KiB shuffled, sim wall {:.3}s",
+            m.stages,
+            m.shuffle_bytes / 1024,
+            m.driver_elapsed
+        );
+    }
+
+    // ---- SRFT chains (Remark 5) ----------------------------------------
+    println!("\n== SRFT chain count (apply Ω to 16384 rows of n=256)");
+    for chains in [1usize, 2, 3] {
+        let mut r2 = Rng::seed(2);
+        let om = Srft::with_chains(256, chains, &mut r2);
+        let mut rows = vec![vec![0.0f64; 256]; 16384];
+        for row in rows.iter_mut() {
+            for v in row.iter_mut() {
+                *v = r2.gauss();
+            }
+        }
+        let (_, t) = time(|| {
+            for row in rows.iter_mut() {
+                om.forward(row);
+            }
+        });
+        println!("  chains {chains}: {t:.3}s ({:.1} ns/element)", t * 1e9 / (16384.0 * 256.0));
+    }
+
+    // ---- implicit vs explicit Q in Algorithm 1 --------------------------
+    println!("\n== Algorithm 1: implicit-Q (paper) vs explicit-Q (ours), m=16384 n=256");
+    let cfg = RunConfig::default();
+    let sigma = spectrum_geometric(256);
+    let be = NativeCompute;
+    let ctx = cfg.context();
+    let amat = DctTestMatrix::new(16384, 256, &sigma).generate(&ctx, &be, 1024);
+    let opts = TallSkinnyOpts::default();
+    let (out_i, t_i) = time(|| algorithm1(&ctx, &be, &amat, &opts));
+    let u_i = max_entry_gram_minus_identity(&ctx, &be, &out_i.u);
+    let (out_e, t_e) = time(|| algorithm1_explicit_q(&ctx, &be, &amat, &opts));
+    let u_e = max_entry_gram_minus_identity(&ctx, &be, &out_e.u);
+    println!("  implicit-Q: {t_i:.3}s, max|UᵀU−I| = {u_i:.2e}   (the paper's 1e-5-class error)");
+    println!("  explicit-Q: {t_e:.3}s, max|UᵀU−I| = {u_e:.2e}   (machine precision, single pass)");
+
+    // ---- sketch cost: Gaussian GEMM vs SRFT ------------------------------
+    println!("\n== sketch cost on 16384×256 (l = 32): dense Gaussian GEMM vs SRFT rows");
+    let g = Matrix::from_fn(256, 32, |_, _| rng.gauss());
+    let al = amat.collect(&ctx);
+    let (_, t_gemm) = time(|| blas::matmul(&al, &g));
+    let mut r3 = Rng::seed(3);
+    let om = Srft::new(256, &mut r3);
+    let mut copy = al.clone();
+    let (_, t_srft) = time(|| {
+        for i in 0..copy.rows() {
+            om.forward(copy.row_mut(i));
+        }
+    });
+    println!("  Gaussian GEMM (m·n·l): {t_gemm:.3}s");
+    println!("  SRFT (m·n log n):      {t_srft:.3}s");
+}

@@ -1,0 +1,98 @@
+//! Regenerates the big-shape low-rank tables (sizes "too large for
+//! computing all possible singular values"):
+//!   Tables 9/10  (timings/errors, l=10, i=2, 180 executors)
+//!   Tables 17/18 (the same at 18 executors — Appendix A)
+//!   Tables 25/26 (Devil's-staircase σ's, 18 executors — Appendix B)
+//!
+//! Paper shapes (1e5×1e5, 1e6×1e4, 1e5×1e4) scale to
+//! (4096×4096, 32768×1024, 8192×1024) — the square-vs-tall contrast and
+//! the Alg-7-beats-Alg-8 reconstruction gap are what must reproduce.
+//!
+//!     cargo bench --bench tables_big
+
+mod bench_common;
+
+use bench_common::{bench_config, print_table};
+use dsvd::harness::{run_lowrank, LrAlg, Spectrum};
+
+type PaperRow = (&'static str, &'static str, &'static str, &'static str, &'static str, &'static str);
+
+// Tables 9 (timings) + 10 (errors) fused per shape, E = 180
+const PAPER_BIG_SQUARE: &[PaperRow] = &[
+    ("7", "1.04E+04", "4.88E+03", "7.74E-12", "6.66E-16", "1.78E-15"),
+    ("8", "9.52E+03", "7.41E+03", "2.15E-07", "7.77E-16", "1.33E-15"),
+];
+const PAPER_BIG_TALL: &[PaperRow] = &[
+    ("7", "9.11E+03", "1.05E+04", "7.74E-12", "3.00E-15", "7.77E-16"),
+    ("8", "9.56E+03", "1.01E+04", "2.15E-07", "2.89E-15", "4.44E-16"),
+];
+const PAPER_BIG_MID: &[PaperRow] = &[
+    ("7", "1.10E+03", "5.40E+02", "7.74E-12", "1.22E-15", "9.99E-16"),
+    ("8", "1.02E+03", "4.93E+02", "2.15E-07", "2.86E-16", "4.44E-16"),
+];
+// Tables 25/26 (staircase, E=18)
+const PAPER_BIG_STAIR: &[PaperRow] = &[
+    ("7", "1.43E+04", "1.01E+04", "3.26E-15", "8.88E-16", "1.33E-15"),
+    ("8", "1.41E+04", "1.11E+04", "3.14E-15", "1.00E-15", "1.01E-15"),
+];
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let (l, iters) = (10usize, 2usize);
+
+    let shapes: [(&str, usize, usize, &[PaperRow]); 3] = [
+        ("m=100,000 n=100,000 ↦", 4096, 4096, PAPER_BIG_SQUARE),
+        ("m=1,000,000 n=10,000 ↦", 32768, 1024, PAPER_BIG_TALL),
+        ("m=100,000 n=10,000 ↦", 8192, 1024, PAPER_BIG_MID),
+    ];
+
+    // Tables 9/10 (E=180) and 17/18 (E=18), spectrum (5)
+    for (tname, executors) in [("Tables 9/10", 180usize), ("Tables 17/18 (Appendix A)", 18)] {
+        for &(paper_shape, m, n, paper) in &shapes {
+            let m = (m / scale).max(l * 8);
+            let n = (n / scale).max(l * 8);
+            let mut cfg = cfg_base.clone();
+            cfg.executors = executors;
+            cfg.rows_per_part = 1024.min(m);
+            cfg.cols_per_part = 1024.min(n);
+            let rows: Vec<_> = [LrAlg::A7, LrAlg::A8]
+                .iter()
+                .map(|&alg| {
+                    run_lowrank(&cfg, be.as_ref(), m, n, l, iters, Spectrum::LowRank(l), alg)
+                })
+                .collect();
+            print_table(
+                &format!(
+                    "{tname}: paper {paper_shape} scaled m={m} n={n} l={l} i={iters}, E={executors}, backend={}",
+                    be.name()
+                ),
+                paper,
+                &rows,
+            );
+        }
+    }
+
+    // Tables 25/26 (staircase σ over the l values, E=18)
+    for &(paper_shape, m, n, _) in &shapes {
+        let m = (m / scale).max(l * 8);
+        let n = (n / scale).max(l * 8);
+        let mut cfg = cfg_base.clone();
+        cfg.executors = 18;
+        cfg.rows_per_part = 1024.min(m);
+        cfg.cols_per_part = 1024.min(n);
+        let rows: Vec<_> = [LrAlg::A7, LrAlg::A8]
+            .iter()
+            .map(|&alg| {
+                run_lowrank(&cfg, be.as_ref(), m, n, l, iters, Spectrum::Staircase(l), alg)
+            })
+            .collect();
+        print_table(
+            &format!(
+                "Tables 25/26 (Appendix B): paper {paper_shape} scaled m={m} n={n}, staircase, E=18, backend={}",
+                be.name()
+            ),
+            PAPER_BIG_STAIR,
+            &rows,
+        );
+    }
+}

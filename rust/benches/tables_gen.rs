@@ -1,0 +1,41 @@
+//! Regenerates Appendix C — the matrix-synthesis timings:
+//!   Table 27: (2) with spectrum (3), tall-skinny shapes
+//!   Table 28: (2) with spectrum (5), l = 20
+//!   Table 29: (2) with spectrum (5), l = 10, big shapes
+//!
+//!     cargo bench --bench tables_gen
+
+mod bench_common;
+
+use bench_common::bench_config;
+use dsvd::harness::{run_generation, sci, Spectrum, SCALED_M, SCALED_N};
+
+fn main() {
+    let (cfg, be, scale) = bench_config();
+    let n = SCALED_N;
+
+    println!("\nTable 27: generating (2) with (3) — paper: (1e6,2e3)=4.76E+03 CPU, (1e5)=4.50E+02, (1e4)=5.00E+01");
+    println!("{:>10} {:>8} {:>12} {:>12}", "m", "n", "CPU Time", "Wall-Clock");
+    for &m in &SCALED_M {
+        let m = (m / scale).max(n);
+        let met = run_generation(&cfg, be.as_ref(), m, n, Spectrum::Geometric);
+        println!("{:>10} {:>8} {:>12} {:>12}", m, n, sci(met.cpu_time), sci(met.wall_clock));
+    }
+
+    println!("\nTable 28: generating (2) with (5), l=20 — paper: 5.61E+02 / 6.30E+01 / 8.00E+00 CPU");
+    println!("{:>10} {:>8} {:>12} {:>12}", "m", "n", "CPU Time", "Wall-Clock");
+    for &m in &SCALED_M {
+        let m = (m / scale).max(n);
+        let met = run_generation(&cfg, be.as_ref(), m, n, Spectrum::LowRank(20));
+        println!("{:>10} {:>8} {:>12} {:>12}", m, n, sci(met.cpu_time), sci(met.wall_clock));
+    }
+
+    println!("\nTable 29: generating (2) with (5), l=10, big shapes — paper: 7.30E+01 / 4.93E+02 / 4.20E+01 CPU");
+    println!("{:>10} {:>8} {:>12} {:>12}", "m", "n", "CPU Time", "Wall-Clock");
+    for (m, nn) in [(4096usize, 4096usize), (32768, 1024), (8192, 1024)] {
+        let m = (m / scale).max(64);
+        let nn = (nn / scale).max(64);
+        let met = run_generation(&cfg, be.as_ref(), m, nn, Spectrum::LowRank(10));
+        println!("{:>10} {:>8} {:>12} {:>12}", m, nn, sci(met.cpu_time), sci(met.wall_clock));
+    }
+}

@@ -1,0 +1,73 @@
+//! Regenerates the low-rank approximation tables over tall matrices:
+//!   Tables 6–8   (spectrum (5), l=20, i=2, 180 executors)
+//!   Tables 14–16 (the same at 18 executors — Appendix A)
+//!   Tables 22–24 (Devil's-staircase over l values, 18 executors — App. B)
+//!
+//!     cargo bench --bench tables_lowrank
+
+mod bench_common;
+
+use bench_common::{bench_config, print_table};
+use dsvd::harness::{run_lowrank, LrAlg, Spectrum, SCALED_M, SCALED_N};
+
+type PaperRow = (&'static str, &'static str, &'static str, &'static str, &'static str, &'static str);
+
+const PAPER_T6: &[PaperRow] = &[
+    ("7", "3.06E+03", "8.80E+03", "2.64E-12", "4.44E-15", "8.88E-16"),
+    ("8", "2.80E+03", "9.94E+03", "4.83E-07", "3.77E-15", "5.55E-16"),
+    ("pre-existing", "6.06E+03", "1.16E+04", "3.36E-10", "1.00E-00", "6.66E-16"),
+];
+const PAPER_T7: &[PaperRow] = &[
+    ("7", "3.28E+02", "4.78E+02", "2.64E-12", "3.11E-15", "1.44E-15"),
+    ("8", "4.33E+02", "4.71E+02", "4.83E-07", "1.55E-15", "8.36E-16"),
+    ("pre-existing", "6.17E+02", "4.92E+02", "3.36E-10", "1.00E-00", "4.44E-16"),
+];
+const PAPER_T8: &[PaperRow] = &[
+    ("7", "7.20E+01", "7.50E+01", "2.64E-12", "2.22E-15", "1.89E-15"),
+    ("8", "8.00E+01", "9.30E+01", "4.83E-07", "6.66E-16", "6.66E-16"),
+    ("pre-existing", "1.18E+02", "9.40E+01", "3.36E-10", "1.00E-00", "6.66E-16"),
+];
+const PAPER_T14: &[PaperRow] = &[
+    ("7", "2.48E+03", "4.44E+03", "2.64E-12", "4.88E-15", "1.22E-15"),
+    ("8", "2.33E+03", "4.47E+03", "4.83E-07", "3.33E-15", "6.66E-16"),
+    ("pre-existing", "5.56E+03", "6.84E+03", "3.36E-10", "1.00E-00", "6.66E-16"),
+];
+const PAPER_T22: &[PaperRow] = &[
+    ("7", "3.49E+03", "1.09E+04", "2.69E-15", "2.00E-15", "1.55E-15"),
+    ("8", "3.20E+03", "1.11E+04", "8.65E-15", "3.44E-15", "8.88E-16"),
+    ("pre-existing", "6.34E+03", "1.96E+04", "2.12E-15", "1.00E-00", "6.66E-16"),
+];
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let n = SCALED_N;
+    let (l, iters) = (20usize, 2usize);
+
+    let suites: [(&str, &[PaperRow], usize, usize, Spectrum); 9] = [
+        ("Table 6  (paper m=1e6 n=2000 l=20 i=2; E=180)", PAPER_T6, SCALED_M[0], 180, Spectrum::LowRank(l)),
+        ("Table 7  (paper m=1e5; E=180)", PAPER_T7, SCALED_M[1], 180, Spectrum::LowRank(l)),
+        ("Table 8  (paper m=1e4; E=180)", PAPER_T8, SCALED_M[2], 180, Spectrum::LowRank(l)),
+        ("Table 14 (Appendix A: E=18)", PAPER_T14, SCALED_M[0], 18, Spectrum::LowRank(l)),
+        ("Table 15 (Appendix A: E=18; paper mirrors T7)", PAPER_T7, SCALED_M[1], 18, Spectrum::LowRank(l)),
+        ("Table 16 (Appendix A: E=18; paper mirrors T8)", PAPER_T8, SCALED_M[2], 18, Spectrum::LowRank(l)),
+        ("Table 22 (Appendix B: staircase over l, E=18)", PAPER_T22, SCALED_M[0], 18, Spectrum::Staircase(l)),
+        ("Table 23 (Appendix B: staircase, E=18)", PAPER_T22, SCALED_M[1], 18, Spectrum::Staircase(l)),
+        ("Table 24 (Appendix B: staircase, E=18)", PAPER_T22, SCALED_M[2], 18, Spectrum::Staircase(l)),
+    ];
+
+    for (title, paper, m, executors, spectrum) in suites {
+        let m = (m / scale).max(n * 2);
+        let mut cfg = cfg_base.clone();
+        cfg.executors = executors;
+        cfg.cols_per_part = n; // single block column at this scale
+        let rows: Vec<_> = LrAlg::ALL
+            .iter()
+            .map(|&alg| run_lowrank(&cfg, be.as_ref(), m, n, l, iters, spectrum, alg))
+            .collect();
+        print_table(
+            &format!("{title} — scaled to m={m} n={n} l={l} i={iters}, backend={}", be.name()),
+            paper,
+            &rows,
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! Regenerates the tall-skinny SVD tables of the paper:
+//!   Tables 3–5   (spectrum (3), 180 executors)
+//!   Tables 11–13 (spectrum (3), 18 executors — Appendix A)
+//!   Tables 19–21 (Devil's-staircase spectrum, 18 executors — Appendix B)
+//!
+//! Sizes are scaled per DESIGN.md §5 (paper m = 1e6/1e5/1e4, n = 2000 ↦
+//! m = 32768/8192/2048, n = 256); the error columns are size-independent
+//! and should land in the paper's decades, the timing columns keep their
+//! shape (∝ m; Alg 2 ≳ Alg 1 ≳ Alg 3/4 CPU; see EXPERIMENTS.md).
+//!
+//!     cargo bench --bench tables_tall_skinny
+
+mod bench_common;
+
+use bench_common::{bench_config, print_table};
+use dsvd::harness::{run_tall_skinny, Spectrum, TsAlg, SCALED_M, SCALED_N};
+
+type PaperRow = (&'static str, &'static str, &'static str, &'static str, &'static str, &'static str);
+
+// the paper's Tables 3, 4, 5 (E = 180)
+const PAPER_T3: &[PaperRow] = &[
+    ("1", "1.48E+04", "1.48E+04", "9.76E-12", "6.84E-06", "3.51E-15"),
+    ("2", "6.84E+04", "9.01E+04", "9.76E-12", "6.44E-13", "4.68E-15"),
+    ("3", "1.33E+04", "1.67E+04", "9.92E-08", "6.20E-04", "1.73E-14"),
+    ("4", "1.36E+04", "2.52E+04", "9.64E-07", "1.10E-14", "2.90E-15"),
+    ("pre-existing", "1.12E+04", "1.28E+04", "1.83E-09", "2.34E-00", "3.12E-15"),
+];
+const PAPER_T4: &[PaperRow] = &[
+    ("1", "1.59E+03", "1.02E+03", "9.76E-12", "5.47E-06", "3.22E-15"),
+    ("2", "6.85E+03", "3.39E+03", "9.76E-12", "6.85E-13", "4.06E-15"),
+    ("3", "1.32E+03", "9.19E+02", "9.92E-08", "3.11E-04", "1.22E-14"),
+    ("4", "1.58E+03", "1.30E+03", "9.64E-07", "6.66E-15", "2.69E-15"),
+    ("pre-existing", "1.27E+03", "9.68E+02", "2.75E-15", "9.91E-01", "2.50E-15"),
+];
+const PAPER_T5: &[PaperRow] = &[
+    ("1", "3.86E+02", "8.40E+01", "9.76E-12", "4.35E-06", "3.55E-15"),
+    ("2", "9.26E+02", "1.42E+02", "9.76E-12", "7.67E-12", "3.19E-15"),
+    ("3", "2.52E+02", "5.60E+01", "9.92E-08", "2.15E-04", "1.82E-14"),
+    ("4", "3.16E+02", "8.40E+01", "9.64E-07", "6.66E-15", "3.33E-15"),
+    ("pre-existing", "2.15E+02", "7.30E+01", "1.89E-15", "9.97E-01", "2.57E-15"),
+];
+// Appendix A: Table 11 (E = 18); Tables 12–13 mirror 4–5 at E=18
+const PAPER_T11: &[PaperRow] = &[
+    ("1", "9.23E+03", "4.72E+03", "9.76E-12", "6.21E-06", "3.00E-15"),
+    ("2", "5.91E+04", "5.44E+04", "9.76E-12", "6.75E-13", "3.06E-15"),
+    ("3", "7.36E+03", "4.14E+03", "9.92E-08", "6.13E-04", "1.38E-14"),
+    ("4", "1.00E+04", "7.72E+03", "9.64E-07", "1.02E-14", "2.69E-15"),
+    ("pre-existing", "6.54E+03", "3.56E+03", "1.79E-09", "3.17E-00", "3.96E-15"),
+];
+// Appendix B: Table 19 (E = 18, staircase); 20–21 are its smaller m's
+const PAPER_T19: &[PaperRow] = &[
+    ("1", "9.47E+03", "1.14E+04", "1.67E-14", "6.22E-15", "3.33E-15"),
+    ("2", "1.06E+05", "1.07E+05", "1.61E-14", "6.88E-15", "3.22E-15"),
+    ("3", "8.91E+03", "7.65E+03", "1.84E-14", "9.24E-14", "1.78E-14"),
+    ("4", "3.20E+04", "3.88E+04", "2.34E-14", "8.88E-15", "3.60E-15"),
+    ("pre-existing", "5.98E+03", "6.80E+03", "7.72E-15", "1.00E-00", "6.18E-15"),
+];
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let n = SCALED_N;
+
+    let suites: [(&str, &[PaperRow], usize, usize, Spectrum); 9] = [
+        ("Table 3  (paper m=1,000,000 n=2,000; E=180)", PAPER_T3, SCALED_M[0], 180, Spectrum::Geometric),
+        ("Table 4  (paper m=100,000 n=2,000; E=180)", PAPER_T4, SCALED_M[1], 180, Spectrum::Geometric),
+        ("Table 5  (paper m=10,000 n=2,000; E=180)", PAPER_T5, SCALED_M[2], 180, Spectrum::Geometric),
+        ("Table 11 (Appendix A: E=18)", PAPER_T11, SCALED_M[0], 18, Spectrum::Geometric),
+        ("Table 12 (Appendix A: E=18; paper mirrors Table 4)", PAPER_T4, SCALED_M[1], 18, Spectrum::Geometric),
+        ("Table 13 (Appendix A: E=18; paper mirrors Table 5)", PAPER_T5, SCALED_M[2], 18, Spectrum::Geometric),
+        ("Table 19 (Appendix B: staircase, E=18)", PAPER_T19, SCALED_M[0], 18, Spectrum::Staircase(n)),
+        ("Table 20 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[1], 18, Spectrum::Staircase(n)),
+        ("Table 21 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[2], 18, Spectrum::Staircase(n)),
+    ];
+
+    for (title, paper, m, executors, spectrum) in suites {
+        let m = (m / scale).max(n * 2);
+        let mut cfg = cfg_base.clone();
+        cfg.executors = executors;
+        let rows: Vec<_> = TsAlg::ALL
+            .iter()
+            .map(|&alg| run_tall_skinny(&cfg, be.as_ref(), m, n, spectrum, alg))
+            .collect();
+        print_table(
+            &format!("{title} — scaled to m={m} n={n}, backend={}", be.name()),
+            paper,
+            &rows,
+        );
+    }
+}

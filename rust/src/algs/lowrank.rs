@@ -1,0 +1,273 @@
+//! Algorithms 5–8 of the paper: randomized low-rank approximation of an
+//! arbitrary (block-distributed) matrix.
+//!
+//! * **Algorithm 5** — randomized subspace iteration (Algorithm 4.4 of
+//!   Halko–Martinsson–Tropp): a Gaussian sketch followed by `i` rounds of
+//!   power iteration, each round orthonormalized by a tall-skinny
+//!   factorization — Algorithm 1 or 3 (single orthonormalization: only
+//!   the subspace matters mid-loop) and Algorithm 2 or 4 (double) at the
+//!   very last step, exactly as the paper prescribes.
+//! * **Algorithm 6** — the straightforward finish (Algorithm 5.1 of HMT):
+//!   `B = QᵀA`, small SVD of B, `U = Q Ũ`.
+//! * **Algorithm 7** = 5(+1/2) → 6;  **Algorithm 8** = 5(+3/4) → 6.
+
+use super::tall_skinny::{
+    algorithm1, algorithm2, algorithm3, algorithm4, DistSvd, TallSkinnyOpts,
+};
+use crate::dist::{Context, DistBlockMatrix, DistRowMatrix};
+use crate::linalg::svd::svd;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::runtime::compute::Compute;
+
+/// Which tall-skinny engine Algorithm 5 uses internally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TsMethod {
+    /// Algorithms 1/2 — SRFT + TSQR (the pair that makes Algorithm 7).
+    Randomized,
+    /// Algorithms 3/4 — Gram + eigendecomposition (makes Algorithm 8).
+    Gram,
+}
+
+/// Options for the low-rank drivers.
+#[derive(Clone, Debug)]
+pub struct LowRankOpts {
+    /// Rank of the approximation (the paper's `l`).
+    pub l: usize,
+    /// Subspace-iteration count (the paper's `i`).
+    pub iters: usize,
+    /// Partitioning for intermediate tall-skinny matrices.
+    pub rows_per_part: usize,
+    /// Passed through to the tall-skinny algorithms.
+    pub ts: TallSkinnyOpts,
+}
+
+impl LowRankOpts {
+    pub fn new(l: usize, iters: usize) -> Self {
+        LowRankOpts { l, iters, rows_per_part: 1024, ts: TallSkinnyOpts::default() }
+    }
+}
+
+/// Orthonormalize a distributed tall-skinny matrix via the requested
+/// tall-skinny SVD, returning the (distributed) orthonormal factor only
+/// — "the purpose of the earlier steps is to track a subspace".
+fn factor_q(
+    ctx: &Context,
+    be: &dyn Compute,
+    y: &DistRowMatrix,
+    method: TsMethod,
+    double: bool,
+    ts: &TallSkinnyOpts,
+) -> DistRowMatrix {
+    let out = match (method, double) {
+        (TsMethod::Randomized, false) => algorithm1(ctx, be, y, ts),
+        (TsMethod::Randomized, true) => algorithm2(ctx, be, y, ts),
+        (TsMethod::Gram, false) => algorithm3(ctx, be, y, ts),
+        (TsMethod::Gram, true) => algorithm4(ctx, be, y, ts),
+    };
+    out.u
+}
+
+/// Same for a driver-held tall matrix (the n×l factorizations of
+/// Algorithm 5's step 6): distribute, factor, collect.
+fn factor_q_local(
+    ctx: &Context,
+    be: &dyn Compute,
+    y: &Matrix,
+    method: TsMethod,
+    ts: &TallSkinnyOpts,
+    rows_per_part: usize,
+) -> Matrix {
+    let d = DistRowMatrix::from_matrix(y, rows_per_part);
+    let q = factor_q(ctx, be, &d, method, false, ts);
+    q.collect(ctx)
+}
+
+/// Algorithm 5: randomized subspace iteration. Returns a distributed
+/// m×l' matrix Q with orthonormal columns whose range approximates the
+/// range of `a` (l' ≤ l after rank discards).
+pub fn algorithm5(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistBlockMatrix,
+    method: TsMethod,
+    opts: &LowRankOpts,
+) -> DistRowMatrix {
+    let n = a.cols();
+    let l = opts.l;
+    assert!(l >= 1 && l < a.rows().min(n), "need 0 < l < min(m, n)");
+
+    // step 1 — Gaussian sketch Q̃₀ (driver; a fresh stream per run)
+    let mut rng = Rng::seed(opts.ts.seed ^ 0xA16_0005);
+    let mut q_tilde = ctx.driver(|| Matrix::from_fn(n, l, |_, _| rng.gauss()));
+
+    // steps 2–7 — power iterations with single orthonormalization
+    for _j in 0..opts.iters {
+        let y = a.matmul_small(ctx, be, &q_tilde); // m×l, distributed
+        let q = factor_q(ctx, be, &y, method, false, &opts.ts);
+        let y_tilde = a.rmatmul_small(ctx, be, &q); // n×l, driver
+        q_tilde = factor_q_local(ctx, be, &y_tilde, method, &opts.ts, opts.rows_per_part);
+    }
+
+    // steps 8–9 — final product, DOUBLE orthonormalization
+    let y = a.matmul_small(ctx, be, &q_tilde);
+    factor_q(ctx, be, &y, method, true, &opts.ts)
+}
+
+/// Algorithm 6: `B = QᵀA`, SVD of the small B, `U = Q Ũ`.
+pub fn algorithm6(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistBlockMatrix,
+    q: &DistRowMatrix,
+) -> DistSvd {
+    // Bᵀ = Aᵀ Q (n×l, driver) — computed distributedly per block
+    let bt = a.rmatmul_small(ctx, be, q);
+    // SVD of Bᵀ = X Σ Wᵀ  ⇒  B = W Σ Xᵀ: Ũ = W (l×k), V = X (n×k)
+    let f = ctx.driver(|| svd(&bt));
+    let u = q.matmul_small(ctx, be, &f.v);
+    DistSvd { u, s: f.s, v: f.u }
+}
+
+/// Algorithm 7: Algorithm 5 with the randomized engine (Algs 1/2), fed
+/// into Algorithm 6.
+pub fn algorithm7(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistBlockMatrix,
+    opts: &LowRankOpts,
+) -> DistSvd {
+    let q = algorithm5(ctx, be, a, TsMethod::Randomized, opts);
+    algorithm6(ctx, be, a, &q)
+}
+
+/// Algorithm 8: Algorithm 5 with the Gram engine (Algs 3/4), fed into
+/// Algorithm 6.
+pub fn algorithm8(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistBlockMatrix,
+    opts: &LowRankOpts,
+) -> DistSvd {
+    let q = algorithm5(ctx, be, a, TsMethod::Gram, opts);
+    algorithm6(ctx, be, a, &q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{spectrum_lowrank, DctBlockTestMatrix};
+    use crate::runtime::compute::NativeCompute;
+    use crate::verify::{error_report, spectral_norm, ResidualOp};
+
+    fn block_matrix(m: usize, n: usize, l: usize) -> (Context, DistBlockMatrix, Vec<f64>) {
+        let ctx = Context::new(8);
+        let sigma = spectrum_lowrank(n.min(m), l);
+        let gen = DctBlockTestMatrix::new(m, n, &sigma);
+        let a = gen.generate(&ctx, &NativeCompute, 32, 32);
+        (ctx, a, sigma)
+    }
+
+    fn opts(l: usize, i: usize) -> LowRankOpts {
+        let mut o = LowRankOpts::new(l, i);
+        o.rows_per_part = 32;
+        o
+    }
+
+    #[test]
+    fn algorithm5_captures_range() {
+        let (ctx, a, _) = block_matrix(96, 64, 6);
+        for method in [TsMethod::Randomized, TsMethod::Gram] {
+            let q = algorithm5(&ctx, &NativeCompute, &a, method, &opts(6, 2));
+            assert_eq!(q.rows(), 96);
+            assert!(q.cols() <= 6);
+            // Q orthonormal
+            let e = crate::verify::max_entry_gram_minus_identity(&ctx, &NativeCompute, &q);
+            assert!(e < 1e-12, "{method:?} orth {e}");
+            // range captured: ‖A − QQᵀA‖ small ⇔ projecting A's top
+            // singular vector onto range(Q) preserves it. Cheap check via
+            // the residual of the full pipeline below.
+        }
+    }
+
+    #[test]
+    fn algorithm7_accuracy() {
+        let (ctx, a, sigma) = block_matrix(96, 64, 8);
+        let out = algorithm7(&ctx, &NativeCompute, &a, &opts(8, 2));
+        let e = error_report(&ctx, &NativeCompute, &a, &out.u, &out.s, &out.v);
+        assert!(e.recon < 1e-10, "recon {}", e.recon);
+        assert!(e.u_orth < 1e-12, "u_orth {}", e.u_orth);
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+        // singular values recovered
+        for j in 0..3 {
+            assert!((out.s[j] - sigma[j]).abs() / sigma[j] < 1e-8, "σ_{j}");
+        }
+    }
+
+    #[test]
+    fn algorithm8_accuracy() {
+        let (ctx, a, _) = block_matrix(96, 64, 8);
+        let out = algorithm8(&ctx, &NativeCompute, &a, &opts(8, 2));
+        let e = error_report(&ctx, &NativeCompute, &a, &out.u, &out.s, &out.v);
+        // Gram engine: recon is √wp-level, not wp-level (the paper's
+        // Table 10 contrast: 2.15e-07 vs 7.74e-12)
+        assert!(e.recon < 1e-4, "recon {}", e.recon);
+        assert!(e.u_orth < 1e-12, "u_orth {}", e.u_orth);
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+    }
+
+    #[test]
+    fn algorithm7_beats_algorithm8_on_reconstruction() {
+        let (ctx, a, _) = block_matrix(128, 96, 10);
+        let o = opts(10, 2);
+        let out7 = algorithm7(&ctx, &NativeCompute, &a, &o);
+        let out8 = algorithm8(&ctx, &NativeCompute, &a, &o);
+        let e7 = error_report(&ctx, &NativeCompute, &a, &out7.u, &out7.s, &out7.v);
+        let e8 = error_report(&ctx, &NativeCompute, &a, &out8.u, &out8.s, &out8.v);
+        assert!(
+            e7.recon < e8.recon / 10.0,
+            "expected alg7 ≪ alg8: {} vs {}",
+            e7.recon,
+            e8.recon
+        );
+    }
+
+    #[test]
+    fn rank_l_truncation_of_full_rank_matrix() {
+        // full-rank input, rank-l approximation: error ≈ σ_{l+1}
+        let ctx = Context::new(4);
+        let n = 48;
+        let sigma: Vec<f64> = (0..n).map(|j| 0.5f64.powi(j as i32)).collect();
+        let gen = DctBlockTestMatrix::new(64, n, &sigma);
+        let a = gen.generate(&ctx, &NativeCompute, 16, 16);
+        let l = 6;
+        let out = algorithm7(&ctx, &NativeCompute, &a, &opts(l, 3));
+        let resid = ResidualOp { a: &a, u: &out.u, s: &out.s, v: &out.v };
+        let err = spectral_norm(&ctx, &resid, 60, 7);
+        // optimal is σ_{l+1} = 2^-6 ≈ 0.0156; randomized with i=3 power
+        // iterations should be within a small factor
+        assert!(err < 3.0 * sigma[l], "err {} vs σ_l+1 {}", err, sigma[l]);
+        assert!(err > 0.3 * sigma[l], "err {} suspiciously small", err);
+    }
+
+    #[test]
+    fn wide_matrix_lowrank() {
+        // wider than tall (m < n), the Tables 9/10 shape
+        let (ctx, a, _) = block_matrix(48, 96, 5);
+        let out = algorithm7(&ctx, &NativeCompute, &a, &opts(5, 2));
+        let e = error_report(&ctx, &NativeCompute, &a, &out.u, &out.s, &out.v);
+        assert!(e.recon < 1e-10, "recon {}", e.recon);
+        assert!(e.u_orth < 1e-12);
+        assert!(e.v_orth < 1e-12);
+    }
+
+    #[test]
+    fn zero_iterations_still_works() {
+        // i = 0: pure sketch-and-solve
+        let (ctx, a, _) = block_matrix(64, 48, 4);
+        let out = algorithm7(&ctx, &NativeCompute, &a, &opts(4, 0));
+        let e = error_report(&ctx, &NativeCompute, &a, &out.u, &out.s, &out.v);
+        // exactly rank-4 input: even i=0 captures the range
+        assert!(e.recon < 1e-8, "recon {}", e.recon);
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's algorithms (1–8) and the baselines they are compared with.
+//!
+//! * [`tall_skinny`] — Algorithms 1–4 + the stock-MLlib tall-skinny
+//!   baseline (problem {1} of the paper).
+//! * [`lowrank`] — Algorithms 5–8 over block matrices (problem {2}).
+//! * [`arnoldi`] — the ARPACK-like Krylov baseline for problem {2}.
+
+pub mod arnoldi;
+pub mod lowrank;
+pub mod tall_skinny;
+
+pub use arnoldi::{preexisting_lowrank, ArnoldiOpts};
+pub use lowrank::{
+    algorithm5, algorithm6, algorithm7, algorithm8, LowRankOpts, TsMethod,
+};
+pub use tall_skinny::{
+    algorithm1, algorithm1_explicit_q, algorithm2, algorithm3, algorithm4, preexisting, DistSvd,
+    TallSkinnyOpts,
+};

@@ -1,0 +1,543 @@
+//! Algorithms 1–4 of the paper plus the "pre-existing" Spark MLlib
+//! baseline: thin SVD of a tall-skinny distributed matrix.
+//!
+//! | Algorithm | orthonormalization | engine |
+//! |---|---|---|
+//! | 1 | single | SRFT mixing + TSQR |
+//! | 2 | double | SRFT mixing + TSQR twice |
+//! | 3 | single | Gram matrix + eigh + explicit normalization (Remark 6) |
+//! | 4 | double | Gram twice + explicit normalization |
+//! | pre-existing | — | Gram + eigh, `U = A V Σ⁻¹` with Σ = √λ, no normalization |
+//!
+//! All return `A ≈ U Σ Vᵀ` with `U` distributed (same partitioning as
+//! `A`), `Σ` and `V` on the driver, and singular values descending.
+
+use crate::dist::{tsqr, tsqr_r, Context, DistRowMatrix, TsqrFactors};
+use crate::linalg::qr::{significant_diagonal, significant_prefix, tri_inverse_upper};
+use crate::linalg::svd::svd;
+use crate::linalg::{blas, Matrix};
+use crate::rng::Rng;
+use crate::runtime::compute::Compute;
+use crate::srft::Srft;
+
+/// Thin SVD of a distributed tall-skinny matrix.
+pub struct DistSvd {
+    /// Left singular vectors, distributed (m×k).
+    pub u: DistRowMatrix,
+    /// Singular values, descending, nonnegative (k).
+    pub s: Vec<f64>,
+    /// Right singular vectors, driver-held (n×k).
+    pub v: Matrix,
+}
+
+/// Tuning shared by the tall-skinny algorithms.
+#[derive(Clone, Debug)]
+pub struct TallSkinnyOpts {
+    /// The paper's "working precision" (Remark 1); 1e-11 in the tables.
+    pub working_precision: f64,
+    /// Chained D·F·S products in the SRFT (Remark 5); 2 in the paper.
+    pub srft_chains: usize,
+    /// Seed for Ω.
+    pub seed: u64,
+}
+
+impl Default for TallSkinnyOpts {
+    fn default() -> Self {
+        TallSkinnyOpts { working_precision: 1e-11, srft_chains: 2, seed: 0x5EED }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 1: randomized SVD, single orthonormalization
+// ---------------------------------------------------------------------------
+
+/// Algorithm 1 of the paper.
+///
+/// 1. Mix: apply the random orthogonal Ω to every row of A (this is
+///    `B = Ω A*` read row-wise; see `crate::srft`).
+/// 2. TSQR: `Bᵀ = Q R` — R by the reduction tree; Q reconstituted
+///    implicitly as `Bᵀ[:, :k]·R₁₁⁻¹`, exactly as the Spark
+///    implementation does (storing/merging explicit Q factors through
+///    the tree would double the communication). The triangular solve
+///    costs `eps·cond(R₁₁)` of Q's orthonormality — which is precisely
+///    why Algorithm 2's second orthonormalization exists, and what the
+///    `MaxEntry(|UᵀU−I|) ≈ 1e-5` column of Tables 3–5 shows.
+/// 3. Discard numerically-zero diagonal entries of R (working precision).
+/// 4. SVD of the small R.
+/// 5. `U = Q Ũ` (distributed).
+/// 6. `V = Ω⁻¹ Ṽ` (driver).
+pub fn algorithm1(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    let n = a.cols();
+    let mut rng = Rng::seed(opts.seed);
+    let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
+
+    // step 1 — mix every row (map stage)
+    let mut mixed = a.clone();
+    mixed.map_rows(ctx, |row| om.forward(row));
+
+    // steps 2–3 — R-only TSQR, rank decision, implicit Q
+    let r = tsqr_r(ctx, &mixed);
+    let (q, r_kept) = implicit_q(ctx, be, &mixed, &r, opts.working_precision);
+
+    // step 4 — SVD of the reduced R (k'×n, driver)
+    let rsvd = ctx.driver(|| svd(&r_kept));
+
+    // step 5 — U = Q Ũ (distributed map)
+    let u = q.matmul_small(ctx, be, &rsvd.u);
+
+    // step 6 — V = Ω⁻¹ Ṽ, column by column on the driver
+    let v = ctx.driver(|| unmix_columns(&om, &rsvd.v));
+
+    DistSvd { u, s: rsvd.s, v }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 2: randomized SVD, double orthonormalization
+// ---------------------------------------------------------------------------
+
+/// Algorithm 2 of the paper — Algorithm 1 with the TSQR orthonormalization
+/// run twice, making the left singular vectors orthonormal to roughly the
+/// machine precision (the headline improvement over stock Spark).
+///
+/// The first implicit-Q pass leaves Q̃ orthonormal only to
+/// `eps·cond(R̃₁₁)`; the second pass factors Q̃ itself — now condition
+/// number ≈ 1 — so its triangular solve is benign and the final Q is
+/// orthonormal to ~machine precision ("running twice is enough").
+pub fn algorithm2(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    let n = a.cols();
+    let mut rng = Rng::seed(opts.seed);
+    let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
+
+    // step 1 — mix
+    let mut mixed = a.clone();
+    mixed.map_rows(ctx, |row| om.forward(row));
+
+    // steps 2–3 — first R-only TSQR + discard + implicit Q̃
+    let r1 = tsqr_r(ctx, &mixed);
+    let (q1, r1_kept) = implicit_q(ctx, be, &mixed, &r1, opts.working_precision);
+
+    // steps 4–5 — second TSQR on Q̃ itself + discard + implicit Q
+    let r2 = tsqr_r(ctx, &q1);
+    let (q2, r2_kept) = implicit_q(ctx, be, &q1, &r2, opts.working_precision);
+
+    // step 6 — T = R R̃ (driver)
+    let t = ctx.driver(|| blas::matmul(&r2_kept, &r1_kept));
+
+    // step 7 — SVD of T
+    let tsvd = ctx.driver(|| svd(&t));
+
+    // step 8 — U = Q Ũ
+    let u = q2.matmul_small(ctx, be, &tsvd.u);
+
+    // step 9 — V = Ω⁻¹ Ṽ
+    let v = ctx.driver(|| unmix_columns(&om, &tsvd.v));
+
+    DistSvd { u, s: tsvd.s, v }
+}
+
+/// Explicit-Q variants of Algorithms 1–2: the reduction tree carries the
+/// Householder Q factors down to the leaves instead of reconstituting Q
+/// by a triangular solve. More communication, but the *single*-pass left
+/// singular vectors already come out orthonormal to machine precision —
+/// an upgrade over the paper's implementation, kept for the ablation
+/// bench (DESIGN.md §6).
+pub fn algorithm1_explicit_q(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    let n = a.cols();
+    let mut rng = Rng::seed(opts.seed);
+    let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
+    let mut mixed = a.clone();
+    mixed.map_rows(ctx, |row| om.forward(row));
+    let TsqrFactors { q, r } = tsqr(ctx, &mixed);
+    let (r_kept, q_kept) = discard_by_diagonal(ctx, &q, &r, opts.working_precision);
+    let rsvd = ctx.driver(|| svd(&r_kept));
+    let u = q_kept.matmul_small(ctx, be, &rsvd.u);
+    let v = ctx.driver(|| unmix_columns(&om, &rsvd.v));
+    DistSvd { u, s: rsvd.s, v }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 3: Gram-based SVD, single orthonormalization
+// ---------------------------------------------------------------------------
+
+/// Algorithm 3 of the paper (after Yamazaki–Tomov–Dongarra).
+///
+/// 1. `B = AᵀA` by treeAggregate. 2. `B = V D Vᵀ`. 3. `Ũ = A V`.
+/// 4. Σ = column norms of Ũ (Remark 6's explicit normalization).
+/// 5. Discard σ below √(working precision)·σ_max. 6. `U = Ũ Σ⁻¹`.
+pub fn algorithm3(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    // step 1 — Gram via tree aggregation
+    let b = a.gram(ctx, be);
+
+    // step 2 — eigendecomposition on the driver
+    let eig = ctx.driver(|| crate::linalg::eigh::eigh(&b));
+
+    // step 3 — Ũ = A V (distributed)
+    let u_tilde = a.matmul_small(ctx, be, &eig.v);
+
+    // step 4 — Σ = column norms (distributed reduce), Remark 6
+    let sigma = u_tilde.col_norms(ctx);
+
+    // step 5 — discard at √wp (the Gram loses half the digits)
+    let cutoff = opts.working_precision.sqrt();
+    let keep = keep_indices(&sigma, cutoff);
+
+    // step 6 — U = Ũ Σ⁻¹ restricted to the kept columns
+    let mut u = u_tilde.select_cols(ctx, &keep);
+    let s: Vec<f64> = keep.iter().map(|&j| sigma[j]).collect();
+    let inv: Vec<f64> = s.iter().map(|&x| 1.0 / x).collect();
+    u.scale_cols(ctx, &inv);
+    let v = ctx.driver(|| eig.v.select_cols(&keep));
+
+    DistSvd { u, s, v }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 4: Gram-based SVD, double orthonormalization
+// ---------------------------------------------------------------------------
+
+/// Algorithm 4 of the paper — the Gram orthonormalization applied twice,
+/// with explicit normalization at both rounds (Remark 6), followed by the
+/// SVD of the small recombined factor `R = T Wᵀ Σ̃ Ṽᵀ`.
+pub fn algorithm4(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    let cutoff = opts.working_precision.sqrt();
+
+    // steps 1–2 — Gram + eigendecomposition
+    let b = a.gram(ctx, be);
+    let eig1 = ctx.driver(|| crate::linalg::eigh::eigh(&b));
+
+    // steps 3–6 — Ỹ = A Ṽ, normalize explicitly, discard at √wp
+    let y_tilde = a.matmul_small(ctx, be, &eig1.v);
+    let sig_tilde_all = y_tilde.col_norms(ctx);
+    let keep1 = keep_indices(&sig_tilde_all, cutoff);
+    let mut y = y_tilde.select_cols(ctx, &keep1);
+    let sig_tilde: Vec<f64> = keep1.iter().map(|&j| sig_tilde_all[j]).collect();
+    let v_tilde = ctx.driver(|| eig1.v.select_cols(&keep1));
+    let inv1: Vec<f64> = sig_tilde.iter().map(|&x| 1.0 / x).collect();
+    y.scale_cols(ctx, &inv1);
+
+    // steps 7–8 — second Gram + eigendecomposition
+    let z = y.gram(ctx, be);
+    let eig2 = ctx.driver(|| crate::linalg::eigh::eigh(&z));
+
+    // steps 9–12 — Q̃ = Y W, normalize explicitly, discard
+    let q_tilde = y.matmul_small(ctx, be, &eig2.v);
+    let t_all = q_tilde.col_norms(ctx);
+    let keep2 = keep_indices(&t_all, cutoff);
+    let mut q = q_tilde.select_cols(ctx, &keep2);
+    let t: Vec<f64> = keep2.iter().map(|&j| t_all[j]).collect();
+    let w = ctx.driver(|| eig2.v.select_cols(&keep2));
+    let inv2: Vec<f64> = t.iter().map(|&x| 1.0 / x).collect();
+    q.scale_cols(ctx, &inv2);
+
+    // step 13 — R = T Wᵀ Σ̃ Ṽᵀ (all small, driver)
+    let r = ctx.driver(|| {
+        let mut wt = w.transpose(); // k2×k1
+        for (i, &ti) in t.iter().enumerate() {
+            for j in 0..wt.cols() {
+                wt[(i, j)] *= ti * sig_tilde[j];
+            }
+        }
+        blas::matmul_nt(&wt, &v_tilde) // (T Wᵀ Σ̃) · Ṽᵀ
+    });
+
+    // step 14 — SVD of R
+    let rsvd = ctx.driver(|| svd(&r));
+
+    // step 15 — U = Q P
+    let u = q.matmul_small(ctx, be, &rsvd.u);
+
+    DistSvd { u, s: rsvd.s, v: rsvd.v }
+}
+
+// ---------------------------------------------------------------------------
+// "pre-existing": stock Spark MLlib computeSVD for IndexedRowMatrix
+// ---------------------------------------------------------------------------
+
+/// The baseline the paper compares against: MLlib's Gram-based routine.
+///
+/// Differences from Algorithm 3 (deliberately reproduced):
+/// * Σ is taken as √(eigenvalues of AᵀA), NOT the explicit column norms
+///   of A·V (no Remark 6), and
+/// * the rank cutoff is MLlib's `rCond`-style σ_j ≥ rcond·σ₁ with
+///   rcond = 1e-9, which keeps directions whose eigenvalues are pure
+///   roundoff noise.
+///
+/// For ill-conditioned inputs the kept junk directions make
+/// `U = A V Σ⁻¹` far from orthonormal — the paper's tables show
+/// `MaxEntry(|UᵀU−I|)` of O(1) "without warning".
+pub fn preexisting(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    _opts: &TallSkinnyOpts,
+) -> DistSvd {
+    const RCOND: f64 = 1e-9;
+
+    let b = a.gram(ctx, be);
+    let eig = ctx.driver(|| crate::linalg::eigh::eigh(&b));
+    let sigma: Vec<f64> = eig.d.iter().map(|&lam| lam.max(0.0).sqrt()).collect();
+    let smax = sigma.first().copied().unwrap_or(0.0);
+    let keep: Vec<usize> =
+        (0..sigma.len()).filter(|&j| sigma[j] > RCOND * smax && sigma[j] > 0.0).collect();
+    let s: Vec<f64> = keep.iter().map(|&j| sigma[j]).collect();
+    let v = ctx.driver(|| eig.v.select_cols(&keep));
+
+    // U = A V Σ⁻¹ — MLlib multiplies by V·Σ⁻¹ in one shot
+    let vsinv = ctx.driver(|| {
+        let mut m = v.clone();
+        for (j, &sj) in s.iter().enumerate() {
+            m.scale_col(j, 1.0 / sj);
+        }
+        m
+    });
+    let u = a.matmul_small(ctx, be, &vsinv);
+
+    DistSvd { u, s, v }
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+/// Steps 2–3 with implicit Q (the Spark-faithful path): discard the rows
+/// of R past the working-precision prefix, then reconstitute
+/// `Q = B[:, :k']·R₁₁⁻¹` with one distributed product. Exact because R is
+/// upper triangular: `B[:, :k'] = Q·R[:, :k'] = Q·R₁₁`.
+fn implicit_q(
+    ctx: &Context,
+    be: &dyn Compute,
+    b: &DistRowMatrix,
+    r: &Matrix,
+    wp: f64,
+) -> (DistRowMatrix, Matrix) {
+    let k = significant_prefix(r, wp);
+    assert!(k > 0, "matrix is numerically zero at the working precision");
+    let r11 = r.slice(0, k, 0, k);
+    let rinv = ctx.driver(|| tri_inverse_upper(&r11));
+    // Bₖ = B[:, :k]; Q = Bₖ·R₁₁⁻¹ — fused: Q = B · [R₁₁⁻¹; 0]
+    let mut solve = Matrix::zeros(b.cols(), k);
+    for i in 0..k {
+        solve.row_mut(i).copy_from_slice(rinv.row(i));
+    }
+    let q = b.matmul_small(ctx, be, &solve);
+    let r_kept = r.slice(0, k, 0, r.cols());
+    (q, r_kept)
+}
+
+/// Steps "discard the rows of R ... and the corresponding columns of Q"
+/// for the explicit-Q variants.
+fn discard_by_diagonal(
+    ctx: &Context,
+    q: &DistRowMatrix,
+    r: &Matrix,
+    wp: f64,
+) -> (Matrix, DistRowMatrix) {
+    let kept = significant_diagonal(r, wp);
+    if kept.len() == r.rows() {
+        return (r.clone(), q.clone());
+    }
+    let r_kept = r.select_rows(&kept);
+    let q_kept = q.select_cols(ctx, &kept);
+    (r_kept, q_kept)
+}
+
+/// Keep σ_j ≥ σ_max · cutoff (and σ_j > 0) — Algorithms 3–4, step 5/11.
+fn keep_indices(sigma: &[f64], cutoff: f64) -> Vec<usize> {
+    let smax = sigma.iter().cloned().fold(0.0f64, f64::max);
+    if smax == 0.0 {
+        return vec![];
+    }
+    (0..sigma.len()).filter(|&j| sigma[j] >= smax * cutoff && sigma[j] > 0.0).collect()
+}
+
+/// V = Ω⁻¹ Ṽ applied column-wise.
+fn unmix_columns(om: &Srft, v_tilde: &Matrix) -> Matrix {
+    let (n, k) = v_tilde.shape();
+    let mut v = Matrix::zeros(n, k);
+    let mut col = vec![0.0; n];
+    for j in 0..k {
+        for i in 0..n {
+            col[i] = v_tilde[(i, j)];
+        }
+        om.inverse(&mut col);
+        for i in 0..n {
+            v[(i, j)] = col[i];
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{spectrum_geometric, DctTestMatrix};
+    use crate::runtime::compute::NativeCompute;
+    use crate::verify::{error_report, ErrorReport};
+
+    type Alg = fn(&Context, &dyn Compute, &DistRowMatrix, &TallSkinnyOpts) -> DistSvd;
+
+    fn run(alg: Alg, m: usize, n: usize) -> (Context, DistRowMatrix, DistSvd) {
+        let ctx = Context::new(8);
+        let sigma = spectrum_geometric(n);
+        let gen = DctTestMatrix::new(m, n, &sigma);
+        let a = gen.generate(&ctx, &NativeCompute, 64);
+        let out = alg(&ctx, &NativeCompute, &a, &TallSkinnyOpts::default());
+        (ctx, a, out)
+    }
+
+    fn errors(ctx: &Context, a: &DistRowMatrix, out: &DistSvd) -> ErrorReport {
+        error_report(ctx, &NativeCompute, a, &out.u, &out.s, &out.v)
+    }
+
+    #[test]
+    fn algorithm1_accuracy_profile() {
+        let (ctx, a, out) = run(algorithm1, 512, 64);
+        let e = errors(&ctx, &a, &out);
+        // reconstruction at the working precision (paper: ~1e-11..1e-12)
+        assert!(e.recon < 5e-11, "recon {}", e.recon);
+        // single orthonormalization: U decent but NOT machine precision —
+        // the implicit-Q triangular solve costs eps·cond(R₁₁), the
+        // paper's Tables 3–5 show ~5e-6 for Algorithm 1
+        assert!(e.u_orth < 1e-3, "u_orth {}", e.u_orth);
+        assert!(e.u_orth > 1e-10, "u_orth suspiciously good: {}", e.u_orth);
+        // V near machine precision
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+    }
+
+    #[test]
+    fn algorithm1_explicit_q_ablation() {
+        // the explicit-Q TSQR (our upgrade over the paper's Spark code)
+        // gives machine-precision U even with a single orthonormalization
+        let (ctx, a, out) = run(algorithm1_explicit_q, 512, 64);
+        let e = errors(&ctx, &a, &out);
+        assert!(e.recon < 5e-11, "recon {}", e.recon);
+        assert!(e.u_orth < 1e-12, "u_orth {}", e.u_orth);
+    }
+
+    #[test]
+    fn algorithm2_machine_precision_orthonormality() {
+        let (ctx, a, out) = run(algorithm2, 512, 64);
+        let e = errors(&ctx, &a, &out);
+        assert!(e.recon < 5e-11, "recon {}", e.recon);
+        // the headline: U orthonormal to ~machine precision
+        assert!(e.u_orth < 1e-12, "u_orth {}", e.u_orth);
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+    }
+
+    #[test]
+    fn algorithm3_gram_profile() {
+        let (ctx, a, out) = run(algorithm3, 512, 64);
+        let e = errors(&ctx, &a, &out);
+        // Gram loses half the digits: recon ~√wp-ish (paper: ~1e-7..1e-8)
+        assert!(e.recon < 5e-6, "recon {}", e.recon);
+        assert!(e.recon > 1e-13, "suspiciously good recon {}", e.recon);
+        assert!(e.u_orth < 1e-2, "u_orth {}", e.u_orth);
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+    }
+
+    #[test]
+    fn algorithm4_gram_double_orthonormal() {
+        let (ctx, a, out) = run(algorithm4, 512, 64);
+        let e = errors(&ctx, &a, &out);
+        assert!(e.recon < 5e-6, "recon {}", e.recon);
+        // double orthonormalization: machine-precision U
+        assert!(e.u_orth < 1e-12, "u_orth {}", e.u_orth);
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+    }
+
+    #[test]
+    fn preexisting_u_badly_nonorthonormal() {
+        let (ctx, a, out) = run(preexisting, 512, 64);
+        let e = errors(&ctx, &a, &out);
+        // the stock routine silently returns U with O(1) orthogonality error
+        assert!(e.u_orth > 1e-2, "u_orth unexpectedly good: {}", e.u_orth);
+        // ... but V stays fine
+        assert!(e.v_orth < 1e-12, "v_orth {}", e.v_orth);
+    }
+
+    #[test]
+    fn algorithms_recover_singular_values() {
+        let (_, _, out1) = run(algorithm1, 384, 48);
+        let (_, _, out2) = run(algorithm2, 384, 48);
+        let sigma = spectrum_geometric(48);
+        for j in 0..8 {
+            assert!((out1.s[j] - sigma[j]).abs() / sigma[j] < 1e-9, "alg1 σ_{j}");
+            assert!((out2.s[j] - sigma[j]).abs() / sigma[j] < 1e-9, "alg2 σ_{j}");
+        }
+    }
+
+    #[test]
+    fn full_rank_well_conditioned_all_algorithms_agree() {
+        let ctx = Context::new(4);
+        let mut rng = crate::rng::Rng::seed(111);
+        let a_local = Matrix::from_fn(200, 16, |_, _| rng.gauss());
+        let a = DistRowMatrix::from_matrix(&a_local, 32);
+        let opts = TallSkinnyOpts::default();
+        let reference = svd(&a_local);
+        for (name, alg) in [
+            ("alg1", algorithm1 as Alg),
+            ("alg2", algorithm2 as Alg),
+            ("alg3", algorithm3 as Alg),
+            ("alg4", algorithm4 as Alg),
+            ("pre", preexisting as Alg),
+        ] {
+            let out = alg(&ctx, &NativeCompute, &a, &opts);
+            assert_eq!(out.s.len(), 16, "{name} rank");
+            for j in 0..16 {
+                assert!(
+                    (out.s[j] - reference.s[j]).abs() / reference.s[j] < 1e-8,
+                    "{name} σ_{j}: {} vs {}",
+                    out.s[j],
+                    reference.s[j]
+                );
+            }
+            let e = errors(&ctx, &a, &out);
+            assert!(e.recon < 1e-7 * reference.s[0], "{name} recon {}", e.recon);
+        }
+    }
+
+    #[test]
+    fn rank_detection_on_deficient_input() {
+        // exactly rank-5 matrix: Algorithms 1–4 must all report rank 5
+        let ctx = Context::new(4);
+        let sigma = crate::gen::spectrum_lowrank(32, 5);
+        // replace the geometric decay with a benign one so nothing is
+        // borderline: σ = 1, .5, .25, .125, .0625, 0 ...
+        let sigma: Vec<f64> =
+            sigma.iter().enumerate().map(|(j, &s)| if s > 0.0 { 0.5f64.powi(j as i32) } else { 0.0 }).collect();
+        let gen = DctTestMatrix::new(256, 32, &sigma);
+        let a = gen.generate(&ctx, &NativeCompute, 64);
+        let opts = TallSkinnyOpts::default();
+        for (name, alg) in
+            [("alg1", algorithm1 as Alg), ("alg2", algorithm2 as Alg), ("alg3", algorithm3 as Alg), ("alg4", algorithm4 as Alg)]
+        {
+            let out = alg(&ctx, &NativeCompute, &a, &opts);
+            assert_eq!(out.s.len(), 5, "{name} rank: {:?}", out.s);
+        }
+    }
+}

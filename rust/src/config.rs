@@ -1,0 +1,240 @@
+//! Run configuration — the knobs of Table 2 of the paper plus the knobs
+//! this reproduction adds (compute backend, scaling).
+//!
+//! Parsed from CLI flags (`--key value` / `--key=value`) and optionally
+//! from a `key = value` config file (`--config path`), CLI taking
+//! precedence — a deliberate, minimal stand-in for spark-defaults.conf.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::dist::Context;
+use crate::runtime::compute::{Compute, NativeCompute};
+use crate::runtime::engine::PjrtCompute;
+
+/// Which compute backend serves the FLOP-dominant tile ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust blocked kernels (`linalg::blas`).
+    Native,
+    /// AOT-compiled Pallas kernels through PJRT (`runtime::engine`).
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Logical executors (Table 2: spark.dynamicAllocation.maxExecutors = 180).
+    pub executors: usize,
+    /// Rows per partition (Table 2: rowsPerPart = 1024).
+    pub rows_per_part: usize,
+    /// Columns per block for BlockMatrix workloads (Table 2: 1024).
+    pub cols_per_part: usize,
+    /// Reduction-tree fan-in (Spark treeAggregate default: 2).
+    pub fan_in: usize,
+    /// OS worker threads actually executing tasks (0 = all cores).
+    pub workers: usize,
+    /// The paper's working precision (Remark 1).
+    pub working_precision: f64,
+    /// Chained D·F·S products in the SRFT (Remark 5).
+    pub srft_chains: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Compute backend for tile ops.
+    pub backend: Backend,
+    /// Power iterations for the error columns.
+    pub power_iters: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            executors: 180,
+            rows_per_part: 1024,
+            cols_per_part: 1024,
+            fan_in: 2,
+            workers: 0,
+            working_precision: 1e-11,
+            srft_chains: 2,
+            seed: 0x5EED,
+            backend: Backend::Native,
+            power_iters: 60,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build the sparklite driver context for this configuration.
+    pub fn context(&self) -> Context {
+        let ctx = Context::new(self.executors).with_fan_in(self.fan_in);
+        if self.workers > 0 {
+            ctx.with_workers(self.workers)
+        } else {
+            ctx
+        }
+    }
+
+    /// Instantiate the compute backend (PJRT loads + compiles artifacts).
+    pub fn compute(&self) -> anyhow::Result<Arc<dyn Compute>> {
+        Ok(match self.backend {
+            Backend::Native => Arc::new(NativeCompute),
+            Backend::Pjrt => Arc::new(PjrtCompute::load_default()?),
+        })
+    }
+
+    /// Tall-skinny algorithm options derived from this config.
+    pub fn ts_opts(&self) -> crate::algs::TallSkinnyOpts {
+        crate::algs::TallSkinnyOpts {
+            working_precision: self.working_precision,
+            srft_chains: self.srft_chains,
+            seed: self.seed,
+        }
+    }
+
+    /// Apply `key = value` pairs (config file first, then CLI overrides).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = |e: &dyn std::fmt::Display| format!("bad value for {key}: {e}");
+        match key {
+            "executors" => self.executors = value.parse().map_err(|e| bad(&e))?,
+            "rows-per-part" | "rows_per_part" => {
+                self.rows_per_part = value.parse().map_err(|e| bad(&e))?
+            }
+            "cols-per-part" | "cols_per_part" => {
+                self.cols_per_part = value.parse().map_err(|e| bad(&e))?
+            }
+            "fan-in" | "fan_in" => self.fan_in = value.parse().map_err(|e| bad(&e))?,
+            "workers" => self.workers = value.parse().map_err(|e| bad(&e))?,
+            "working-precision" | "working_precision" => {
+                self.working_precision = value.parse().map_err(|e| bad(&e))?
+            }
+            "srft-chains" | "srft_chains" => {
+                self.srft_chains = value.parse().map_err(|e| bad(&e))?
+            }
+            "seed" => self.seed = value.parse().map_err(|e| bad(&e))?,
+            "backend" => self.backend = value.parse()?,
+            "power-iters" | "power_iters" => {
+                self.power_iters = value.parse().map_err(|e| bad(&e))?
+            }
+            other => return Err(format!("unknown configuration key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines from a config file ('#' comments allowed).
+    pub fn load_file(&mut self, path: &Path) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("{path:?}:{}: expected key = value", ln + 1))?;
+            self.apply(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse `--key value` / `--key=value` flags into (config, leftovers).
+pub fn parse_flags(args: &[String]) -> Result<(RunConfig, HashMap<String, String>), String> {
+    let mut cfg = RunConfig::default();
+    let mut extra = HashMap::new();
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(stripped) = a.strip_prefix("--") else {
+            return Err(format!("unexpected argument '{a}'"));
+        };
+        let (k, v) = if let Some((k, v)) = stripped.split_once('=') {
+            (k.to_string(), v.to_string())
+        } else {
+            i += 1;
+            let v = args.get(i).ok_or_else(|| format!("--{stripped} needs a value"))?;
+            (stripped.to_string(), v.clone())
+        };
+        pairs.push((k, v));
+        i += 1;
+    }
+    // config file first so CLI wins
+    for (k, v) in &pairs {
+        if k == "config" {
+            cfg.load_file(Path::new(v))?;
+        }
+    }
+    for (k, v) in pairs {
+        if k == "config" {
+            continue;
+        }
+        if cfg.apply(&k, &v).is_err() {
+            extra.insert(k, v);
+        }
+    }
+    Ok((cfg, extra))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_match_table2() {
+        let c = RunConfig::default();
+        assert_eq!(c.executors, 180);
+        assert_eq!(c.rows_per_part, 1024);
+        assert_eq!(c.cols_per_part, 1024);
+        assert_eq!(c.working_precision, 1e-11);
+    }
+
+    #[test]
+    fn parse_flag_styles() {
+        let (c, extra) =
+            parse_flags(&s(&["--executors", "18", "--backend=pjrt", "--m", "100"])).unwrap();
+        assert_eq!(c.executors, 18);
+        assert_eq!(c.backend, Backend::Pjrt);
+        assert_eq!(extra.get("m").map(String::as_str), Some("100"));
+    }
+
+    #[test]
+    fn config_file_then_cli_override() {
+        let dir = std::env::temp_dir().join("dsvd_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(&path, "# comment\nexecutors = 18\nseed = 7\n").unwrap();
+        let (c, _) = parse_flags(&s(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--seed",
+            "9",
+        ]))
+        .unwrap();
+        assert_eq!(c.executors, 18); // from file
+        assert_eq!(c.seed, 9); // CLI wins
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_flags(&s(&["positional"])).is_err());
+        assert!(parse_flags(&s(&["--executors"])).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply("backend", "cuda").is_err());
+    }
+}

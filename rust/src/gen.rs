@@ -1,0 +1,378 @@
+//! Synthetic test-matrix generators — the paper's equation (2):
+//! `A = U Σ Vᵀ` with U and V discrete cosine transforms and Σ one of
+//! three spectra:
+//!
+//! * equation (3) — geometric decay from 1 to 1e-20 across all n columns
+//!   (numerically rank-deficient, "near the worst that we encountered"),
+//! * equation (5) — the same decay but only over the first l entries
+//!   (exactly rank-l, for the low-rank Tables 6–10),
+//! * Appendix B — the fractal "Devil's staircase" with many repeated
+//!   singular values (a bit-faithful port of the paper's Scala snippet).
+//!
+//! The m×m factor U is never materialized: only its first k columns are
+//! needed (k = number of nonzero singular values), and each partition
+//! builds its own slab of rows from the closed-form DCT entries and one
+//! local GEMM. Generation is itself a distributed job — its cost is what
+//! Tables 27–29 report.
+
+use crate::dist::{Context, DistBlockMatrix, DistRowMatrix};
+use crate::linalg::dct::{dct_entry, dct_matrix};
+use crate::linalg::Matrix;
+use crate::runtime::compute::Compute;
+
+/// Equation (3): σ_j = exp((j−1)/(n−1) · ln 1e-20), j = 1..n.
+pub fn spectrum_geometric(n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![1.0];
+    }
+    (0..n).map(|j| (j as f64 / (n as f64 - 1.0) * (1e-20f64).ln()).exp()).collect()
+}
+
+/// Equation (5): the first l entries of the geometric decay, zero after.
+pub fn spectrum_lowrank(n: usize, l: usize) -> Vec<f64> {
+    let mut s = vec![0.0; n];
+    if l == 1 {
+        s[0] = 1.0;
+        return s;
+    }
+    for j in 0..l.min(n) {
+        s[j] = (j as f64 / (l as f64 - 1.0) * (1e-20f64).ln()).exp();
+    }
+    s
+}
+
+/// Appendix B: the fractal "Devil's staircase" singular values, a direct
+/// port of the paper's Scala code (octal digits 1–7 ↦ binary 1, octal 0 ↦
+/// binary 0, rescaled to [0, 1], sorted descending). Uses f32 for the
+/// `j * 8⁶.toFloat / k` product exactly as the Scala does.
+pub fn devils_staircase(k: usize) -> Vec<f64> {
+    let pow8_6 = 8f32.powi(6); // 262144
+    let mut vals: Vec<f64> = (0..k)
+        .map(|j| {
+            let x = (j as f32 * pow8_6 / k as f32).round() as i64;
+            let octal = format!("{x:o}");
+            let binary: String =
+                octal.chars().map(|c| if c == '0' { '0' } else { '1' }).collect();
+            let parsed = i64::from_str_radix(&binary, 2).expect("binary parse");
+            parsed as f64 / 2f64.powi(6) / (1.0 - 2f64.powi(-6))
+        })
+        .collect();
+    vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    vals
+}
+
+/// The DCT test matrix of equation (2), built lazily:
+/// `A[i, :] = Σ_j U[i,j] σ_j V[:,j]ᵀ` with U, V orthonormal DCT bases.
+pub struct DctTestMatrix {
+    m: usize,
+    n: usize,
+    /// k×n precomputed right factor `diag(σ) Vᵀ` restricted to σ_j ≠ 0.
+    msv: Matrix,
+    k: usize,
+}
+
+impl DctTestMatrix {
+    pub fn new(m: usize, n: usize, sigma: &[f64]) -> Self {
+        assert_eq!(sigma.len(), n, "need one σ per column");
+        assert!(m >= n, "equation (2) is used for tall matrices; see `block` for wide ones");
+        let k = sigma.iter().take_while(|&&s| s != 0.0).count();
+        let v = dct_matrix(n);
+        // msv[j, :] = σ_j · (column j of V)ᵀ
+        let msv = Matrix::from_fn(k, n, |j, i| sigma[j] * v[(i, j)]);
+        DctTestMatrix { m, n, msv, k }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// Dense slab of rows [r0, r1): `U[r0:r1, :k] · msv` via one GEMM.
+    pub fn rows_block(&self, be: &dyn Compute, r0: usize, r1: usize) -> Matrix {
+        let u = Matrix::from_fn(r1 - r0, self.k, |i, j| dct_entry(self.m, r0 + i, j));
+        be.matmul(&u, &self.msv)
+    }
+
+    /// Generate the full matrix as a distributed row matrix (this stage's
+    /// cost is what Tables 27–29 measure).
+    pub fn generate(&self, ctx: &Context, be: &dyn Compute, rows_per_part: usize) -> DistRowMatrix {
+        let rpp = rows_per_part.max(1);
+        let mut bounds = Vec::new();
+        let mut r0 = 0;
+        while r0 < self.m {
+            let r1 = (r0 + rpp).min(self.m);
+            bounds.push((r0, r1));
+            r0 = r1;
+        }
+        let tasks: Vec<Box<dyn FnOnce() -> crate::dist::RowPartition + Send + '_>> = bounds
+            .iter()
+            .map(|&(r0, r1)| {
+                Box::new(move || crate::dist::RowPartition {
+                    row_start: r0,
+                    data: self.rows_block(be, r0, r1),
+                }) as _
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix::from_parts(parts, self.m, self.n)
+    }
+}
+
+/// Block-matrix variant of equation (2) for the wide workloads of
+/// Tables 9/10 (m×n with both large): block (r0..r1, c0..c1) is
+/// `U[r0:r1, :k] · diag(σ[:k]) · V[c0:c1, :k]ᵀ`, with k = #nonzero σ —
+/// cheap because the low-rank tables use k = l ≤ 20.
+pub struct DctBlockTestMatrix {
+    m: usize,
+    n: usize,
+    sigma: Vec<f64>,
+    k: usize,
+}
+
+impl DctBlockTestMatrix {
+    pub fn new(m: usize, n: usize, sigma: &[f64]) -> Self {
+        let k = sigma.iter().take_while(|&&s| s != 0.0).count();
+        assert!(k <= m.min(n));
+        DctBlockTestMatrix { m, n, sigma: sigma.to_vec(), k }
+    }
+
+    /// Dense block at (r0..r1) × (c0..c1).
+    pub fn block(&self, be: &dyn Compute, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        let us = Matrix::from_fn(r1 - r0, self.k, |i, j| {
+            dct_entry(self.m, r0 + i, j) * self.sigma[j]
+        });
+        let vt = Matrix::from_fn(self.k, c1 - c0, |j, i| dct_entry(self.n, c0 + i, j));
+        be.matmul(&us, &vt)
+    }
+
+    /// Generate as a distributed block matrix.
+    pub fn generate(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        rpb: usize,
+        cpb: usize,
+    ) -> DistBlockMatrix {
+        let m = self.m;
+        let n = self.n;
+        DistBlockMatrix::generate_blocks(ctx, m, n, rpb, cpb, |r0, r1, c0, c1| {
+            self.block(be, r0, r1, c0, c1)
+        })
+    }
+}
+
+/// Further singular-value profiles ("our software includes examples of
+/// matrices with many different distributions of singular values and
+/// singular vectors" — Section 2 of the paper). The DCT factors of
+/// equation (2) can be swapped for Haar-random orthogonal factors via
+/// [`RandomOrthoTestMatrix`].
+pub mod spectra {
+    /// Flat spectrum: all σ = 1 (orthogonal-matrix input).
+    pub fn flat(n: usize) -> Vec<f64> {
+        vec![1.0; n]
+    }
+
+    /// Cliff: σ = 1 for the first k, then a hard drop to `floor`.
+    pub fn cliff(n: usize, k: usize, floor: f64) -> Vec<f64> {
+        (0..n).map(|j| if j < k { 1.0 } else { floor }).collect()
+    }
+
+    /// Slow polynomial decay σ_j = (j+1)^-p — the hard case for plain
+    /// sketch-and-solve, where subspace iteration (i > 0) earns its keep.
+    pub fn polynomial(n: usize, p: f64) -> Vec<f64> {
+        (0..n).map(|j| ((j + 1) as f64).powf(-p)).collect()
+    }
+
+    /// Geometric decay with additive noise floor: decay(j) + floor —
+    /// "real data sets are often messy".
+    pub fn noisy_geometric(n: usize, floor: f64) -> Vec<f64> {
+        super::spectrum_geometric(n).iter().map(|s| s + floor).collect()
+    }
+}
+
+/// Test matrix with Haar-random orthogonal U and V factors (built by QR
+/// of Gaussian matrices) instead of the DCT bases of equation (2) —
+/// exercises the algorithms on singular VECTORS with no structure.
+pub struct RandomOrthoTestMatrix {
+    m: usize,
+    n: usize,
+    /// k×n right factor diag(σ)·Vᵀ with V Haar-random.
+    msv: Matrix,
+    /// m×k left factor, Haar-random orthonormal columns.
+    u: Matrix,
+}
+
+impl RandomOrthoTestMatrix {
+    pub fn new(m: usize, n: usize, sigma: &[f64], rng: &mut crate::rng::Rng) -> Self {
+        assert_eq!(sigma.len(), n);
+        assert!(m >= n);
+        let k = sigma.iter().take_while(|&&s| s != 0.0).count();
+        let gu = Matrix::from_fn(m, k, |_, _| rng.gauss());
+        let u = crate::linalg::qr::thin_qr(&gu).q;
+        let gv = Matrix::from_fn(n, k, |_, _| rng.gauss());
+        let v = crate::linalg::qr::thin_qr(&gv).q;
+        let msv = Matrix::from_fn(k, n, |j, i| sigma[j] * v[(i, j)]);
+        RandomOrthoTestMatrix { m, n, msv, u }
+    }
+
+    /// Generate as a distributed row matrix.
+    pub fn generate(&self, ctx: &Context, be: &dyn Compute, rows_per_part: usize) -> DistRowMatrix {
+        let rpp = rows_per_part.max(1);
+        let mut bounds = Vec::new();
+        let mut r0 = 0;
+        while r0 < self.m {
+            let r1 = (r0 + rpp).min(self.m);
+            bounds.push((r0, r1));
+            r0 = r1;
+        }
+        let tasks: Vec<Box<dyn FnOnce() -> crate::dist::RowPartition + Send + '_>> = bounds
+            .iter()
+            .map(|&(r0, r1)| {
+                Box::new(move || {
+                    let uslab = self.u.slice(r0, r1, 0, self.u.cols());
+                    crate::dist::RowPartition { row_start: r0, data: be.matmul(&uslab, &self.msv) }
+                }) as _
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix::from_parts(parts, self.m, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::matmul;
+    use crate::runtime::compute::NativeCompute;
+
+    #[test]
+    fn spectrum_geometric_endpoints() {
+        let s = spectrum_geometric(100);
+        assert!((s[0] - 1.0).abs() < 1e-15);
+        assert!((s[99] - 1e-20).abs() < 1e-30);
+        // strictly decreasing
+        for i in 1..100 {
+            assert!(s[i] < s[i - 1]);
+        }
+        assert_eq!(spectrum_geometric(1), vec![1.0]);
+    }
+
+    #[test]
+    fn spectrum_lowrank_zero_tail() {
+        let s = spectrum_lowrank(50, 10);
+        assert!((s[0] - 1.0).abs() < 1e-15);
+        assert!((s[9] - 1e-20).abs() < 1e-30);
+        assert!(s[10..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn staircase_properties() {
+        let s = devils_staircase(2000);
+        assert_eq!(s.len(), 2000);
+        // range [0, 1], descending, many repeats
+        assert!((s[0] - 1.0).abs() < 1e-12, "max {}", s[0]);
+        assert!(s[1999] >= 0.0);
+        for i in 1..2000 {
+            assert!(s[i] <= s[i - 1]);
+        }
+        let distinct: std::collections::BTreeSet<u64> =
+            s.iter().map(|x| x.to_bits()).collect();
+        assert!(distinct.len() < 500, "expected heavy repetition, got {}", distinct.len());
+    }
+
+    #[test]
+    fn staircase_small_exact() {
+        // k = 2: j=0 → 0; j=1 → round(262144/2)=131072 = 0o400000 →
+        // binary 100000 base2 = 32 → 32/64/(1-1/64) = 0.507936...
+        let s = devils_staircase(2);
+        assert!((s[0] - 32.0 / 64.0 / (1.0 - 1.0 / 64.0)).abs() < 1e-12);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn dct_test_matrix_has_requested_svd() {
+        let (m, n) = (48, 12);
+        let sigma = spectrum_geometric(n);
+        let gen = DctTestMatrix::new(m, n, &sigma);
+        let a = gen.rows_block(&NativeCompute, 0, m);
+        // check singular values via local SVD
+        let r = crate::linalg::svd::svd(&a);
+        for j in 0..4 {
+            assert!((r.s[j] - sigma[j]).abs() / sigma[j] < 1e-10, "σ_{j}");
+        }
+        // check A = U Σ Vᵀ against explicit U, V
+        let u = Matrix::from_fn(m, n, |i, j| dct_entry(m, i, j));
+        let v = dct_matrix(n);
+        let mut us = u.clone();
+        for j in 0..n {
+            us.scale_col(j, sigma[j]);
+        }
+        let expect = matmul(&us, &v.transpose());
+        assert!(a.sub(&expect).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn dct_generate_distributed_matches_blocks() {
+        let ctx = Context::new(4);
+        let sigma = spectrum_lowrank(8, 3);
+        let gen = DctTestMatrix::new(40, 8, &sigma);
+        let d = gen.generate(&ctx, &NativeCompute, 7);
+        let full = gen.rows_block(&NativeCompute, 0, 40);
+        assert!(d.collect(&ctx).sub(&full).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn extra_spectra_profiles() {
+        assert_eq!(spectra::flat(5), vec![1.0; 5]);
+        let c = spectra::cliff(6, 2, 1e-8);
+        assert_eq!(c[1], 1.0);
+        assert_eq!(c[2], 1e-8);
+        let p = spectra::polynomial(4, 2.0);
+        assert!((p[3] - 1.0 / 16.0).abs() < 1e-15);
+        let g = spectra::noisy_geometric(10, 1e-6);
+        assert!(g.iter().all(|&x| x >= 1e-6));
+    }
+
+    #[test]
+    fn random_ortho_matrix_has_requested_svd() {
+        let mut rng = crate::rng::Rng::seed(404);
+        let sigma: Vec<f64> = (0..12).map(|j| 0.5f64.powi(j as i32)).collect();
+        let gen = RandomOrthoTestMatrix::new(64, 12, &sigma, &mut rng);
+        let ctx = Context::new(2);
+        let a = gen.generate(&ctx, &NativeCompute, 16);
+        let r = crate::linalg::svd::svd(&a.collect(&ctx));
+        for j in 0..12 {
+            assert!((r.s[j] - sigma[j]).abs() / sigma[j] < 1e-10, "σ_{j}");
+        }
+    }
+
+    #[test]
+    fn algorithms_on_random_ortho_factors() {
+        // the paper's headline contrast must not depend on the DCT bases
+        let mut rng = crate::rng::Rng::seed(405);
+        let sigma = spectrum_geometric(48);
+        let gen = RandomOrthoTestMatrix::new(384, 48, &sigma, &mut rng);
+        let ctx = Context::new(4);
+        let a = gen.generate(&ctx, &NativeCompute, 64);
+        let opts = crate::algs::TallSkinnyOpts::default();
+        let out2 = crate::algs::algorithm2(&ctx, &NativeCompute, &a, &opts);
+        let u2 = crate::verify::max_entry_gram_minus_identity(&ctx, &NativeCompute, &out2.u);
+        assert!(u2 < 1e-12, "alg2 U orth {u2}");
+        let outp = crate::algs::preexisting(&ctx, &NativeCompute, &a, &opts);
+        let up = crate::verify::max_entry_gram_minus_identity(&ctx, &NativeCompute, &outp.u);
+        assert!(up > 1e-2, "stock baseline must fail here too: {up}");
+    }
+
+    #[test]
+    fn block_test_matrix_matches_row_version() {
+        let (m, n, l) = (30, 18, 5);
+        let sigma = spectrum_lowrank(n, l);
+        let rowgen = DctTestMatrix::new(m, n, &sigma);
+        let blockgen = DctBlockTestMatrix::new(m, n, &sigma);
+        let a = rowgen.rows_block(&NativeCompute, 0, m);
+        let b = blockgen.block(&NativeCompute, 0, m, 0, n);
+        assert!(a.sub(&b).max_abs() < 1e-13);
+        let ctx = Context::new(2);
+        let d = blockgen.generate(&ctx, &NativeCompute, 7, 5);
+        assert!(d.collect(&ctx).sub(&a).max_abs() < 1e-13);
+    }
+}

@@ -1,0 +1,31 @@
+//! # dsvd — randomized distributed PCA / SVD
+//!
+//! Production-shaped reproduction of Li, Kluger & Tygert (2016),
+//! *"Randomized algorithms for distributed computation of principal
+//! component analysis and singular value decomposition"*, on a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3** (this crate) — the distributed coordinator: a from-scratch
+//!   mini-Spark substrate ([`dist`]), the paper's Algorithms 1–8
+//!   ([`algs`]), baselines, verification and benchmarking harness.
+//! * **L2/L1** (`python/compile`) — JAX tile graphs calling Pallas
+//!   kernels, AOT-lowered once to HLO-text artifacts.
+//! * **runtime** ([`runtime`]) — loads the artifacts through PJRT and
+//!   serves them to L3 as a fixed-shape tile engine; Python is never on
+//!   the request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod algs;
+pub mod dist;
+pub mod linalg;
+pub mod config;
+pub mod gen;
+pub mod harness;
+pub mod rng;
+pub mod runtime;
+pub mod srft;
+pub mod verify;
+
+pub use linalg::Matrix;

@@ -1,0 +1,321 @@
+//! Native BLAS-like kernels: blocked GEMM in all transpose flavours,
+//! GEMV, and small helpers. These are the "MKL substitute" of the
+//! reproduction; the PJRT/Pallas tile engine in `crate::runtime` provides
+//! the alternative backend for the same contracts.
+
+use super::matrix::Matrix;
+
+/// Cache-blocking parameters for the packed GEMM micro-kernel.
+const MC: usize = 64;
+const KC: usize = 128;
+const NC: usize = 256;
+
+/// C = A · B (plain).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch {:?}x{:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_acc(&mut c, a, b);
+    c
+}
+
+/// C += A · B, blocked over (MC × KC) panels of A and (KC × NC) panels of B.
+/// Inner loop is an i-k-j row-major saxpy pattern that autovectorizes well.
+pub fn gemm_acc(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.shape(), (m, n));
+    let adata = a.data();
+    let bdata = b.data();
+    let cdata = c.data_mut();
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                // micro: C[ic.., jc..] += A[ic.., pc..] * B[pc.., jc..]
+                // §Perf: rows are processed in pairs so each loaded B row
+                // feeds two FMA streams (halves B-traffic per flop).
+                let mut i = 0;
+                while i + 1 < mb {
+                    let (r0, r1) = (ic + i, ic + i + 1);
+                    let a0 = &adata[r0 * k + pc..r0 * k + pc + kb];
+                    let a1 = &adata[r1 * k + pc..r1 * k + pc + kb];
+                    let (clo, chi) = cdata.split_at_mut(r1 * n);
+                    let c0 = &mut clo[r0 * n + jc..r0 * n + jc + nb];
+                    let c1 = &mut chi[jc..jc + nb];
+                    for p in 0..kb {
+                        let (x0, x1) = (a0[p], a1[p]);
+                        if x0 == 0.0 && x1 == 0.0 {
+                            continue;
+                        }
+                        let brow = &bdata[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                        for j in 0..nb {
+                            let b = brow[j];
+                            c0[j] += x0 * b;
+                            c1[j] += x1 * b;
+                        }
+                    }
+                    i += 2;
+                }
+                if i < mb {
+                    let r = ic + i;
+                    let arow = &adata[r * k + pc..r * k + pc + kb];
+                    let crow = &mut cdata[r * n + jc..r * n + jc + nb];
+                    for (p, &aip) in arow.iter().enumerate() {
+                        if aip == 0.0 {
+                            continue;
+                        }
+                        let brow = &bdata[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                        for j in 0..nb {
+                            crow[j] += aip * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = Aᵀ · B  (A is m×k used as k-tall: result is A.cols × B.cols).
+/// This is the Gram-style kernel: for `gram`, call with a == b.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    let (m, ka) = a.shape();
+    let kb = b.cols();
+    let mut c = Matrix::zeros(ka, kb);
+    let adata = a.data();
+    let bdata = b.data();
+    let cdata = c.data_mut();
+    // Row-major friendly: accumulate outer products of rows of A and B.
+    for i in 0..m {
+        let arow = &adata[i * ka..(i + 1) * ka];
+        let brow = &bdata[i * kb..(i + 1) * kb];
+        for p in 0..ka {
+            let aip = arow[p];
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut cdata[p * kb..(p + 1) * kb];
+            for j in 0..kb {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    let adata = a.data();
+    let bdata = b.data();
+    let cdata = c.data_mut();
+    for i in 0..m {
+        let arow = &adata[i * k..(i + 1) * k];
+        let crow = &mut cdata[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &bdata[j * k..(j + 1) * k];
+            crow[j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// Symmetric rank-k update: G = Aᵀ·A (the Gram matrix of the columns of A).
+/// Exploits symmetry: computes the upper triangle and mirrors it.
+pub fn gram(a: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    let mut g = Matrix::zeros(n, n);
+    let adata = a.data();
+    let gdata = g.data_mut();
+    for i in 0..m {
+        let arow = &adata[i * n..(i + 1) * n];
+        for p in 0..n {
+            let aip = arow[p];
+            if aip == 0.0 {
+                continue;
+            }
+            let grow = &mut gdata[p * n..(p + 1) * n];
+            for j in p..n {
+                grow[j] += aip * arow[j];
+            }
+        }
+    }
+    // mirror the strict upper triangle
+    for p in 0..n {
+        for j in (p + 1)..n {
+            gdata[j * n + p] = gdata[p * n + j];
+        }
+    }
+    g
+}
+
+/// y = A·x.
+pub fn gemv(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// y = Aᵀ·x.
+pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let r = a.row(i);
+        for j in 0..a.cols() {
+            y[j] += xi * r[j];
+        }
+    }
+    y
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: faster and slightly more accurate
+    let n = a.len();
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    // scaled to avoid overflow/underflow, LAPACK dnrm2 style
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &v in x {
+        if v != 0.0 {
+            let av = v.abs();
+            if scale < av {
+                ssq = 1.0 + ssq * (scale / av).powi(2);
+                scale = av;
+            } else {
+                ssq += (av / scale).powi(2);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Rng::seed(7);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 4), (17, 33, 9), (70, 130, 65), (128, 64, 300)] {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, k, n);
+            let c = matmul(&a, &b);
+            let r = naive_matmul(&a, &b);
+            assert!(c.sub(&r).max_abs() < 1e-11 * (k as f64), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn tn_nt_match_transpose() {
+        let mut rng = Rng::seed(8);
+        let a = randmat(&mut rng, 23, 11);
+        let b = randmat(&mut rng, 23, 7);
+        let c1 = matmul_tn(&a, &b);
+        let c2 = matmul(&a.transpose(), &b);
+        assert!(c1.sub(&c2).max_abs() < 1e-12);
+        let d = randmat(&mut rng, 9, 11);
+        let e1 = matmul_nt(&a, &d);
+        let e2 = matmul(&a, &d.transpose());
+        assert!(e1.sub(&e2).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_symmetric_and_correct() {
+        let mut rng = Rng::seed(9);
+        let a = randmat(&mut rng, 40, 13);
+        let g = gram(&a);
+        let r = matmul(&a.transpose(), &a);
+        assert!(g.sub(&r).max_abs() < 1e-11);
+        for i in 0..13 {
+            for j in 0..13 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_matches() {
+        let mut rng = Rng::seed(10);
+        let a = randmat(&mut rng, 12, 5);
+        let x: Vec<f64> = (0..5).map(|_| rng.gauss()).collect();
+        let y = gemv(&a, &x);
+        let ym = matmul(&a, &Matrix::from_vec(5, 1, x.clone()));
+        for i in 0..12 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-13);
+        }
+        let z: Vec<f64> = (0..12).map(|_| rng.gauss()).collect();
+        let w = gemv_t(&a, &z);
+        let wm = matmul(&a.transpose(), &Matrix::from_vec(12, 1, z));
+        for j in 0..5 {
+            assert!((w[j] - wm[(j, 0)]).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn nrm2_robust() {
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        // would overflow a naive sum of squares
+        let big = vec![1e200, 1e200];
+        assert!((nrm2(&big) - 1e200 * (2.0f64).sqrt()).abs() / 1e200 < 1e-15);
+        assert_eq!(nrm2(&[]), 0.0);
+    }
+}

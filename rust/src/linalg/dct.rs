@@ -1,0 +1,78 @@
+//! Orthonormal discrete cosine transform (DCT-II basis) — the paper's
+//! equation (2) builds its test matrices as A = U Σ Vᵀ with U and V
+//! m×m and n×n "discrete cosine transforms".
+//!
+//! We need two things:
+//!   * `dct_matrix(n)` — the explicit n×n orthonormal DCT matrix (used for
+//!     the small V factor),
+//!   * `dct_entry(m, i, j)` — the (i, j) entry of the m×m orthonormal DCT
+//!     matrix without materializing it (U may have m ~ 10⁶ rows; the
+//!     generator streams rows of U[:, :k] on demand).
+//!
+//! Convention (orthonormal DCT-II as a matrix of basis ROWS):
+//!   T[k][j] = c_k √(2/n) cos(π (2j+1) k / (2n)),  c_0 = 1/√2, c_k = 1.
+//! T is orthogonal: T Tᵀ = I. We use U = Tᵀ (columns are basis functions).
+
+use super::matrix::Matrix;
+
+/// Entry (i, j) of the n×n orthonormal DCT basis matrix U = Tᵀ:
+/// U[i][j] = c_j √(2/n) cos(π (2i+1) j / (2n)).
+#[inline]
+pub fn dct_entry(n: usize, i: usize, j: usize) -> f64 {
+    let nn = n as f64;
+    let cj = if j == 0 { std::f64::consts::FRAC_1_SQRT_2 } else { 1.0 };
+    cj * (2.0 / nn).sqrt()
+        * (std::f64::consts::PI * (2.0 * i as f64 + 1.0) * j as f64 / (2.0 * nn)).cos()
+}
+
+/// Full n×n orthonormal DCT basis matrix (columns = cosine basis vectors).
+pub fn dct_matrix(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |i, j| dct_entry(n, i, j))
+}
+
+/// Row `i` of the m×m DCT basis matrix restricted to the first `k` columns.
+/// Used to stream the tall factor U[:, :k] of the synthetic test matrices.
+pub fn dct_row(m: usize, i: usize, k: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), k);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dct_entry(m, i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::matmul;
+
+    #[test]
+    fn dct_orthonormal() {
+        for &n in &[1usize, 2, 5, 16, 33] {
+            let u = dct_matrix(n);
+            let err = matmul(&u.transpose(), &u).sub(&Matrix::eye(n)).max_abs();
+            assert!(err < 1e-13, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn dct_row_matches_matrix() {
+        let n = 12;
+        let u = dct_matrix(n);
+        let mut row = vec![0.0; 5];
+        for i in 0..n {
+            dct_row(n, i, 5, &mut row);
+            for j in 0..5 {
+                assert_eq!(row[j], u[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn dct_first_column_constant() {
+        let n = 9;
+        let u = dct_matrix(n);
+        let expect = (1.0 / n as f64).sqrt();
+        for i in 0..n {
+            assert!((u[(i, 0)] - expect).abs() < 1e-14);
+        }
+    }
+}

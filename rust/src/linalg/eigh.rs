@@ -1,0 +1,334 @@
+//! Symmetric eigendecomposition — the driver-side solve at the heart of
+//! the Gram-based Algorithms 3 and 4 (`B = V D Vᵀ` for `B = AᵀA`).
+//!
+//! Classic two-phase dense solver, implemented from scratch:
+//!   1. Householder tridiagonalization (EISPACK `tred2`),
+//!   2. implicitly shifted QL iteration on the tridiagonal form with
+//!      accumulation of the rotations (`tql2`).
+//! Eigenvalues are returned in DESCENDING order (the convention of every
+//! algorithm in the paper: σ₁ ≥ σ₂ ≥ …), with matching eigenvector columns.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition `a = v · diag(d) · vᵀ` of a symmetric matrix.
+pub struct EighResult {
+    /// Eigenvalues, descending.
+    pub d: Vec<f64>,
+    /// Orthonormal eigenvectors, column j pairs with d[j].
+    pub v: Matrix,
+}
+
+/// Symmetric eigendecomposition. Only the lower triangle of `a` is read.
+pub fn eigh(a: &Matrix) -> EighResult {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh needs a square matrix");
+    if n == 0 {
+        return EighResult { d: vec![], v: Matrix::zeros(0, 0) };
+    }
+    let mut v = a.clone();
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e);
+
+    // sort descending, permuting eigenvector columns to match
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let ds: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let vs = v.select_cols(&idx);
+    EighResult { d: ds, v: vs }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// On exit `v` holds the accumulated orthogonal transformation,
+/// `d` the diagonal, `e` the subdiagonal (e[0] unused).
+fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+    }
+    for i in (1..n).rev() {
+        // accumulate scale
+        let l = i;
+        let mut h = 0.0f64;
+        let mut scale = 0.0f64;
+        if l > 1 {
+            for k in 0..l {
+                scale += d[k].abs();
+            }
+        }
+        if scale == 0.0 || l <= 1 {
+            e[i] = if l >= 1 { d[l - 1] } else { 0.0 };
+            for j in 0..l {
+                d[j] = v[(l - 1, j)];
+                v[(i, j)] = 0.0;
+                v[(j, i)] = 0.0;
+            }
+        } else {
+            for k in 0..l {
+                d[k] /= scale;
+                h += d[k] * d[k];
+            }
+            let mut f = d[l - 1];
+            let mut g = if f > 0.0 { -h.sqrt() } else { h.sqrt() };
+            e[i] = scale * g;
+            h -= f * g;
+            d[l - 1] = f - g;
+            for j in 0..l {
+                e[j] = 0.0;
+            }
+            // apply similarity transformation to remaining columns
+            for j in 0..l {
+                f = d[j];
+                v[(j, i)] = f;
+                g = e[j] + v[(j, j)] * f;
+                for k in (j + 1)..l {
+                    g += v[(k, j)] * d[k];
+                    e[k] += v[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..l {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..l {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..l {
+                f = d[j];
+                g = e[j];
+                for k in j..l {
+                    let t = v[(k, j)] - (f * e[k] + g * d[k]);
+                    v[(k, j)] = t;
+                }
+                d[j] = v[(l - 1, j)];
+                v[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // accumulate transformations
+    for i in 0..(n - 1) {
+        v[(n - 1, i)] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[(k, i + 1)] * v[(k, j)];
+                }
+                for k in 0..=i {
+                    let t = v[(k, j)] - g * d[k];
+                    v[(k, j)] = t;
+                }
+            }
+        }
+        for k in 0..=i {
+            v[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+        v[(n - 1, j)] = 0.0;
+    }
+    v[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// QL with implicit shifts on a symmetric tridiagonal matrix; accumulates
+/// the rotations into `v` (which enters holding the tred2 transformation).
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    if n == 0 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        // find small subdiagonal element
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l && m < n {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter <= 50, "tql2: no convergence after 50 iterations");
+                // compute implicit shift
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt().copysign(if p < 0.0 { -1.0 } else { 1.0 });
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in (l + 2)..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // implicit QL transformation
+                p = d[m];
+                let mut c = 1.0f64;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0f64;
+                let mut s2 = 0.0f64;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // accumulate transformation
+                    for k in 0..n {
+                        h = v[(k, i + 1)];
+                        v[(k, i + 1)] = s * v[(k, i)] + c * h;
+                        v[(k, i)] = c * v[(k, i)] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gram, matmul};
+    use crate::rng::Rng;
+
+    fn check_eigh(a: &Matrix, tol: f64) {
+        let EighResult { d, v } = eigh(a);
+        let n = a.rows();
+        // descending order
+        for i in 1..n {
+            assert!(d[i - 1] >= d[i] - 1e-12);
+        }
+        // orthonormality of V
+        let vtv = matmul(&v.transpose(), &v);
+        assert!(vtv.sub(&Matrix::eye(n)).max_abs() < 1e-13, "V orth");
+        // reconstruction A = V D Vᵀ
+        let vd = {
+            let mut x = v.clone();
+            for j in 0..n {
+                x.scale_col(j, d[j]);
+            }
+            x
+        };
+        let rec = matmul(&vd, &v.transpose());
+        let scale = 1.0 + a.max_abs();
+        assert!(rec.sub(a).max_abs() < tol * scale, "recon {}", rec.sub(a).max_abs());
+    }
+
+    #[test]
+    fn eigh_small_known() {
+        // [[2,1],[1,2]] has eigenvalues 3, 1
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let EighResult { d, v } = eigh(&a);
+        assert!((d[0] - 3.0).abs() < 1e-14);
+        assert!((d[1] - 1.0).abs() < 1e-14);
+        // eigenvector for 3 is (1,1)/√2 up to sign
+        assert!((v[(0, 0)].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-14);
+    }
+
+    #[test]
+    fn eigh_random_symmetric() {
+        let mut rng = Rng::seed(21);
+        for &n in &[1usize, 2, 3, 5, 10, 40, 101] {
+            let b = Matrix::from_fn(n, n, |_, _| rng.gauss());
+            let a = b.add(&b.transpose()).scale(0.5);
+            check_eigh(&a, 1e-12);
+        }
+    }
+
+    #[test]
+    fn eigh_gram_psd() {
+        // Gram matrices are PSD: eigenvalues must be >= -eps
+        let mut rng = Rng::seed(22);
+        let x = Matrix::from_fn(50, 12, |_, _| rng.gauss());
+        let g = gram(&x);
+        let EighResult { d, .. } = eigh(&g);
+        for &lam in &d {
+            assert!(lam > -1e-10, "negative eigenvalue {lam}");
+        }
+        check_eigh(&g, 1e-11);
+    }
+
+    #[test]
+    fn eigh_rank_deficient_gram() {
+        // Gram of a rank-2 matrix: exactly n-2 (near-)zero eigenvalues
+        let mut rng = Rng::seed(23);
+        let b = Matrix::from_fn(30, 2, |_, _| rng.gauss());
+        let a = b.hstack(&b); // rank 2, 4 cols
+        let g = gram(&a);
+        let EighResult { d, .. } = eigh(&g);
+        assert!(d[0] > 1.0);
+        assert!(d[1] > 1.0);
+        assert!(d[2].abs() < 1e-10 * d[0]);
+        assert!(d[3].abs() < 1e-10 * d[0]);
+        check_eigh(&g, 1e-11);
+    }
+
+    #[test]
+    fn eigh_diagonal_and_identity() {
+        let a = Matrix::from_diag(&[5.0, -1.0, 3.0]);
+        let EighResult { d, .. } = eigh(&a);
+        assert!((d[0] - 5.0).abs() < 1e-14);
+        assert!((d[1] - 3.0).abs() < 1e-14);
+        assert!((d[2] + 1.0).abs() < 1e-14);
+        check_eigh(&Matrix::eye(7), 1e-14);
+    }
+
+    #[test]
+    fn eigh_clustered_eigenvalues() {
+        // matrix with heavily repeated eigenvalues (Devil's-staircase-like)
+        let mut rng = Rng::seed(24);
+        let n = 24;
+        let b = Matrix::from_fn(n, n, |_, _| rng.gauss());
+        let q = crate::linalg::qr::thin_qr(&b).q;
+        let mut lam = vec![0.0; n];
+        for i in 0..n {
+            lam[i] = (1 + i / 6) as f64; // blocks of 6 equal eigenvalues
+        }
+        let mut ql = q.clone();
+        for j in 0..n {
+            ql.scale_col(j, lam[j]);
+        }
+        let a = matmul(&ql, &q.transpose());
+        let a = a.add(&a.transpose()).scale(0.5);
+        check_eigh(&a, 1e-12);
+    }
+}

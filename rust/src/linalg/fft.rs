@@ -1,0 +1,238 @@
+//! Complex FFT — the `F` inside the random mixing matrix Ω = D·F·S·D̃·F·S̃
+//! of Remark 5, and the engine behind the DCT used to synthesize the
+//! paper's test matrices (equation (2)).
+//!
+//! Iterative radix-2 Cooley–Tukey for power-of-two lengths, Bluestein's
+//! chirp-z algorithm for everything else, so any length works. All
+//! transforms here are UNITARY (scaled by 1/√n) so that F, and hence Ω,
+//! is exactly orthogonal as an operator on paired reals.
+
+/// Complex number as (re, im) over parallel slices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComplexVec {
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl ComplexVec {
+    pub fn zeros(n: usize) -> Self {
+        ComplexVec { re: vec![0.0; n], im: vec![0.0; n] }
+    }
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+}
+
+/// Unitary forward FFT, in place: X[k] = (1/√n) Σ x[j] e^{-2πi jk/n}.
+pub fn fft(x: &mut ComplexVec) {
+    transform(x, false);
+    let s = 1.0 / (x.len() as f64).sqrt();
+    for v in x.re.iter_mut().chain(x.im.iter_mut()) {
+        *v *= s;
+    }
+}
+
+/// Unitary inverse FFT, in place: x[j] = (1/√n) Σ X[k] e^{+2πi jk/n}.
+pub fn ifft(x: &mut ComplexVec) {
+    transform(x, true);
+    let s = 1.0 / (x.len() as f64).sqrt();
+    for v in x.re.iter_mut().chain(x.im.iter_mut()) {
+        *v *= s;
+    }
+}
+
+/// Unnormalized transform; `inverse` flips the twiddle sign.
+fn transform(x: &mut ComplexVec, inverse: bool) {
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    if n.is_power_of_two() {
+        radix2(&mut x.re, &mut x.im, inverse);
+    } else {
+        bluestein(x, inverse);
+    }
+}
+
+/// Iterative radix-2 Cooley–Tukey, bit-reversal + butterflies.
+fn radix2(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    debug_assert!(n.is_power_of_two());
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 0..n {
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+        let mut m = n >> 1;
+        while m >= 1 && j & m != 0 {
+            j ^= m;
+            m >>= 1;
+        }
+        j |= m;
+    }
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut cr = 1.0f64;
+            let mut ci = 0.0f64;
+            for k in 0..len / 2 {
+                let a = i + k;
+                let b = i + k + len / 2;
+                let tr = re[b] * cr - im[b] * ci;
+                let ti = re[b] * ci + im[b] * cr;
+                re[b] = re[a] - tr;
+                im[b] = im[a] - ti;
+                re[a] += tr;
+                im[a] += ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Bluestein chirp-z: expresses an arbitrary-length DFT as a convolution,
+/// evaluated with power-of-two FFTs.
+fn bluestein(x: &mut ComplexVec, inverse: bool) {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // chirp: w[j] = e^{sign * πi j²/n}
+    let mut chirp_re = vec![0.0f64; n];
+    let mut chirp_im = vec![0.0f64; n];
+    for jj in 0..n {
+        // j² mod 2n to keep the angle well conditioned
+        let j2 = (jj * jj) % (2 * n);
+        let ang = sign * std::f64::consts::PI * j2 as f64 / n as f64;
+        chirp_re[jj] = ang.cos();
+        chirp_im[jj] = ang.sin();
+    }
+    let m = (2 * n - 1).next_power_of_two();
+    let mut a_re = vec![0.0f64; m];
+    let mut a_im = vec![0.0f64; m];
+    for jj in 0..n {
+        // a[j] = x[j] * chirp[j]
+        a_re[jj] = x.re[jj] * chirp_re[jj] - x.im[jj] * chirp_im[jj];
+        a_im[jj] = x.re[jj] * chirp_im[jj] + x.im[jj] * chirp_re[jj];
+    }
+    let mut b_re = vec![0.0f64; m];
+    let mut b_im = vec![0.0f64; m];
+    // b[j] = conj(chirp[j]) wrapped
+    b_re[0] = chirp_re[0];
+    b_im[0] = -chirp_im[0];
+    for jj in 1..n {
+        b_re[jj] = chirp_re[jj];
+        b_im[jj] = -chirp_im[jj];
+        b_re[m - jj] = chirp_re[jj];
+        b_im[m - jj] = -chirp_im[jj];
+    }
+    radix2(&mut a_re, &mut a_im, false);
+    radix2(&mut b_re, &mut b_im, false);
+    // pointwise multiply, then inverse FFT (unnormalized → divide by m)
+    for jj in 0..m {
+        let tr = a_re[jj] * b_re[jj] - a_im[jj] * b_im[jj];
+        let ti = a_re[jj] * b_im[jj] + a_im[jj] * b_re[jj];
+        a_re[jj] = tr;
+        a_im[jj] = ti;
+    }
+    radix2(&mut a_re, &mut a_im, true);
+    let inv_m = 1.0 / m as f64;
+    for jj in 0..n {
+        // X[k] = chirp[k] * conv[k]
+        let cr = a_re[jj] * inv_m;
+        let ci = a_im[jj] * inv_m;
+        x.re[jj] = cr * chirp_re[jj] - ci * chirp_im[jj];
+        x.im[jj] = cr * chirp_im[jj] + ci * chirp_re[jj];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_dft(x: &ComplexVec, inverse: bool) -> ComplexVec {
+        let n = x.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut out = ComplexVec::zeros(n);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for j in 0..n {
+                let ang = sign * 2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64;
+                let (c, s) = (ang.cos(), ang.sin());
+                sr += x.re[j] * c - x.im[j] * s;
+                si += x.re[j] * s + x.im[j] * c;
+            }
+            let sc = 1.0 / (n as f64).sqrt();
+            out.re[k] = sr * sc;
+            out.im[k] = si * sc;
+        }
+        out
+    }
+
+    fn randvec(rng: &mut Rng, n: usize) -> ComplexVec {
+        ComplexVec {
+            re: (0..n).map(|_| rng.gauss()).collect(),
+            im: (0..n).map(|_| rng.gauss()).collect(),
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_all_lengths() {
+        let mut rng = Rng::seed(41);
+        for &n in &[1usize, 2, 3, 4, 5, 7, 8, 12, 16, 31, 32, 100, 128, 255] {
+            let x = randvec(&mut rng, n);
+            let mut y = x.clone();
+            fft(&mut y);
+            let z = naive_dft(&x, false);
+            for i in 0..n {
+                assert!((y.re[i] - z.re[i]).abs() < 1e-9, "n={n} i={i}");
+                assert!((y.im[i] - z.im[i]).abs() < 1e-9, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip_unitary() {
+        let mut rng = Rng::seed(42);
+        for &n in &[8usize, 17, 64, 100, 257] {
+            let x = randvec(&mut rng, n);
+            let mut y = x.clone();
+            fft(&mut y);
+            // unitarity: norm preserved
+            let nx: f64 = x.re.iter().chain(&x.im).map(|v| v * v).sum();
+            let ny: f64 = y.re.iter().chain(&y.im).map(|v| v * v).sum();
+            assert!((nx - ny).abs() < 1e-9 * nx.max(1.0), "n={n}");
+            ifft(&mut y);
+            for i in 0..n {
+                assert!((y.re[i] - x.re[i]).abs() < 1e-10, "n={n}");
+                assert!((y.im[i] - x.im[i]).abs() < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_impulse() {
+        // delta at 0 → flat spectrum 1/√n
+        let n = 16;
+        let mut x = ComplexVec::zeros(n);
+        x.re[0] = 1.0;
+        fft(&mut x);
+        for i in 0..n {
+            assert!((x.re[i] - 0.25).abs() < 1e-14);
+            assert!(x.im[i].abs() < 1e-14);
+        }
+    }
+}

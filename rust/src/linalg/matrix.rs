@@ -1,0 +1,349 @@
+//! Dense row-major `f64` matrix — the local building block under every
+//! partition of the distributed matrices in `crate::dist`.
+//!
+//! Deliberately minimal: the numerical kernels live in the sibling modules
+//! (`blas`, `qr`, `eigh`, `svd`), mirroring how Spark's MLlib keeps its
+//! `DenseMatrix` dumb and pushes the work into netlib/MKL.
+
+use std::fmt;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length {} != {}x{}", data.len(), rows, cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let mut m = Matrix::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy of the sub-block `rows_range × col_range`.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Keep only the first `k` columns (copy).
+    pub fn take_cols(&self, k: usize) -> Matrix {
+        self.slice(0, self.rows, 0, k)
+    }
+
+    /// Keep only the columns listed in `idx` (copy, in the given order).
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (jj, &j) in idx.iter().enumerate() {
+                dst[jj] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Keep only the rows listed in `idx` (copy, in the given order).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (ii, &i) in idx.iter().enumerate() {
+            out.row_mut(ii).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Stack `self` on top of `other` (both must have the same column count).
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Concatenate `self` with `other` horizontally (same row count).
+    pub fn hstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// Euclidean norms of each column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for j in 0..self.cols {
+                s[j] += r[j] * r[j];
+            }
+        }
+        s.iter().map(|x| x.sqrt()).collect()
+    }
+
+    /// Scale column `j` by `s` in place.
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        for i in 0..self.rows {
+            self[(i, j)] *= s;
+        }
+    }
+
+    /// Elementwise `self - other` (copy).
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Elementwise `self + other` (copy).
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Add `other` into `self` in place.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Scalar multiple (copy).
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>12.4e} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_from_fn() {
+        let z = Matrix::zeros(3, 4);
+        assert_eq!(z.shape(), (3, 4));
+        assert!(z.data().iter().all(|&x| x == 0.0));
+        let e = Matrix::eye(3);
+        assert_eq!(e[(0, 0)], 1.0);
+        assert_eq!(e[(0, 1)], 0.0);
+        let f = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(f[(1, 2)], 5.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_fn(5, 7, |i, j| (i * 7 + j) as f64);
+        let t = a.transpose();
+        assert_eq!(t.shape(), (7, 5));
+        for i in 0..5 {
+            for j in 0..7 {
+                assert_eq!(a[(i, j)], t[(j, i)]);
+            }
+        }
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn slice_and_stack() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let s = a.slice(1, 3, 2, 4);
+        assert_eq!(s.shape(), (2, 2));
+        assert_eq!(s[(0, 0)], 6.0);
+        assert_eq!(s[(1, 1)], 11.0);
+        let top = a.slice(0, 2, 0, 4);
+        let bot = a.slice(2, 4, 0, 4);
+        assert_eq!(top.vstack(&bot), a);
+        let left = a.slice(0, 4, 0, 2);
+        let right = a.slice(0, 4, 2, 4);
+        assert_eq!(left.hstack(&right), a);
+    }
+
+    #[test]
+    fn select_cols_rows() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let c = a.select_cols(&[2, 0]);
+        assert_eq!(c.col(0), vec![2.0, 5.0, 8.0]);
+        assert_eq!(c.col(1), vec![0.0, 3.0, 6.0]);
+        let r = a.select_rows(&[1]);
+        assert_eq!(r.row(0), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+        assert_eq!(a.max_abs(), 4.0);
+        let cn = a.col_norms();
+        assert!((cn[0] - 5.0).abs() < 1e-15);
+        assert_eq!(cn[1], 0.0);
+    }
+
+    #[test]
+    fn arith() {
+        let a = Matrix::from_fn(2, 2, |i, j| (i + j) as f64);
+        let b = a.scale(2.0);
+        assert_eq!(b[(1, 1)], 4.0);
+        assert_eq!(a.add(&a), b);
+        assert!(a.sub(&a).max_abs() == 0.0);
+        let mut c = a.clone();
+        c.add_assign(&a);
+        assert_eq!(c, b);
+    }
+}

@@ -1,0 +1,13 @@
+//! Local dense linear algebra substrate — the "MKL substitute" built from
+//! scratch for this reproduction (the paper's cluster linked Intel MKL;
+//! see DESIGN.md §3 Substitutions).
+
+pub mod blas;
+pub mod dct;
+pub mod eigh;
+pub mod fft;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use matrix::Matrix;

@@ -1,0 +1,213 @@
+//! `dsvd` — the launcher (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   svd       thin SVD of a synthetic tall-skinny matrix (Algorithms 1–4, pre)
+//!   lowrank   rank-l approximation of a synthetic block matrix (7, 8, pre)
+//!   table     reproduce one (or all) of the paper's tables, scaled
+//!   gen       time test-matrix synthesis (Tables 27–29)
+//!   info      environment / backend / artifact status
+//!
+//! Global flags (any order): --executors N --rows-per-part N
+//! --cols-per-part N --fan-in N --workers N --working-precision X
+//! --srft-chains N --seed N --backend native|pjrt --power-iters N
+//! --config FILE
+
+use std::process::ExitCode;
+
+use dsvd::config::{parse_flags, RunConfig};
+use dsvd::harness::{
+    self, paper_tables, run_generation, run_lowrank, run_tall_skinny, LrAlg, Spectrum, TableRow,
+    TsAlg,
+};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let (cfg, extra) = match parse_flags(rest) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "svd" => cmd_svd(&cfg, &extra),
+        "lowrank" => cmd_lowrank(&cfg, &extra),
+        "table" => cmd_table(&cfg, &extra),
+        "gen" => cmd_gen(&cfg, &extra),
+        "info" => cmd_info(&cfg),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{USAGE}").into()),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type CmdResult = Result<(), Box<dyn std::error::Error>>;
+type Extra = std::collections::HashMap<String, String>;
+
+fn get<T: std::str::FromStr>(extra: &Extra, key: &str, default: T) -> Result<T, String>
+where
+    T::Err: std::fmt::Display,
+{
+    match extra.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| format!("bad --{key}: {e}")),
+    }
+}
+
+fn spectrum_arg(extra: &Extra, default_l: usize) -> Result<Spectrum, String> {
+    match extra.get("spectrum").map(String::as_str) {
+        None | Some("geometric") => Ok(Spectrum::Geometric),
+        Some("staircase") => Ok(Spectrum::Staircase(usize::MAX)),
+        Some(s) if s.starts_with("lowrank") => {
+            let l = s.strip_prefix("lowrank:").and_then(|x| x.parse().ok()).unwrap_or(default_l);
+            Ok(Spectrum::LowRank(l))
+        }
+        Some(other) => Err(format!("unknown --spectrum '{other}' (geometric|lowrank[:L]|staircase)")),
+    }
+}
+
+fn print_rows(title: &str, rows: &[TableRow]) {
+    println!("\n=== {title}");
+    println!("{}", TableRow::header());
+    for r in rows {
+        println!("{}", r.format());
+    }
+}
+
+fn cmd_svd(cfg: &RunConfig, extra: &Extra) -> CmdResult {
+    let m: usize = get(extra, "m", 32768)?;
+    let n: usize = get(extra, "n", 256)?;
+    let spectrum = match spectrum_arg(extra, n)? {
+        Spectrum::Staircase(_) => Spectrum::Staircase(n),
+        s => s,
+    };
+    let algs: Vec<TsAlg> = match extra.get("alg").map(String::as_str) {
+        None | Some("all") => TsAlg::ALL.to_vec(),
+        Some("1") => vec![TsAlg::A1],
+        Some("2") => vec![TsAlg::A2],
+        Some("3") => vec![TsAlg::A3],
+        Some("4") => vec![TsAlg::A4],
+        Some("pre") => vec![TsAlg::Pre],
+        Some(o) => return Err(format!("unknown --alg '{o}' (1|2|3|4|pre|all)").into()),
+    };
+    let be = cfg.compute()?;
+    let rows: Vec<TableRow> = algs
+        .iter()
+        .map(|&a| run_tall_skinny(cfg, be.as_ref(), m, n, spectrum, a))
+        .collect();
+    print_rows(&format!("svd m={m} n={n} {spectrum:?} backend={}", be.name()), &rows);
+    Ok(())
+}
+
+fn cmd_lowrank(cfg: &RunConfig, extra: &Extra) -> CmdResult {
+    let m: usize = get(extra, "m", 8192)?;
+    let n: usize = get(extra, "n", 1024)?;
+    let l: usize = get(extra, "l", 10)?;
+    let iters: usize = get(extra, "i", 2)?;
+    let spectrum = match spectrum_arg(extra, l)? {
+        Spectrum::Geometric => Spectrum::LowRank(l), // paper's (5) is the default here
+        Spectrum::Staircase(_) => Spectrum::Staircase(l),
+        s => s,
+    };
+    let algs: Vec<LrAlg> = match extra.get("alg").map(String::as_str) {
+        None | Some("all") => LrAlg::ALL.to_vec(),
+        Some("7") => vec![LrAlg::A7],
+        Some("8") => vec![LrAlg::A8],
+        Some("pre") => vec![LrAlg::Pre],
+        Some(o) => return Err(format!("unknown --alg '{o}' (7|8|pre|all)").into()),
+    };
+    let be = cfg.compute()?;
+    let rows: Vec<TableRow> = algs
+        .iter()
+        .map(|&a| run_lowrank(cfg, be.as_ref(), m, n, l, iters, spectrum, a))
+        .collect();
+    print_rows(
+        &format!("lowrank m={m} n={n} l={l} i={iters} {spectrum:?} backend={}", be.name()),
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_table(cfg: &RunConfig, extra: &Extra) -> CmdResult {
+    let want = extra.get("id").map(String::as_str).unwrap_or("all");
+    let be = cfg.compute()?;
+    let mut ran = 0;
+    for spec in paper_tables() {
+        if want != "all" && spec.id != want {
+            continue;
+        }
+        ran += 1;
+        let rows = harness::run_table(&spec, cfg, be.as_ref());
+        print_rows(
+            &format!(
+                "{} m={} n={} {:?} executors={} {}",
+                spec.id,
+                spec.m,
+                spec.n,
+                spec.spectrum,
+                spec.executors,
+                spec.lowrank.map(|(l, i)| format!("l={l} i={i}")).unwrap_or_default()
+            ),
+            &rows,
+        );
+    }
+    if ran == 0 {
+        return Err(format!("no table matches id '{want}' (try T3..T26 or all)").into());
+    }
+    Ok(())
+}
+
+fn cmd_gen(cfg: &RunConfig, extra: &Extra) -> CmdResult {
+    let m: usize = get(extra, "m", 32768)?;
+    let n: usize = get(extra, "n", 256)?;
+    let spectrum = spectrum_arg(extra, n)?;
+    let be = cfg.compute()?;
+    let metrics = run_generation(cfg, be.as_ref(), m, n, spectrum);
+    println!(
+        "gen m={m} n={n} {spectrum:?}: CPU {} Wall-Clock {} tasks={} shuffle={}B",
+        harness::sci(metrics.cpu_time),
+        harness::sci(metrics.wall_clock),
+        metrics.tasks,
+        metrics.shuffle_bytes
+    );
+    Ok(())
+}
+
+fn cmd_info(cfg: &RunConfig) -> CmdResult {
+    println!("dsvd — randomized distributed PCA/SVD (Li–Kluger–Tygert 2016 reproduction)");
+    println!("config: {cfg:#?}");
+    match dsvd::runtime::PjrtEngine::load_default() {
+        Ok(e) => println!("pjrt: OK (platform = {}, artifacts = {:?})", e.platform(), e.artifact_dir),
+        Err(e) => println!("pjrt: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+const USAGE: &str = "\
+usage: dsvd <command> [flags]
+
+commands:
+  svd      --m N --n N [--spectrum geometric|staircase] [--alg 1|2|3|4|pre|all]
+  lowrank  --m N --n N --l N --i N [--spectrum lowrank|staircase] [--alg 7|8|pre|all]
+  table    [--id T3|T6|T9/T10|...|all]
+  gen      --m N --n N [--spectrum ...]
+  info
+
+global flags:
+  --executors N (180)      --rows-per-part N (1024)  --cols-per-part N (1024)
+  --fan-in N (2)           --workers N (0 = all)     --working-precision X (1e-11)
+  --srft-chains N (2)      --seed N                  --backend native|pjrt
+  --power-iters N (60)     --config FILE";

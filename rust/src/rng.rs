@@ -1,0 +1,209 @@
+//! Deterministic pseudo-randomness for the randomized algorithms.
+//!
+//! Everything in the library that consumes randomness takes an explicit
+//! `Rng`, seeded from the run configuration, so every experiment in
+//! EXPERIMENTS.md is exactly reproducible.
+//!
+//! The generator is SplitMix64 feeding a xoshiro256** state — tiny, fast,
+//! and of more than sufficient quality for the random test matrices,
+//! Gaussian sketches, and the SRFT of Remark 5 of the paper.
+
+/// xoshiro256** seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// stash for the second Box-Muller Gaussian
+    spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64.
+    pub fn seed(seed: u64) -> Self {
+        // SplitMix64 expansion
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent stream (for per-partition randomness).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::seed(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // take the top 53 bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // Lemire-style rejection-free-enough for our sizes
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard Gaussian via Box-Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    /// A uniformly random point on the complex unit circle, as (re, im).
+    /// Used for the diagonal matrices D, D̃ of Remark 5.
+    pub fn unit_circle(&mut self) -> (f64, f64) {
+        let th = 2.0 * std::f64::consts::PI * self.uniform();
+        (th.cos(), th.sin())
+    }
+
+    /// Fisher–Yates–Durstenfeld–Knuth shuffle producing a uniformly random
+    /// permutation of 0..n (Remark 5 / reference [7] of the paper).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+/// Invert a permutation: `out[p[i]] = i`.
+pub fn invert_permutation(p: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; p.len()];
+    for (i, &pi) in p.iter().enumerate() {
+        inv[pi] = i;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed(42);
+        let mut b = Rng::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::seed(1);
+        let n = 20000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            s += u;
+        }
+        assert!((s / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::seed(2);
+        let n = 50000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gauss();
+            m1 += g;
+            m2 += g * g;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::seed(3);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &x in &p {
+            assert!(!seen[x]);
+            seen[x] = true;
+        }
+        let inv = invert_permutation(&p);
+        for i in 0..257 {
+            assert_eq!(inv[p[i]], i);
+        }
+    }
+
+    #[test]
+    fn permutation_uniformish() {
+        // position of element 0 should be ~uniform
+        let mut r = Rng::seed(4);
+        let n = 6;
+        let trials = 12000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let p = r.permutation(n);
+            counts[p.iter().position(|&x| x == 0).unwrap()] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 0.15 * expect, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn unit_circle_on_circle() {
+        let mut r = Rng::seed(5);
+        for _ in 0..100 {
+            let (re, im) = r.unit_circle();
+            assert!((re * re + im * im - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut r = Rng::seed(6);
+        let mut a = r.split(0);
+        let mut b = r.split(1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,66 @@
+//! The compute-backend contract shared by the native Rust kernels and the
+//! AOT-compiled Pallas/PJRT tile engine.
+//!
+//! Every FLOP-dominant per-partition operation the algorithms issue goes
+//! through this trait, so the whole pipeline can run on either backend
+//! (`--backend native|pjrt` on the CLI) and the benches can compare them.
+
+use crate::linalg::{blas, Matrix};
+
+/// FLOP-dominant dense primitives used inside partition tasks.
+pub trait Compute: Sync {
+    /// Gram matrix of the columns: `XᵀX` for an r×n partition block.
+    fn gram(&self, x: &Matrix) -> Matrix;
+
+    /// Plain product `A·B`.
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> Matrix;
+
+    /// Transposed product `Aᵀ·B` (both operands share their row count).
+    fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix;
+
+    /// Human-readable backend name (for logs/metrics).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend built on `crate::linalg::blas`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeCompute;
+
+impl Compute for NativeCompute {
+    fn gram(&self, x: &Matrix) -> Matrix {
+        blas::gram(x)
+    }
+
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        blas::matmul(a, b)
+    }
+
+    fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        blas::matmul_tn(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_backend_contracts() {
+        let mut rng = Rng::seed(61);
+        let be = NativeCompute;
+        let a = Matrix::from_fn(10, 4, |_, _| rng.gauss());
+        let b = Matrix::from_fn(4, 3, |_, _| rng.gauss());
+        let c = be.matmul(&a, &b);
+        assert_eq!(c.shape(), (10, 3));
+        let g = be.gram(&a);
+        assert_eq!(g.shape(), (4, 4));
+        let t = be.matmul_tn(&a, &a);
+        assert!(g.sub(&t).max_abs() < 1e-12);
+        assert_eq!(be.name(), "native");
+    }
+}

@@ -1,0 +1,190 @@
+//! The tile engine: maps arbitrary-shape Gram/GEMM requests from the
+//! distributed layer onto the fixed-shape AOT artifacts (zero-padding at
+//! the ragged edges), and exposes the result as a [`Compute`] backend so
+//! every algorithm can run on the Pallas/PJRT path end to end.
+//!
+//! Tiling mirrors Spark's BlockMatrix blocks: a partition's r×n slab is
+//! cut into TILE×TILE cells; each output tile accumulates its K passes
+//! through the `gemm_acc` artifact (the same accumulation the Pallas
+//! grid does *within* a tile, done here *across* tiles).
+
+use std::sync::Mutex;
+
+use super::compute::Compute;
+use super::pjrt::{PjrtEngine, NARROW, TILE};
+use crate::linalg::Matrix;
+
+/// PJRT-backed [`Compute`] implementation.
+///
+/// The `xla` crate's handles wrap raw C pointers without `Send`/`Sync`;
+/// the PJRT CPU client itself is thread-safe, but we serialize access
+/// through a mutex to stay conservative (the executor pool may call from
+/// several worker threads).
+pub struct PjrtCompute {
+    engine: Mutex<PjrtEngine>,
+}
+
+// SAFETY: access to the engine (and thus to all xla handles) is
+// serialized by the mutex; the PJRT CPU plugin does not use TLS.
+unsafe impl Send for PjrtCompute {}
+unsafe impl Sync for PjrtCompute {}
+
+impl PjrtCompute {
+    pub fn new(engine: PjrtEngine) -> Self {
+        PjrtCompute { engine: Mutex::new(engine) }
+    }
+
+    pub fn load_default() -> anyhow::Result<Self> {
+        Ok(Self::new(PjrtEngine::load_default()?))
+    }
+
+    /// Pack matrix `a`'s tile (ti, tj) into a TILE×TILE (or TILE×w)
+    /// zero-padded row-major buffer.
+    fn pack_tile(a: &Matrix, ti: usize, tj: usize, w: usize) -> Vec<f64> {
+        let mut buf = vec![0.0; TILE * w];
+        let r0 = ti * TILE;
+        let c0 = tj * w;
+        let rmax = a.rows().saturating_sub(r0).min(TILE);
+        let cmax = a.cols().saturating_sub(c0).min(w);
+        for i in 0..rmax {
+            let src = &a.row(r0 + i)[c0..c0 + cmax];
+            buf[i * w..i * w + cmax].copy_from_slice(src);
+        }
+        buf
+    }
+
+    /// Generic padded tiled GEMM through the artifacts.
+    fn matmul_padded(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let engine = self.engine.lock().unwrap();
+        let tm = m.div_ceil(TILE);
+        let tk = k.div_ceil(TILE);
+        // narrow path: thin right-hand sides ride the 256×32 artifact
+        let narrow = n <= NARROW;
+        let w = if narrow { NARROW } else { TILE };
+        let tn = n.div_ceil(w);
+        let mut c = Matrix::zeros(m, n);
+        for ti in 0..tm {
+            for tj in 0..tn {
+                let mut acc = vec![0.0; TILE * w];
+                for tp in 0..tk {
+                    let at = Self::pack_tile(a, ti, tp, TILE);
+                    let bt = Self::pack_tile(b, tp, tj, w);
+                    acc = if narrow {
+                        engine.gemm_acc_narrow_tile(&acc, &at, &bt)
+                    } else {
+                        engine.gemm_acc_tile(&acc, &at, &bt)
+                    }
+                    .expect("PJRT gemm_acc failed");
+                }
+                // unpad into C
+                let r0 = ti * TILE;
+                let c0 = tj * w;
+                let rmax = m.saturating_sub(r0).min(TILE);
+                let cmax = n.saturating_sub(c0).min(w);
+                for i in 0..rmax {
+                    c.row_mut(r0 + i)[c0..c0 + cmax].copy_from_slice(&acc[i * w..i * w + cmax]);
+                }
+            }
+        }
+        c
+    }
+}
+
+impl Compute for PjrtCompute {
+    fn gram(&self, x: &Matrix) -> Matrix {
+        let (m, n) = x.shape();
+        if n <= TILE {
+            // fast path: the gram artifact handles an entire row panel
+            let engine = self.engine.lock().unwrap();
+            let tm = m.div_ceil(TILE);
+            let mut g = vec![0.0; TILE * TILE];
+            for ti in 0..tm {
+                let xt = Self::pack_tile(x, ti, 0, TILE);
+                g = engine.gram_acc_tile(&g, &xt).expect("PJRT gram_acc failed");
+            }
+            return super::pjrt::unpad(&g, TILE, n, n);
+        }
+        // wide case: G tiles via transposed GEMM
+        let xt = x.transpose();
+        self.matmul_padded(&xt, x)
+    }
+
+    fn matmul(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols(), b.rows());
+        self.matmul_padded(a, b)
+    }
+
+    fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), b.rows());
+        let at = a.transpose();
+        self.matmul_padded(&at, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::rng::Rng;
+
+    fn backend() -> Option<PjrtCompute> {
+        PjrtCompute::load_default().ok()
+    }
+
+    fn randmat(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn pjrt_matmul_matches_native_various_shapes() {
+        let Some(be) = backend() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::seed(211);
+        for &(m, k, n) in
+            &[(256, 256, 256), (100, 256, 32), (300, 300, 300), (64, 64, 10), (513, 256, 40)]
+        {
+            let a = randmat(&mut rng, m, k);
+            let b = randmat(&mut rng, k, n);
+            let got = be.matmul(&a, &b);
+            let want = blas::matmul(&a, &b);
+            assert!(got.sub(&want).max_abs() < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn pjrt_gram_matches_native() {
+        let Some(be) = backend() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::seed(212);
+        for &(m, n) in &[(256, 256), (1000, 256), (100, 64), (64, 300)] {
+            let x = randmat(&mut rng, m, n);
+            let got = be.gram(&x);
+            let want = blas::gram(&x);
+            assert!(got.sub(&want).max_abs() < 1e-10, "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn pjrt_matmul_tn_matches_native() {
+        let Some(be) = backend() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = Rng::seed(213);
+        let a = randmat(&mut rng, 200, 40);
+        let b = randmat(&mut rng, 200, 24);
+        let got = be.matmul_tn(&a, &b);
+        let want = blas::matmul_tn(&a, &b);
+        assert!(got.sub(&want).max_abs() < 1e-10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime bridge between the Rust coordinator (L3) and the AOT-compiled
+//! JAX/Pallas artifacts (L2/L1): PJRT client, artifact registry, and the
+//! fixed-shape tile engine. See DESIGN.md §2.
+
+pub mod compute;
+pub mod engine;
+pub mod pjrt;
+
+pub use compute::{Compute, NativeCompute};
+pub use engine::PjrtCompute;
+pub use pjrt::PjrtEngine;

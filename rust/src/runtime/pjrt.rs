@@ -1,0 +1,162 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. One
+//! `PjRtLoadedExecutable` per artifact, compiled once at startup and
+//! reused for every tile operation — Python is never on the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context as _, Result};
+
+use crate::linalg::Matrix;
+
+/// Tile edge — must match `python/compile/model.py::TILE`.
+pub const TILE: usize = 256;
+/// Narrow right-hand-side width — must match `model.py::NARROW`.
+pub const NARROW: usize = 32;
+
+/// The artifact names lowered by aot.py.
+const ARTIFACTS: &[&str] = &["gemm_acc_f64_256", "gemm_acc_f64_256x32", "gram_acc_f64_256"];
+
+/// A compiled-artifact registry bound to one PJRT client.
+pub struct PjrtEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+    pub artifact_dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for &name in ARTIFACTS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?} — run `make artifacts` first"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            exes.insert(name, exe);
+        }
+        Ok(PjrtEngine { client, exes, artifact_dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact location: `$DSVD_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("DSVD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(&self, name: &'static str, inputs: &[xla::Literal]) -> Result<Vec<f64>> {
+        let exe = self.exes.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+
+    /// `C + A·B` on one (TILE×TILE)·(TILE×TILE) tile.
+    pub fn gemm_acc_tile(&self, c: &[f64], a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        debug_assert_eq!(c.len(), TILE * TILE);
+        debug_assert_eq!(a.len(), TILE * TILE);
+        debug_assert_eq!(b.len(), TILE * TILE);
+        let lc = literal_2d(c, TILE, TILE)?;
+        let la = literal_2d(a, TILE, TILE)?;
+        let lb = literal_2d(b, TILE, TILE)?;
+        self.run("gemm_acc_f64_256", &[lc, la, lb])
+    }
+
+    /// `C + A·B` with a narrow (TILE×NARROW) right-hand side.
+    pub fn gemm_acc_narrow_tile(&self, c: &[f64], a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        debug_assert_eq!(c.len(), TILE * NARROW);
+        debug_assert_eq!(a.len(), TILE * TILE);
+        debug_assert_eq!(b.len(), TILE * NARROW);
+        let lc = literal_2d(c, TILE, NARROW)?;
+        let la = literal_2d(a, TILE, TILE)?;
+        let lb = literal_2d(b, TILE, NARROW)?;
+        self.run("gemm_acc_f64_256x32", &[lc, la, lb])
+    }
+
+    /// `G + XᵀX` on one TILE×TILE tile.
+    pub fn gram_acc_tile(&self, g: &[f64], x: &[f64]) -> Result<Vec<f64>> {
+        debug_assert_eq!(g.len(), TILE * TILE);
+        debug_assert_eq!(x.len(), TILE * TILE);
+        let lg = literal_2d(g, TILE, TILE)?;
+        let lx = literal_2d(x, TILE, TILE)?;
+        self.run("gram_acc_f64_256", &[lg, lx])
+    }
+}
+
+fn literal_2d(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Copy `src`'s top-left `r×c` region out of a padded row-major tile.
+pub fn unpad(src: &[f64], src_cols: usize, r: usize, c: usize) -> Matrix {
+    let mut out = Matrix::zeros(r, c);
+    for i in 0..r {
+        out.row_mut(i).copy_from_slice(&src[i * src_cols..i * src_cols + c]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<PjrtEngine> {
+        // tests run from the crate root; skip gracefully if artifacts are
+        // not built (CI runs `make artifacts` first)
+        PjrtEngine::load(Path::new("artifacts")).ok()
+    }
+
+    #[test]
+    fn gemm_acc_tile_matches_native() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = crate::rng::Rng::seed(201);
+        let a: Vec<f64> = (0..TILE * TILE).map(|_| rng.gauss()).collect();
+        let b: Vec<f64> = (0..TILE * TILE).map(|_| rng.gauss()).collect();
+        let c: Vec<f64> = (0..TILE * TILE).map(|_| rng.gauss()).collect();
+        let got = e.gemm_acc_tile(&c, &a, &b).unwrap();
+        let am = Matrix::from_vec(TILE, TILE, a);
+        let bm = Matrix::from_vec(TILE, TILE, b);
+        let mut want = Matrix::from_vec(TILE, TILE, c);
+        crate::linalg::blas::gemm_acc(&mut want, &am, &bm);
+        let got = Matrix::from_vec(TILE, TILE, got);
+        assert!(got.sub(&want).max_abs() < 1e-10, "{}", got.sub(&want).max_abs());
+    }
+
+    #[test]
+    fn gram_acc_tile_matches_native() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = crate::rng::Rng::seed(202);
+        let x: Vec<f64> = (0..TILE * TILE).map(|_| rng.gauss()).collect();
+        let g = vec![0.0; TILE * TILE];
+        let got = e.gram_acc_tile(&g, &x).unwrap();
+        let xm = Matrix::from_vec(TILE, TILE, x);
+        let want = crate::linalg::blas::gram(&xm);
+        let got = Matrix::from_vec(TILE, TILE, got);
+        assert!(got.sub(&want).max_abs() < 1e-10);
+    }
+}

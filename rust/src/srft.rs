@@ -1,0 +1,289 @@
+//! The random orthogonal mixing matrix Ω of Remark 5:
+//!
+//!   Ω = D · F · S · D̃ · F · S̃
+//!
+//! where D, D̃ are diagonal with i.i.d. entries uniform on the complex unit
+//! circle, F is the (unitary) discrete Fourier transform, and S, S̃ are
+//! uniformly random permutations drawn by the
+//! Fisher–Yates–Durstenfeld–Knuth shuffle.
+//!
+//! To act on REAL vectors of length n, the paper pairs consecutive reals
+//! into complex numbers: a real n-vector becomes a complex (n/2)-vector.
+//! A complex unitary map on C^{n/2} preserves the real inner product of
+//! the underlying R^n, so Ω is a real orthogonal n×n matrix in effect.
+//! For odd n the unpaired tail coordinate is mixed into the rest by a
+//! random Givens rotation per stage (keeping Ω exactly orthogonal); the
+//! paper's workloads all have even n, but the library should not care.
+//!
+//! Algorithm 1 computes B = Ω A*, i.e. applies Ω to every column of A*.
+//! Column c of A* is row c of A — so in our row-partitioned layout the
+//! forward transform is applied independently to EVERY ROW of A, which is
+//! embarrassingly parallel across partitions (this is exactly why the
+//! paper replaces a dense Gaussian Ω with an SRFT: O(n log n) per row and
+//! no data movement). The inverse Ω* is applied to the columns of the
+//! small Ṽ factor on the driver (step 6/9 of Algorithms 1/2).
+
+use crate::linalg::fft::{fft, ifft, ComplexVec};
+use crate::rng::{invert_permutation, Rng};
+
+/// One chained stage: (optional tail Givens), permute, FFT, diagonal scale.
+#[derive(Clone)]
+struct Stage {
+    /// permutation applied first (S̃ or S), over the complex slots
+    perm: Vec<usize>,
+    perm_inv: Vec<usize>,
+    /// unit-circle diagonal applied after F (D̃ or D), as (re, im)
+    diag_re: Vec<f64>,
+    diag_im: Vec<f64>,
+    /// odd-n only: Givens rotation mixing the tail real coordinate with
+    /// coordinate `partner` by angle `theta`, applied before packing
+    tail_mix: Option<(usize, f64)>,
+}
+
+/// SRFT mixing operator on real vectors of length `n`.
+///
+/// `chains` is the number of `D·F·S` products chained together; the paper
+/// found 2 sufficient empirically (logarithmically many are provably
+/// sufficient per Ailon–Rauhut). Chain count is exposed for the ablation
+/// bench (`DESIGN.md §6`).
+#[derive(Clone)]
+pub struct Srft {
+    n: usize,
+    nc: usize, // number of fully paired complex slots = floor(n/2)
+    stages: Vec<Stage>,
+}
+
+impl Srft {
+    /// Draw a fresh random Ω for vectors of length `n` with the default
+    /// two chained products (Remark 5).
+    pub fn new(n: usize, rng: &mut Rng) -> Self {
+        Self::with_chains(n, 2, rng)
+    }
+
+    /// Draw Ω with a configurable number of chained D·F·S products.
+    pub fn with_chains(n: usize, chains: usize, rng: &mut Rng) -> Self {
+        assert!(chains >= 1);
+        assert!(n >= 2, "SRFT needs n >= 2");
+        let nc = n / 2;
+        let odd = n % 2 == 1;
+        let stages = (0..chains)
+            .map(|_| {
+                let perm = rng.permutation(nc);
+                let perm_inv = invert_permutation(&perm);
+                let mut diag_re = Vec::with_capacity(nc);
+                let mut diag_im = Vec::with_capacity(nc);
+                for _ in 0..nc {
+                    let (re, im) = rng.unit_circle();
+                    diag_re.push(re);
+                    diag_im.push(im);
+                }
+                let tail_mix = if odd {
+                    Some((rng.below(n - 1), 2.0 * std::f64::consts::PI * rng.uniform()))
+                } else {
+                    None
+                };
+                Stage { perm, perm_inv, diag_re, diag_im, tail_mix }
+            })
+            .collect();
+        Srft { n, nc, stages }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Apply Ω to a real vector in place: x ← Ω x.
+    pub fn forward(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        let mut z = ComplexVec::zeros(self.nc);
+        let mut scratch = ComplexVec::zeros(self.nc);
+        // rightmost factor acts first: Ω = (D F S)·(D̃ F S̃) ⇒ iterate reversed
+        for stage in self.stages.iter().rev() {
+            if let Some((partner, theta)) = stage.tail_mix {
+                givens(x, self.n - 1, partner, theta);
+            }
+            self.pack(x, &mut z);
+            // permute
+            for (i, &p) in stage.perm.iter().enumerate() {
+                scratch.re[i] = z.re[p];
+                scratch.im[i] = z.im[p];
+            }
+            std::mem::swap(&mut z, &mut scratch);
+            // unitary FFT
+            fft(&mut z);
+            // diagonal
+            for i in 0..self.nc {
+                let (re, im) = (z.re[i], z.im[i]);
+                z.re[i] = re * stage.diag_re[i] - im * stage.diag_im[i];
+                z.im[i] = re * stage.diag_im[i] + im * stage.diag_re[i];
+            }
+            self.unpack(&z, x);
+        }
+    }
+
+    /// Apply Ω⁻¹ = Ω* to a real vector in place: x ← Ω* x.
+    pub fn inverse(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        let mut z = ComplexVec::zeros(self.nc);
+        let mut scratch = ComplexVec::zeros(self.nc);
+        for stage in self.stages.iter() {
+            self.pack(x, &mut z);
+            // conjugate diagonal
+            for i in 0..self.nc {
+                let (re, im) = (z.re[i], z.im[i]);
+                z.re[i] = re * stage.diag_re[i] + im * stage.diag_im[i];
+                z.im[i] = -re * stage.diag_im[i] + im * stage.diag_re[i];
+            }
+            // inverse FFT
+            ifft(&mut z);
+            // inverse permutation
+            for (i, &p) in stage.perm_inv.iter().enumerate() {
+                scratch.re[i] = z.re[p];
+                scratch.im[i] = z.im[p];
+            }
+            std::mem::swap(&mut z, &mut scratch);
+            self.unpack(&z, x);
+            if let Some((partner, theta)) = stage.tail_mix {
+                givens(x, self.n - 1, partner, -theta);
+            }
+        }
+    }
+
+    /// Pair consecutive reals (the first 2·nc of them) into complex slots.
+    fn pack(&self, x: &[f64], z: &mut ComplexVec) {
+        for i in 0..self.nc {
+            z.re[i] = x[2 * i];
+            z.im[i] = x[2 * i + 1];
+        }
+    }
+
+    fn unpack(&self, z: &ComplexVec, x: &mut [f64]) {
+        for i in 0..self.nc {
+            x[2 * i] = z.re[i];
+            x[2 * i + 1] = z.im[i];
+        }
+    }
+}
+
+#[inline]
+fn givens(x: &mut [f64], i: usize, j: usize, theta: f64) {
+    let (c, s) = (theta.cos(), theta.sin());
+    let (xi, xj) = (x[i], x[j]);
+    x[i] = c * xi - s * xj;
+    x[j] = s * xi + c * xj;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::dot;
+    use crate::linalg::matrix::Matrix;
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = Rng::seed(51);
+        for &n in &[2usize, 4, 8, 10, 16, 64, 130, 256] {
+            let om = Srft::new(n, &mut rng);
+            let x0: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut x = x0.clone();
+            om.forward(&mut x);
+            om.inverse(&mut x);
+            for i in 0..n {
+                assert!((x[i] - x0[i]).abs() < 1e-12, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_norm_and_inner_products() {
+        let mut rng = Rng::seed(52);
+        let n = 64;
+        let om = Srft::new(n, &mut rng);
+        let x0: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let y0: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let mut x = x0.clone();
+        let mut y = y0.clone();
+        om.forward(&mut x);
+        om.forward(&mut y);
+        let d0 = dot(&x0, &y0);
+        let d1 = dot(&x, &y);
+        assert!((d0 - d1).abs() < 1e-10, "{d0} vs {d1}");
+        let n0 = dot(&x0, &x0);
+        let n1 = dot(&x, &x);
+        assert!((n0 - n1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn as_matrix_is_orthogonal() {
+        // materialize Ω by applying it to unit vectors, check ΩᵀΩ = I
+        let mut rng = Rng::seed(53);
+        for &n in &[16usize, 17] {
+            let om = Srft::new(n, &mut rng);
+            let mut w = Matrix::zeros(n, n);
+            for j in 0..n {
+                let mut e = vec![0.0; n];
+                e[j] = 1.0;
+                om.forward(&mut e);
+                for i in 0..n {
+                    w[(i, j)] = e[i];
+                }
+            }
+            let err = crate::linalg::blas::matmul(&w.transpose(), &w)
+                .sub(&Matrix::eye(n))
+                .max_abs();
+            assert!(err < 1e-12, "n={n} orth err {err}");
+        }
+    }
+
+    #[test]
+    fn mixes_sparse_vectors() {
+        // a single spike must spread its energy widely (flatness is the
+        // whole point of the SRFT before TSQR)
+        let mut rng = Rng::seed(54);
+        let n = 256;
+        let om = Srft::new(n, &mut rng);
+        let mut x = vec![0.0; n];
+        x[17] = 1.0;
+        om.forward(&mut x);
+        let maxabs = x.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+        // perfectly flat would be ~1/√(n/2) ≈ 0.088; allow generous slack
+        assert!(maxabs < 0.5, "spike not mixed: {maxabs}");
+    }
+
+    #[test]
+    fn odd_length_roundtrip() {
+        let mut rng = Rng::seed(55);
+        for &n in &[3usize, 9, 33, 101] {
+            let om = Srft::new(n, &mut rng);
+            let x0: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut x = x0.clone();
+            om.forward(&mut x);
+            // norm preserved
+            let (n0, n1) = (dot(&x0, &x0), dot(&x, &x));
+            assert!((n0 - n1).abs() < 1e-10, "n={n}");
+            om.inverse(&mut x);
+            for i in 0..n {
+                assert!((x[i] - x0[i]).abs() < 1e-12, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn chains_configurable() {
+        let mut rng = Rng::seed(56);
+        for chains in 1..=3 {
+            let om = Srft::with_chains(32, chains, &mut rng);
+            let x0: Vec<f64> = (0..32).map(|_| rng.gauss()).collect();
+            let mut x = x0.clone();
+            om.forward(&mut x);
+            om.inverse(&mut x);
+            for i in 0..32 {
+                assert!((x[i] - x0[i]).abs() < 1e-12);
+            }
+        }
+    }
+}

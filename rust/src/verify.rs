@@ -1,0 +1,226 @@
+//! Accuracy verification — computes the three error columns of the
+//! paper's tables:
+//!
+//! * `‖A − U Σ Vᵀ‖₂` — spectral norm of the reconstruction discrepancy,
+//!   estimated by the power method on `EᵀE` without ever forming `E`
+//!   (the paper: "We used many iterations of the power method in order to
+//!   ascertain the spectral-norm errors").
+//! * `MaxEntry(|UᵀU − I|)` — distributed Gram of the left factor.
+//! * `MaxEntry(|VᵀV − I|)` — local Gram of the (driver-held) right factor.
+//!
+//! Verification time is kept OUT of the algorithm metrics: callers run it
+//! after `Context::take_metrics()`, matching the paper's protocol.
+
+use crate::dist::{Context, DistBlockMatrix, DistRowMatrix};
+use crate::linalg::blas::{matmul, nrm2};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::runtime::compute::Compute;
+
+/// Anything that can act as a linear operator `R^n → R^m` distributedly.
+pub trait LinOp {
+    fn op_rows(&self) -> usize;
+    fn op_cols(&self) -> usize;
+    fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64>;
+    fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64>;
+}
+
+impl LinOp for DistRowMatrix {
+    fn op_rows(&self) -> usize {
+        self.rows()
+    }
+    fn op_cols(&self) -> usize {
+        self.cols()
+    }
+    fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        self.matvec(ctx, x)
+    }
+    fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        self.rmatvec(ctx, y)
+    }
+}
+
+impl LinOp for DistBlockMatrix {
+    fn op_rows(&self) -> usize {
+        self.rows()
+    }
+    fn op_cols(&self) -> usize {
+        self.cols()
+    }
+    fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        self.matvec(ctx, x)
+    }
+    fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        self.rmatvec(ctx, y)
+    }
+}
+
+/// The residual operator `E = A − U diag(s) Vᵀ`, never formed densely.
+pub struct ResidualOp<'a> {
+    pub a: &'a dyn LinOp,
+    pub u: &'a DistRowMatrix,
+    pub s: &'a [f64],
+    pub v: &'a Matrix,
+}
+
+impl<'a> LinOp for ResidualOp<'a> {
+    fn op_rows(&self) -> usize {
+        self.a.op_rows()
+    }
+    fn op_cols(&self) -> usize {
+        self.a.op_cols()
+    }
+    fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        // E x = A x − U (s ⊙ (Vᵀ x))
+        let ax = self.a.op_matvec(ctx, x);
+        let vtx = crate::linalg::blas::gemv_t(self.v, x);
+        let svtx: Vec<f64> = vtx.iter().zip(self.s).map(|(a, b)| a * b).collect();
+        let usv = self.u.matvec(ctx, &svtx);
+        ax.iter().zip(&usv).map(|(a, b)| a - b).collect()
+    }
+    fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        // Eᵀ y = Aᵀ y − V (s ⊙ (Uᵀ y))
+        let aty = self.a.op_rmatvec(ctx, y);
+        let uty = self.u.rmatvec(ctx, y);
+        let suty: Vec<f64> = uty.iter().zip(self.s).map(|(a, b)| a * b).collect();
+        let vs = crate::linalg::blas::gemv(self.v, &suty);
+        aty.iter().zip(&vs).map(|(a, b)| a - b).collect()
+    }
+}
+
+/// Spectral norm of an operator by the power method on `EᵀE`, run for a
+/// fixed (large) number of iterations as the paper does.
+pub fn spectral_norm(ctx: &Context, op: &dyn LinOp, iters: usize, seed: u64) -> f64 {
+    let n = op.op_cols();
+    if n == 0 || op.op_rows() == 0 {
+        return 0.0;
+    }
+    let mut rng = Rng::seed(seed);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let nx = nrm2(&x);
+    for v in x.iter_mut() {
+        *v /= nx;
+    }
+    let mut est = 0.0f64;
+    for _ in 0..iters {
+        let y = op.op_matvec(ctx, &x);
+        let ny = nrm2(&y);
+        if ny == 0.0 {
+            return 0.0;
+        }
+        let z = op.op_rmatvec(ctx, &y);
+        let nz = nrm2(&z);
+        // Two convergent lower bounds on σ₁ for unit x:
+        //   ‖Ex‖, and the Rayleigh-style ‖Eᵀŷ‖ = ‖EᵀEx‖ / ‖Ex‖.
+        est = est.max(ny).max(nz / ny);
+        if nz == 0.0 {
+            return est;
+        }
+        x = z;
+        for v in x.iter_mut() {
+            *v /= nz;
+        }
+    }
+    est
+}
+
+/// `MaxEntry(|UᵀU − I|)` for a distributed factor.
+pub fn max_entry_gram_minus_identity(
+    ctx: &Context,
+    be: &dyn Compute,
+    u: &DistRowMatrix,
+) -> f64 {
+    let g = u.gram(ctx, be);
+    g.sub(&Matrix::eye(g.rows())).max_abs()
+}
+
+/// `MaxEntry(|VᵀV − I|)` for a driver-held factor.
+pub fn max_entry_gram_minus_identity_local(v: &Matrix) -> f64 {
+    let g = matmul(&v.transpose(), v);
+    g.sub(&Matrix::eye(v.cols())).max_abs()
+}
+
+/// The three error columns of the paper's tables for a factorization of a
+/// distributed operator `a`.
+pub struct ErrorReport {
+    pub recon: f64,
+    pub u_orth: f64,
+    pub v_orth: f64,
+}
+
+/// Number of power iterations used for the error columns (the paper used
+/// "many" to be extra careful; the estimate stabilizes long before this).
+pub const POWER_ITERS: usize = 100;
+
+pub fn error_report(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &dyn LinOp,
+    u: &DistRowMatrix,
+    s: &[f64],
+    v: &Matrix,
+) -> ErrorReport {
+    let resid = ResidualOp { a, u, s, v };
+    let recon = spectral_norm(ctx, &resid, POWER_ITERS, 0xECC0);
+    let u_orth = max_entry_gram_minus_identity(ctx, be, u);
+    let v_orth = max_entry_gram_minus_identity_local(v);
+    ErrorReport { recon, u_orth, v_orth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::compute::NativeCompute;
+
+    #[test]
+    fn spectral_norm_of_known_matrix() {
+        let ctx = Context::new(2);
+        // diag(3, 1) padded into 10×2
+        let mut a = Matrix::zeros(10, 2);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        let d = DistRowMatrix::from_matrix(&a, 4);
+        let s = spectral_norm(&ctx, &d, 50, 1);
+        assert!((s - 3.0).abs() < 1e-10, "{s}");
+    }
+
+    #[test]
+    fn residual_op_zero_for_exact_factorization() {
+        let ctx = Context::new(2);
+        let mut rng = Rng::seed(101);
+        let a = Matrix::from_fn(24, 6, |_, _| rng.gauss());
+        let d = DistRowMatrix::from_matrix(&a, 5);
+        let r = crate::linalg::svd::svd(&a);
+        let u = DistRowMatrix::from_matrix(&r.u, 5);
+        let resid = ResidualOp { a: &d, u: &u, s: &r.s, v: &r.v };
+        let norm = spectral_norm(&ctx, &resid, 30, 2);
+        assert!(norm < 1e-12, "{norm}");
+    }
+
+    #[test]
+    fn orthogonality_checks() {
+        let ctx = Context::new(2);
+        let mut rng = Rng::seed(102);
+        let a = Matrix::from_fn(30, 5, |_, _| rng.gauss());
+        let q = crate::linalg::qr::thin_qr(&a).q;
+        let dq = DistRowMatrix::from_matrix(&q, 7);
+        let e = max_entry_gram_minus_identity(&ctx, &NativeCompute, &dq);
+        assert!(e < 1e-13);
+        let e2 = max_entry_gram_minus_identity_local(&q);
+        assert!(e2 < 1e-13);
+        // non-orthogonal factor flagged
+        let bad = DistRowMatrix::from_matrix(&a, 7);
+        let e3 = max_entry_gram_minus_identity(&ctx, &NativeCompute, &bad);
+        assert!(e3 > 0.1);
+    }
+
+    #[test]
+    fn spectral_norm_clustered_top() {
+        // two equal top singular values — power method must still return σ₁
+        let ctx = Context::new(2);
+        let a = Matrix::from_diag(&[2.0, 2.0, 0.5]);
+        let d = DistRowMatrix::from_matrix(&a, 2);
+        let s = spectral_norm(&ctx, &d, 80, 3);
+        assert!((s - 2.0).abs() < 1e-9, "{s}");
+    }
+}

@@ -1,0 +1,246 @@
+//! Integration tests across the whole stack: coordinator invariants
+//! (seeded property sweeps), cross-backend equivalence, determinism, and
+//! the Appendix-A executor-scaling contract.
+
+use dsvd::algs::{algorithm2, algorithm3, algorithm7, LowRankOpts, TallSkinnyOpts};
+use dsvd::config::RunConfig;
+use dsvd::dist::{tree_aggregate, tsqr, Context, DistBlockMatrix, DistRowMatrix};
+use dsvd::gen::{spectrum_geometric, spectrum_lowrank, DctBlockTestMatrix, DctTestMatrix};
+use dsvd::harness::{run_tall_skinny, Spectrum, TsAlg};
+use dsvd::linalg::{blas, Matrix};
+use dsvd::rng::Rng;
+use dsvd::runtime::compute::{Compute, NativeCompute};
+use dsvd::runtime::engine::PjrtCompute;
+
+// ---------------------------------------------------------------------------
+// property sweeps (seeded random shapes — poor man's proptest, no deps)
+// ---------------------------------------------------------------------------
+
+/// TSQR invariants over 24 random (m, n, rows_per_part, fan_in) draws:
+/// Q orthonormal, R upper triangular, Q·R = A, shapes consistent.
+#[test]
+fn property_tsqr_invariants() {
+    let mut meta = Rng::seed(0xBEEF);
+    for case in 0..24 {
+        let n = 2 + meta.below(24);
+        let m = n + 1 + meta.below(400);
+        let rpp = 1 + meta.below(m);
+        let fan_in = 2 + meta.below(7);
+        let ctx = Context::new(8).with_fan_in(fan_in);
+        let mut rng = meta.split(case);
+        let a = Matrix::from_fn(m, n, |_, _| rng.gauss());
+        let d = DistRowMatrix::from_matrix(&a, rpp);
+        let f = tsqr(&ctx, &d);
+        let k = f.r.rows();
+        assert!(k <= n.min(m), "case {case}: k={k} m={m} n={n}");
+        // R upper triangular
+        for i in 0..k {
+            for j in 0..i.min(f.r.cols()) {
+                assert_eq!(f.r[(i, j)], 0.0, "case {case}: R not triangular");
+            }
+        }
+        let ql = f.q.collect(&ctx);
+        let qtq = blas::matmul(&ql.transpose(), &ql);
+        let orth = qtq.sub(&Matrix::eye(k)).max_abs();
+        assert!(orth < 1e-12, "case {case} (m={m} n={n} rpp={rpp} fan={fan_in}): orth {orth}");
+        let rec = blas::matmul(&ql, &f.r).sub(&a).max_abs();
+        assert!(rec < 1e-12 * (1.0 + a.max_abs()), "case {case}: recon {rec}");
+    }
+}
+
+/// treeAggregate == flat fold for random sizes, fan-ins, and executor
+/// counts (the coordinator's core routing/merging invariant).
+#[test]
+fn property_tree_aggregate_equals_flat_fold() {
+    let mut meta = Rng::seed(0xFEED);
+    for case in 0..40 {
+        let count = 1 + meta.below(200);
+        let fan_in = 2 + meta.below(9);
+        let executors = 1 + meta.below(64);
+        let ctx = Context::new(executors).with_fan_in(fan_in);
+        let items: Vec<u64> = (0..count).map(|_| meta.below(1000) as u64).collect();
+        let want: u64 = items.iter().sum();
+        let got = tree_aggregate(&ctx, items, |a, b| a + b, |_| 8).unwrap();
+        assert_eq!(got, want, "case {case}: count={count} fan={fan_in}");
+    }
+}
+
+/// Partition/collect roundtrip and stage-count bookkeeping over random
+/// shapes (the batching/state invariant of the row-matrix layer).
+#[test]
+fn property_partition_roundtrip_and_metrics() {
+    let mut meta = Rng::seed(0xABCD);
+    for case in 0..30 {
+        let m = 1 + meta.below(300);
+        let n = 1 + meta.below(40);
+        let rpp = 1 + meta.below(m + 4);
+        let ctx = Context::new(4);
+        let mut rng = meta.split(100 + case);
+        let a = Matrix::from_fn(m, n, |_, _| rng.gauss());
+        let d = DistRowMatrix::from_matrix(&a, rpp);
+        assert_eq!(d.num_partitions(), m.div_ceil(rpp), "case {case}");
+        assert_eq!(d.collect(&ctx), a, "case {case}");
+        // row_starts tile [0, m) exactly
+        let mut covered = 0usize;
+        for p in &d.parts {
+            assert_eq!(p.row_start, covered, "case {case}: partition gap");
+            covered += p.data.rows();
+        }
+        assert_eq!(covered, m);
+    }
+}
+
+/// Block-matrix products agree with dense math over random grids.
+#[test]
+fn property_blockmatrix_products() {
+    let mut meta = Rng::seed(0xCAFE);
+    for case in 0..15 {
+        let m = 8 + meta.below(120);
+        let n = 8 + meta.below(120);
+        let rpb = 1 + meta.below(m);
+        let cpb = 1 + meta.below(n);
+        let l = 1 + meta.below(8);
+        let ctx = Context::new(6);
+        let mut rng = meta.split(200 + case);
+        let a = Matrix::from_fn(m, n, |_, _| rng.gauss());
+        let w = Matrix::from_fn(n, l, |_, _| rng.gauss());
+        let d = DistBlockMatrix::from_matrix(&a, rpb, cpb);
+        let y = d.matmul_small(&ctx, &NativeCompute, &w);
+        let want = blas::matmul(&a, &w);
+        assert!(
+            y.collect(&ctx).sub(&want).max_abs() < 1e-11,
+            "case {case} (m={m} n={n} rpb={rpb} cpb={cpb} l={l})"
+        );
+        let z = d.rmatmul_small(&ctx, &NativeCompute, &y);
+        let want2 = blas::matmul(&a.transpose(), &want);
+        assert!(z.sub(&want2).max_abs() < 1e-10, "case {case} rmatmul");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// determinism and executor scaling
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_seed_same_factorization() {
+    let cfg = {
+        let mut c = RunConfig::default();
+        c.rows_per_part = 128;
+        c
+    };
+    let be = NativeCompute;
+    let sigma = spectrum_geometric(64);
+    let make = || {
+        let ctx = cfg.context();
+        let a = DctTestMatrix::new(1024, 64, &sigma).generate(&ctx, &be, cfg.rows_per_part);
+        let out = algorithm2(&ctx, &be, &a, &cfg.ts_opts());
+        (out.s, out.v)
+    };
+    let (s1, v1) = make();
+    let (s2, v2) = make();
+    assert_eq!(s1, s2, "singular values must be bit-identical under one seed");
+    assert_eq!(v1.data(), v2.data(), "V must be bit-identical under one seed");
+}
+
+/// Appendix A's contract: shrinking the cluster 10× leaves every error
+/// column unchanged and CPU time comparable; only the wall-clock
+/// accounting moves.
+#[test]
+fn executor_scaling_preserves_errors() {
+    let be = NativeCompute;
+    let mut rows = Vec::new();
+    for executors in [180usize, 18] {
+        let mut cfg = RunConfig::default();
+        cfg.executors = executors;
+        cfg.rows_per_part = 64;
+        cfg.power_iters = 30;
+        rows.push(run_tall_skinny(&cfg, &be, 1024, 64, Spectrum::Geometric, TsAlg::A2));
+    }
+    let (wide, narrow) = (&rows[0], &rows[1]);
+    assert_eq!(wide.recon.to_bits(), narrow.recon.to_bits(), "errors must not depend on E");
+    assert_eq!(wide.u_orth.to_bits(), narrow.u_orth.to_bits());
+    let cpu_ratio = wide.metrics.cpu_time / narrow.metrics.cpu_time;
+    assert!((0.2..5.0).contains(&cpu_ratio), "CPU should be comparable, ratio {cpu_ratio}");
+}
+
+// ---------------------------------------------------------------------------
+// cross-backend equivalence (needs `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pjrt_and_native_agree_end_to_end() {
+    let Ok(pjrt) = PjrtCompute::load_default() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut cfg = RunConfig::default();
+    cfg.rows_per_part = 128;
+    let sigma = spectrum_geometric(64);
+
+    let run = |be: &dyn Compute| {
+        let ctx = cfg.context();
+        let a = DctTestMatrix::new(512, 64, &sigma).generate(&ctx, be, cfg.rows_per_part);
+        algorithm3(&ctx, be, &a, &cfg.ts_opts()).s
+    };
+    let s_native = run(&NativeCompute);
+    let s_pjrt = run(&pjrt);
+    assert_eq!(s_native.len(), s_pjrt.len());
+    for (j, (a, b)) in s_native.iter().zip(&s_pjrt).enumerate() {
+        assert!((a - b).abs() <= 1e-9 * a.abs().max(1e-300), "σ_{j}: {a} vs {b}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// failure injection / degenerate inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_inputs_do_not_panic() {
+    let cfg = {
+        let mut c = RunConfig::default();
+        c.rows_per_part = 8;
+        c
+    };
+    let be = NativeCompute;
+    let ctx = cfg.context();
+
+    // constant matrix (rank 1)
+    let a = DistRowMatrix::from_matrix(&Matrix::from_fn(64, 8, |_, _| 3.0), 8);
+    let out = algorithm2(&ctx, &be, &a, &cfg.ts_opts());
+    assert_eq!(out.s.len(), 1, "constant matrix is rank 1: {:?}", out.s);
+
+    // single-partition, single-column
+    let b = DistRowMatrix::from_matrix(&Matrix::from_fn(16, 2, |i, j| (i + j) as f64), 64);
+    let out = algorithm2(&ctx, &be, &b, &cfg.ts_opts());
+    assert!(!out.s.is_empty());
+
+    // duplicated rows everywhere (numerically rank-deficient the messy way)
+    let mut rng = Rng::seed(7);
+    let base: Vec<f64> = (0..16).map(|_| rng.gauss()).collect();
+    let c = DistRowMatrix::generate(&ctx, 128, 16, 16, |i, row| {
+        let scale = 1.0 + (i % 3) as f64;
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = base[j] * scale;
+        }
+    });
+    let out = algorithm2(&ctx, &be, &c, &cfg.ts_opts());
+    assert_eq!(out.s.len(), 1, "rank-1 by construction: {:?}", out.s);
+}
+
+#[test]
+fn lowrank_rank_exceeding_structure_is_safe() {
+    // ask for l = 12 of an exactly rank-4 matrix
+    let ctx = Context::new(4);
+    let be = NativeCompute;
+    let sigma = spectrum_lowrank(64, 4);
+    let sigma: Vec<f64> = sigma.iter().map(|&s| if s > 0.0 { 1.0 } else { 0.0 }).collect();
+    let a = DctBlockTestMatrix::new(96, 64, &sigma).generate(&ctx, &be, 32, 32);
+    let mut opts = LowRankOpts::new(12, 2);
+    opts.rows_per_part = 32;
+    let out = algorithm7(&ctx, &be, &a, &opts);
+    // the working-precision discards must trim the rank to 4
+    assert_eq!(out.s.len(), 4, "rank must collapse to 4: {:?}", out.s);
+    for s in &out.s {
+        assert!((s - 1.0).abs() < 1e-10);
+    }
+}
