@@ -17,7 +17,7 @@
 use dsvd::config::{Backend, RunConfig};
 use dsvd::harness::{run_lowrank, run_tall_skinny, LrAlg, Spectrum, TableRow, TsAlg};
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let (m, n) = (4096, 256);
     let mut cfg = RunConfig::default();
     cfg.executors = 18;
@@ -83,5 +83,4 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\nfull_pipeline OK — all layers compose, headline claims hold on both backends");
-    Ok(())
 }

@@ -69,7 +69,7 @@ fn main() {
             "  fan-in {fan_in:2}: {t:.3}s real, {} stages, {} KiB shuffled, sim wall {:.3}s",
             m.stages,
             m.shuffle_bytes / 1024,
-            m.driver_elapsed
+            m.wall_clock
         );
     }
 

@@ -60,19 +60,20 @@ fn main() {
     let (cfg_base, be, scale) = bench_config();
     let n = SCALED_N;
 
-    let suites: [(&str, &[PaperRow], usize, usize, Spectrum); 9] = [
-        ("Table 3  (paper m=1,000,000 n=2,000; E=180)", PAPER_T3, SCALED_M[0], 180, Spectrum::Geometric),
-        ("Table 4  (paper m=100,000 n=2,000; E=180)", PAPER_T4, SCALED_M[1], 180, Spectrum::Geometric),
-        ("Table 5  (paper m=10,000 n=2,000; E=180)", PAPER_T5, SCALED_M[2], 180, Spectrum::Geometric),
-        ("Table 11 (Appendix A: E=18)", PAPER_T11, SCALED_M[0], 18, Spectrum::Geometric),
-        ("Table 12 (Appendix A: E=18; paper mirrors Table 4)", PAPER_T4, SCALED_M[1], 18, Spectrum::Geometric),
-        ("Table 13 (Appendix A: E=18; paper mirrors Table 5)", PAPER_T5, SCALED_M[2], 18, Spectrum::Geometric),
-        ("Table 19 (Appendix B: staircase, E=18)", PAPER_T19, SCALED_M[0], 18, Spectrum::Staircase(n)),
-        ("Table 20 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[1], 18, Spectrum::Staircase(n)),
-        ("Table 21 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[2], 18, Spectrum::Staircase(n)),
+    let suites: [(&str, &str, &[PaperRow], usize, usize, Spectrum); 9] = [
+        ("T3", "Table 3  (paper m=1,000,000 n=2,000; E=180)", PAPER_T3, SCALED_M[0], 180, Spectrum::Geometric),
+        ("T4", "Table 4  (paper m=100,000 n=2,000; E=180)", PAPER_T4, SCALED_M[1], 180, Spectrum::Geometric),
+        ("T5", "Table 5  (paper m=10,000 n=2,000; E=180)", PAPER_T5, SCALED_M[2], 180, Spectrum::Geometric),
+        ("T11", "Table 11 (Appendix A: E=18)", PAPER_T11, SCALED_M[0], 18, Spectrum::Geometric),
+        ("T12", "Table 12 (Appendix A: E=18; paper mirrors Table 4)", PAPER_T4, SCALED_M[1], 18, Spectrum::Geometric),
+        ("T13", "Table 13 (Appendix A: E=18; paper mirrors Table 5)", PAPER_T5, SCALED_M[2], 18, Spectrum::Geometric),
+        ("T19", "Table 19 (Appendix B: staircase, E=18)", PAPER_T19, SCALED_M[0], 18, Spectrum::Staircase(n)),
+        ("T20", "Table 20 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[1], 18, Spectrum::Staircase(n)),
+        ("T21", "Table 21 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[2], 18, Spectrum::Staircase(n)),
     ];
 
-    for (title, paper, m, executors, spectrum) in suites {
+    let mut measured: Vec<(String, usize, usize, dsvd::harness::TableRow)> = Vec::new();
+    for (id, title, paper, m, executors, spectrum) in suites {
         let m = (m / scale).max(n * 2);
         let mut cfg = cfg_base.clone();
         cfg.executors = executors;
@@ -85,5 +86,37 @@ fn main() {
             paper,
             &rows,
         );
+        for row in rows {
+            measured.push((id.to_string(), m, n, row));
+        }
+    }
+
+    // machine-readable record for the perf trajectory across PRs:
+    // one object per (table, algorithm) with the timing and error columns
+    let path = std::env::var("DSVD_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_tall_skinny.json".to_string());
+    let mut json = String::from("[\n");
+    for (i, (table, m, n, row)) in measured.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"table\": \"{}\", \"m\": {}, \"n\": {}, \"algorithm\": \"{}\", \
+             \"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
+             \"recon\": {:e}, \"u_orth\": {:e}, \"v_orth\": {:e}}}{}\n",
+            table,
+            m,
+            n,
+            row.algorithm,
+            row.metrics.cpu_time,
+            row.metrics.wall_clock,
+            row.metrics.driver_elapsed,
+            row.recon,
+            row.u_orth,
+            row.v_orth,
+            if i + 1 == measured.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path} ({} rows)", measured.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

@@ -86,11 +86,14 @@ impl RunConfig {
         }
     }
 
-    /// Instantiate the compute backend (PJRT loads + compiles artifacts).
-    pub fn compute(&self) -> anyhow::Result<Arc<dyn Compute>> {
+    /// Instantiate the compute backend (PJRT loads + compiles artifacts;
+    /// without the `pjrt` feature that arm returns a descriptive error).
+    pub fn compute(&self) -> Result<Arc<dyn Compute>, String> {
         Ok(match self.backend {
             Backend::Native => Arc::new(NativeCompute),
-            Backend::Pjrt => Arc::new(PjrtCompute::load_default()?),
+            Backend::Pjrt => {
+                Arc::new(PjrtCompute::load_default().map_err(|e| e.to_string())?)
+            }
         })
     }
 

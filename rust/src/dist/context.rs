@@ -1,0 +1,268 @@
+//! The driver-side execution context — the mini-Spark "SparkContext" of
+//! this reproduction.
+//!
+//! A [`Context`] owns three things:
+//!
+//! * a handle to the worker pool that really executes partition tasks
+//!   (shared process-wide by default, dedicated after
+//!   [`Context::with_workers`]);
+//! * the *logical* cluster shape — `executors` (Table 2's
+//!   `maxExecutors`) and the reduction-tree `fan_in` (Spark
+//!   treeAggregate's depth knob) — which drives the simulated wall-clock
+//!   accounting without changing any numerical result;
+//! * the [`Metrics`] accumulator for the current measurement window.
+//!
+//! The two execution primitives mirror Spark's split of the world:
+//! [`Context::stage`] runs a batch of partition tasks in parallel and
+//! charges them to the task clocks, while [`Context::driver`] runs a
+//! serialized closure on the driver and charges it to both clocks
+//! (driver work stalls the whole cluster).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::metrics::Metrics;
+use crate::pool::{self, WorkerPool};
+
+/// Simulated-cluster driver context. Cheap to create; every experiment
+/// run builds a fresh one from its [`crate::config::RunConfig`].
+pub struct Context {
+    executors: usize,
+    fan_in: usize,
+    pool: Arc<WorkerPool>,
+    metrics: Mutex<Metrics>,
+}
+
+impl Context {
+    /// Context for `executors` logical executors, the shared worker
+    /// pool (`DSVD_WORKERS` / all cores), and fan-in 2.
+    pub fn new(executors: usize) -> Context {
+        Context {
+            executors: executors.max(1),
+            fan_in: 2,
+            pool: Arc::clone(pool::global()),
+            metrics: Mutex::new(Metrics::default()),
+        }
+    }
+
+    /// Set the reduction-tree fan-in (≥ 2).
+    pub fn with_fan_in(mut self, fan_in: usize) -> Context {
+        self.fan_in = fan_in.max(2);
+        self
+    }
+
+    /// Swap in a dedicated pool of exactly `workers` OS threads.
+    pub fn with_workers(mut self, workers: usize) -> Context {
+        self.pool = Arc::new(WorkerPool::new(workers));
+        self
+    }
+
+    pub fn executors(&self) -> usize {
+        self.executors
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.fan_in
+    }
+
+    /// OS worker threads actually executing tasks.
+    pub fn workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Execute one stage of partition tasks in parallel. Results come
+    /// back in task order (deterministic reductions downstream), and the
+    /// stage is charged to the metrics: `cpu_time` gets the sum of task
+    /// durations, `wall_clock` their list-scheduled makespan over the
+    /// logical executors.
+    pub fn stage<'a, T: Send + 'a>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'a>>,
+    ) -> Vec<T> {
+        let t0 = Instant::now();
+        let results = self.pool.run_scoped(tasks);
+        let real = t0.elapsed().as_secs_f64();
+        let durations: Vec<f64> = results.iter().map(|r| r.1).collect();
+        self.metrics.lock().unwrap().record_stage(&durations, self.executors, real);
+        results.into_iter().map(|r| r.0).collect()
+    }
+
+    /// Execute serialized driver-side work; charged to both clocks.
+    pub fn driver<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        // lock taken only after `f` returns, so driver() may nest
+        self.metrics.lock().unwrap().record_driver(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Snapshot of the current metrics window.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Zero the metrics window.
+    pub fn reset_metrics(&self) {
+        *self.metrics.lock().unwrap() = Metrics::default();
+    }
+
+    /// Snapshot and zero in one step.
+    pub fn take_metrics(&self) -> Metrics {
+        std::mem::take(&mut *self.metrics.lock().unwrap())
+    }
+
+    /// Record bytes moved between executors / to the driver.
+    pub(crate) fn add_shuffle(&self, bytes: usize) {
+        self.metrics.lock().unwrap().add_shuffle(bytes);
+    }
+}
+
+/// Split a vector into owned chunks of (at most) `size` items,
+/// preserving order.
+pub(crate) fn chunk_owned<T>(v: Vec<T>, size: usize) -> Vec<Vec<T>> {
+    let size = size.max(1);
+    let mut out = Vec::with_capacity(v.len().div_ceil(size));
+    let mut cur = Vec::with_capacity(size);
+    for x in v {
+        cur.push(x);
+        if cur.len() == size {
+            out.push(std::mem::replace(&mut cur, Vec::with_capacity(size)));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Spark's `treeAggregate`: reduce `items` with `merge` over a tree of
+/// fan-in [`Context::fan_in`], each tree level one parallel stage.
+/// `size_of` estimates the shuffled bytes of an item for the metrics
+/// (every non-first member of a merge group moves to its group leader).
+///
+/// The grouping is by index, and each group folds left-to-right, so the
+/// result is bit-deterministic for a given fan-in regardless of worker
+/// count — and equals a flat left fold whenever `merge` is associative.
+pub fn tree_aggregate<T, M, S>(ctx: &Context, items: Vec<T>, merge: M, size_of: S) -> Option<T>
+where
+    T: Send,
+    M: Fn(T, T) -> T + Sync,
+    S: Fn(&T) -> usize,
+{
+    let mut level = items;
+    if level.is_empty() {
+        return None;
+    }
+    let fan = ctx.fan_in();
+    while level.len() > 1 {
+        let mut moved = 0usize;
+        for g in level.chunks(fan) {
+            for x in &g[1..] {
+                moved += size_of(x);
+            }
+        }
+        ctx.add_shuffle(moved);
+
+        let merge_ref = &merge;
+        let groups = chunk_owned(level, fan);
+        let tasks: Vec<Box<dyn FnOnce() -> T + Send + '_>> = groups
+            .into_iter()
+            .map(|g| {
+                Box::new(move || {
+                    let mut it = g.into_iter();
+                    let mut acc = it.next().expect("chunk_owned never yields empty groups");
+                    for x in it {
+                        acc = merge_ref(acc, x);
+                    }
+                    acc
+                }) as Box<dyn FnOnce() -> T + Send + '_>
+            })
+            .collect();
+        level = ctx.stage(tasks);
+    }
+    level.into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_and_accessors() {
+        let ctx = Context::new(18).with_fan_in(4).with_workers(3);
+        assert_eq!(ctx.executors(), 18);
+        assert_eq!(ctx.fan_in(), 4);
+        assert_eq!(ctx.workers(), 3);
+        // degenerate inputs clamp
+        let ctx = Context::new(0).with_fan_in(0);
+        assert_eq!(ctx.executors(), 1);
+        assert_eq!(ctx.fan_in(), 2);
+    }
+
+    #[test]
+    fn stage_and_driver_feed_the_clocks() {
+        let ctx = Context::new(4).with_workers(2);
+        let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..8)
+            .map(|i| {
+                Box::new(move || {
+                    let mut s = 0u64;
+                    for k in 0..50_000u64 {
+                        s = s.wrapping_add(k ^ i);
+                    }
+                    s
+                }) as Box<dyn FnOnce() -> u64 + Send>
+            })
+            .collect();
+        let out = ctx.stage(tasks);
+        assert_eq!(out.len(), 8);
+        let _ = ctx.driver(|| (0..10_000u64).sum::<u64>());
+        let m = ctx.metrics();
+        assert_eq!(m.stages, 1);
+        assert_eq!(m.tasks, 8);
+        assert!(m.cpu_time > 0.0);
+        assert!(m.wall_clock > 0.0);
+        assert!(m.cpu_time >= m.wall_clock, "cpu {} wall {}", m.cpu_time, m.wall_clock);
+
+        let taken = ctx.take_metrics();
+        assert_eq!(taken.stages, 1);
+        assert_eq!(ctx.metrics(), Metrics::default());
+    }
+
+    #[test]
+    fn chunking_preserves_order_and_sizes() {
+        let c = chunk_owned((0..10).collect::<Vec<_>>(), 4);
+        assert_eq!(c, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        let c = chunk_owned(Vec::<i32>::new(), 4);
+        assert!(c.is_empty());
+        let c = chunk_owned(vec![1], 4);
+        assert_eq!(c, vec![vec![1]]);
+    }
+
+    #[test]
+    fn tree_aggregate_sums_and_counts_shuffle() {
+        let ctx = Context::new(8).with_fan_in(2);
+        let got = tree_aggregate(&ctx, (1..=100u64).collect(), |a, b| a + b, |_| 8);
+        assert_eq!(got, Some(5050));
+        let m = ctx.metrics();
+        // 100 items, fan-in 2: 50+25+13(12.5)+7+4+2+1 merges-ish; at
+        // least ⌈log2 100⌉ = 7 levels, one stage each
+        assert!(m.stages >= 7, "stages {}", m.stages);
+        assert!(m.shuffle_bytes >= 99 * 8 / 2, "shuffle {}", m.shuffle_bytes);
+
+        assert_eq!(tree_aggregate(&ctx, Vec::<u64>::new(), |a, b| a + b, |_| 8), None);
+        assert_eq!(tree_aggregate(&ctx, vec![42u64], |a, b| a + b, |_| 8), Some(42));
+    }
+
+    #[test]
+    fn tree_aggregate_order_is_deterministic() {
+        // a NON-commutative merge exposes any ordering nondeterminism:
+        // string concatenation must come out in index order
+        for workers in [1usize, 2, 4] {
+            let ctx = Context::new(4).with_fan_in(3).with_workers(workers);
+            let items: Vec<String> = (0..13).map(|i| format!("{i:x}")).collect();
+            let got =
+                tree_aggregate(&ctx, items, |a, b| format!("{a}{b}"), |s| s.len()).unwrap();
+            assert_eq!(got, "0123456789abc", "workers={workers}");
+        }
+    }
+}

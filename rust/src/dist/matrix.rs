@@ -1,0 +1,767 @@
+//! Sharded matrices — the RDD-like building blocks of the coordinator.
+//!
+//! * [`DistRowMatrix`] mirrors Spark's `IndexedRowMatrix` grouped into
+//!   row-slab partitions: contiguous row blocks, each a dense local
+//!   [`Matrix`]. This is the layout of every tall-skinny workload
+//!   (problem {1}) and of the left factors everywhere.
+//! * [`DistBlockMatrix`] mirrors Spark's `BlockMatrix`: a grid of dense
+//!   blocks for the wide / low-rank workloads (problem {2}), where no
+//!   full row set fits one executor.
+//!
+//! Every operation that touches partition data runs as a
+//! [`Context::stage`] fan-out over the worker pool, with FLOP-dominant
+//! products dispatched through the pluggable [`Compute`] backend;
+//! reductions (Gram, column norms, transposed products) fold through
+//! [`tree_aggregate`] so their cost and shuffle volume follow the
+//! configured tree fan-in, exactly like Spark's `treeAggregate`.
+
+use crate::linalg::{blas, Matrix};
+use crate::runtime::compute::Compute;
+
+use super::context::{tree_aggregate, Context};
+
+/// One contiguous row slab of a [`DistRowMatrix`].
+#[derive(Clone, Debug)]
+pub struct RowPartition {
+    /// Global index of this slab's first row.
+    pub row_start: usize,
+    /// The dense local rows (`r × n`).
+    pub data: Matrix,
+}
+
+/// `[r0, r1)` bounds for `rows` rows cut into `per` -row slabs.
+fn row_ranges(rows: usize, per: usize) -> Vec<(usize, usize)> {
+    let per = per.max(1);
+    let mut out = Vec::with_capacity(rows.div_ceil(per));
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + per).min(rows);
+        out.push((r0, r1));
+        r0 = r1;
+    }
+    out
+}
+
+/// Cut points `0, step, 2·step, …, len` (always starts with 0 and ends
+/// with `len`; a zero-size input yields just `[0]`... plus `len`).
+fn bounds(len: usize, step: usize) -> Vec<usize> {
+    let step = step.max(1);
+    let mut b: Vec<usize> = (0..len).step_by(step).collect();
+    b.push(len);
+    if b.len() == 1 {
+        // len == 0: keep the [0, 0] convention of an empty grid edge
+        b.insert(0, 0);
+    }
+    b
+}
+
+// ---------------------------------------------------------------------------
+// DistRowMatrix
+// ---------------------------------------------------------------------------
+
+/// Row-partitioned distributed matrix.
+#[derive(Clone)]
+pub struct DistRowMatrix {
+    /// The row slabs, ascending by `row_start`, tiling `[0, rows)`.
+    pub parts: Vec<RowPartition>,
+    rows: usize,
+    cols: usize,
+}
+
+impl DistRowMatrix {
+    /// Assemble from partitions produced by a generation stage. The
+    /// partitions must tile `[0, rows)` contiguously (any order).
+    pub fn from_parts(mut parts: Vec<RowPartition>, rows: usize, cols: usize) -> Self {
+        parts.sort_by_key(|p| p.row_start);
+        let mut covered = 0;
+        for p in &parts {
+            assert_eq!(p.row_start, covered, "partitions must tile [0, rows) contiguously");
+            assert_eq!(p.data.cols(), cols, "partition column-count mismatch");
+            covered += p.data.rows();
+        }
+        assert_eq!(covered, rows, "partitions cover {covered} of {rows} rows");
+        DistRowMatrix { parts, rows, cols }
+    }
+
+    /// Partition a driver-held matrix into `rows_per_part`-row slabs.
+    pub fn from_matrix(a: &Matrix, rows_per_part: usize) -> Self {
+        let parts = row_ranges(a.rows(), rows_per_part)
+            .into_iter()
+            .map(|(r0, r1)| RowPartition { row_start: r0, data: a.slice(r0, r1, 0, a.cols()) })
+            .collect();
+        DistRowMatrix { parts, rows: a.rows(), cols: a.cols() }
+    }
+
+    /// Build distributedly: one task per slab, `fill(i, row)` writing
+    /// global row `i` in place.
+    pub fn generate(
+        ctx: &Context,
+        rows: usize,
+        cols: usize,
+        rows_per_part: usize,
+        fill: impl Fn(usize, &mut [f64]) + Sync,
+    ) -> Self {
+        let fill = &fill;
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> =
+            row_ranges(rows, rows_per_part)
+                .into_iter()
+                .map(|(r0, r1)| {
+                    Box::new(move || {
+                        let mut data = Matrix::zeros(r1 - r0, cols);
+                        for i in r0..r1 {
+                            fill(i, data.row_mut(i - r0));
+                        }
+                        RowPartition { row_start: r0, data }
+                    }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+                })
+                .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix { parts, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Gather every partition to the driver as one dense matrix.
+    pub fn collect(&self, ctx: &Context) -> Matrix {
+        ctx.add_shuffle(8 * self.rows * self.cols);
+        ctx.driver(|| {
+            let mut out = Matrix::zeros(self.rows, self.cols);
+            for p in &self.parts {
+                for i in 0..p.data.rows() {
+                    out.row_mut(p.row_start + i).copy_from_slice(p.data.row(i));
+                }
+            }
+            out
+        })
+    }
+
+    /// Driver-side copy of global rows `[r0, r1)` (no metrics: used by
+    /// partition tasks that pair a co-partitioned factor block-by-block).
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows, "rows_slice {r0}..{r1} of {}", self.rows);
+        let mut out = Matrix::zeros(r1 - r0, self.cols);
+        for p in &self.parts {
+            let ps = p.row_start;
+            let pe = ps + p.data.rows();
+            let s = r0.max(ps);
+            let e = r1.min(pe);
+            for i in s..e {
+                out.row_mut(i - r0).copy_from_slice(p.data.row(i - ps));
+            }
+        }
+        out
+    }
+
+    /// Apply `f` to every row in place (one task per partition).
+    pub fn map_rows(&mut self, ctx: &Context, f: impl Fn(&mut [f64]) + Sync) {
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .parts
+            .iter_mut()
+            .map(|p| {
+                Box::new(move || {
+                    for i in 0..p.data.rows() {
+                        f(p.data.row_mut(i));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        ctx.stage(tasks);
+    }
+
+    /// `A · W` for a small driver-held `W` (n×l): the broadcast-GEMM map
+    /// stage. The result keeps `A`'s partitioning.
+    pub fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        assert_eq!(self.cols, w.rows(), "matmul_small: {}×{} · {:?}", self.rows, self.cols, w.shape());
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || RowPartition {
+                    row_start: p.row_start,
+                    data: be.matmul(&p.data, w),
+                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix { parts, rows: self.rows, cols: w.cols() }
+    }
+
+    /// `AᵀA` (n×n, driver-held) by per-partition Gram + treeAggregate.
+    pub fn gram(&self, ctx: &Context, be: &dyn Compute) -> Matrix {
+        let n = self.cols;
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || be.gram(&p.data)) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |g| 8 * g.rows() * g.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(n, n))
+    }
+
+    /// Euclidean norm of each column (distributed reduce).
+    pub fn col_norms(&self, ctx: &Context) -> Vec<f64> {
+        let n = self.cols;
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let mut s = vec![0.0f64; n];
+                    for i in 0..p.data.rows() {
+                        let r = p.data.row(i);
+                        for j in 0..n {
+                            s[j] += r[j] * r[j];
+                        }
+                    }
+                    s
+                }) as Box<dyn FnOnce() -> Vec<f64> + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        let sums = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; n]);
+        ctx.driver(|| sums.iter().map(|x| x.sqrt()).collect())
+    }
+
+    /// Keep the columns listed in `idx`, in that order.
+    pub fn select_cols(&self, ctx: &Context, idx: &[usize]) -> DistRowMatrix {
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || RowPartition {
+                    row_start: p.row_start,
+                    data: p.data.select_cols(idx),
+                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix { parts, rows: self.rows, cols: idx.len() }
+    }
+
+    /// Scale column `j` by `scales[j]`, in place.
+    pub fn scale_cols(&mut self, ctx: &Context, scales: &[f64]) {
+        assert_eq!(scales.len(), self.cols, "scale_cols length mismatch");
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .parts
+            .iter_mut()
+            .map(|p| {
+                Box::new(move || {
+                    for i in 0..p.data.rows() {
+                        for (v, &s) in p.data.row_mut(i).iter_mut().zip(scales) {
+                            *v *= s;
+                        }
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        ctx.stage(tasks);
+    }
+
+    /// `y = A·x` (length m), one task per partition.
+    pub fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec length mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || (p.row_start, blas::gemv(&p.data, x)))
+                    as Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>
+            })
+            .collect();
+        let chunks = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        for (r0, c) in chunks {
+            y[r0..r0 + c.len()].copy_from_slice(&c);
+        }
+        y
+    }
+
+    /// `z = Aᵀ·y` (length n): per-partition `gemv_t` + treeAggregate.
+    pub fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows, "rmatvec length mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    blas::gemv_t(&p.data, &y[p.row_start..p.row_start + p.data.rows()])
+                }) as Box<dyn FnOnce() -> Vec<f64> + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; self.cols])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DistBlockMatrix
+// ---------------------------------------------------------------------------
+
+/// Block-partitioned distributed matrix (the Spark `BlockMatrix` shape).
+#[derive(Clone)]
+pub struct DistBlockMatrix {
+    /// `grid[bi][bj]` is the dense block at block-row `bi`, block-col `bj`.
+    grid: Vec<Vec<Matrix>>,
+    /// Row cut points, length `num_block_rows + 1`.
+    row_bounds: Vec<usize>,
+    /// Column cut points, length `num_block_cols + 1`.
+    col_bounds: Vec<usize>,
+    rows: usize,
+    cols: usize,
+}
+
+impl DistBlockMatrix {
+    /// Build distributedly from a block generator: one task per block,
+    /// `block(r0, r1, c0, c1)` returning the dense `(r1−r0)×(c1−c0)` cell.
+    pub fn generate_blocks(
+        ctx: &Context,
+        rows: usize,
+        cols: usize,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        block: impl Fn(usize, usize, usize, usize) -> Matrix + Sync,
+    ) -> Self {
+        let rb = bounds(rows, rows_per_block);
+        let cb = bounds(cols, cols_per_block);
+        let nbr = rb.len() - 1;
+        let nbc = cb.len() - 1;
+        let block = &block;
+        let mut coords = Vec::with_capacity(nbr * nbc);
+        for bi in 0..nbr {
+            for bj in 0..nbc {
+                coords.push((rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]));
+            }
+        }
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = coords
+            .into_iter()
+            .map(|(r0, r1, c0, c1)| {
+                Box::new(move || {
+                    let b = block(r0, r1, c0, c1);
+                    assert_eq!(
+                        b.shape(),
+                        (r1 - r0, c1 - c0),
+                        "block generator returned a wrong-shape cell"
+                    );
+                    b
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let flat = ctx.stage(tasks);
+        let mut it = flat.into_iter();
+        let grid: Vec<Vec<Matrix>> =
+            (0..nbr).map(|_| (0..nbc).map(|_| it.next().expect("one cell per task")).collect()).collect();
+        DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows, cols }
+    }
+
+    /// Build distributedly from an entrywise generator.
+    pub fn generate(
+        ctx: &Context,
+        rows: usize,
+        cols: usize,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        entry: impl Fn(usize, usize) -> f64 + Sync,
+    ) -> Self {
+        let entry = &entry;
+        Self::generate_blocks(ctx, rows, cols, rows_per_block, cols_per_block, move |r0, r1, c0, c1| {
+            Matrix::from_fn(r1 - r0, c1 - c0, |i, j| entry(r0 + i, c0 + j))
+        })
+    }
+
+    /// Partition a driver-held matrix into a block grid.
+    pub fn from_matrix(a: &Matrix, rows_per_block: usize, cols_per_block: usize) -> Self {
+        let rb = bounds(a.rows(), rows_per_block);
+        let cb = bounds(a.cols(), cols_per_block);
+        let grid: Vec<Vec<Matrix>> = (0..rb.len() - 1)
+            .map(|bi| {
+                (0..cb.len() - 1)
+                    .map(|bj| a.slice(rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]))
+                    .collect()
+            })
+            .collect();
+        DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows: a.rows(), cols: a.cols() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(block rows, block cols)` of the grid.
+    pub fn num_blocks(&self) -> (usize, usize) {
+        (self.row_bounds.len() - 1, self.col_bounds.len() - 1)
+    }
+
+    /// Gather to the driver as one dense matrix.
+    pub fn collect(&self, ctx: &Context) -> Matrix {
+        ctx.add_shuffle(8 * self.rows * self.cols);
+        ctx.driver(|| {
+            let mut out = Matrix::zeros(self.rows, self.cols);
+            for (bi, row_blocks) in self.grid.iter().enumerate() {
+                let r0 = self.row_bounds[bi];
+                for (bj, b) in row_blocks.iter().enumerate() {
+                    let c0 = self.col_bounds[bj];
+                    for i in 0..b.rows() {
+                        out.row_mut(r0 + i)[c0..c0 + b.cols()].copy_from_slice(b.row(i));
+                    }
+                }
+            }
+            out
+        })
+    }
+
+    /// `A · W` for a small driver-held `W` (n×l): one task per block-row,
+    /// accumulating its blocks' partial products; the result is a
+    /// [`DistRowMatrix`] partitioned by the block-row grid.
+    pub fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        assert_eq!(self.cols, w.rows(), "matmul_small: block cols vs W rows");
+        let l = w.cols();
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    let mut acc = Matrix::zeros(r1 - r0, l);
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let ws = w.slice(cb[bj], cb[bj + 1], 0, l);
+                        acc.add_assign(&be.matmul(b, &ws));
+                    }
+                    RowPartition { row_start: r0, data: acc }
+                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix { parts, rows: self.rows, cols: l }
+    }
+
+    /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l) — the
+    /// `B = QᵀA` step of Algorithm 6 read transposed. One task per
+    /// block-row pairs its blocks with the matching rows of `Q`; the
+    /// n×l partials fold through treeAggregate to the driver.
+    pub fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
+        let l = q.cols();
+        let n = self.cols;
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    let qs = q.rows_slice(r0, r1);
+                    let mut acc = Matrix::zeros(n, l);
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let partial = be.matmul_tn(b, &qs); // (c1−c0) × l
+                        for (i, c) in (cb[bj]..cb[bj + 1]).enumerate() {
+                            acc.row_mut(c).copy_from_slice(partial.row(i));
+                        }
+                    }
+                    acc
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(n, l))
+    }
+
+    /// `y = A·x` (length m), one task per block-row.
+    pub fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec length mismatch");
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        let tasks: Vec<Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    let mut y = vec![0.0f64; r1 - r0];
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let part = blas::gemv(b, &x[cb[bj]..cb[bj + 1]]);
+                        for (yi, pi) in y.iter_mut().zip(&part) {
+                            *yi += pi;
+                        }
+                    }
+                    (r0, y)
+                }) as Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>
+            })
+            .collect();
+        let chunks = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        for (r0, c) in chunks {
+            y[r0..r0 + c.len()].copy_from_slice(&c);
+        }
+        y
+    }
+
+    /// `z = Aᵀ·y` (length n): per-block-row partials + treeAggregate.
+    pub fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows, "rmatvec length mismatch");
+        let n = self.cols;
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    let mut z = vec![0.0f64; n];
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let part = blas::gemv_t(b, &y[r0..r1]);
+                        for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
+                            *zi += pi;
+                        }
+                    }
+                    z
+                }) as Box<dyn FnOnce() -> Vec<f64> + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::compute::NativeCompute;
+
+    fn randmat(seed: u64, m: usize, n: usize) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn row_matrix_roundtrip_and_shapes() {
+        let ctx = Context::new(4);
+        let a = randmat(1, 37, 5);
+        let d = DistRowMatrix::from_matrix(&a, 8);
+        assert_eq!(d.rows(), 37);
+        assert_eq!(d.cols(), 5);
+        assert_eq!(d.num_partitions(), 5);
+        assert_eq!(d.collect(&ctx), a);
+        assert_eq!(d.rows_slice(3, 19), a.slice(3, 19, 0, 5));
+    }
+
+    #[test]
+    fn from_parts_reorders_and_validates() {
+        let a = randmat(2, 10, 3);
+        let p0 = RowPartition { row_start: 0, data: a.slice(0, 4, 0, 3) };
+        let p1 = RowPartition { row_start: 4, data: a.slice(4, 10, 0, 3) };
+        let d = DistRowMatrix::from_parts(vec![p1, p0], 10, 3);
+        assert_eq!(d.parts[0].row_start, 0);
+        let ctx = Context::new(2);
+        assert_eq!(d.collect(&ctx), a);
+    }
+
+    #[test]
+    fn generate_fills_global_rows() {
+        let ctx = Context::new(3);
+        let d = DistRowMatrix::generate(&ctx, 25, 4, 7, |i, row| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 10 + j) as f64;
+            }
+        });
+        let full = d.collect(&ctx);
+        assert_eq!(full[(13, 2)], 132.0);
+        assert_eq!(full[(24, 3)], 243.0);
+    }
+
+    #[test]
+    fn row_ops_match_dense() {
+        let ctx = Context::new(4);
+        let a = randmat(3, 60, 7);
+        let d = DistRowMatrix::from_matrix(&a, 9);
+        let be = NativeCompute;
+
+        let w = randmat(4, 7, 3);
+        let y = d.matmul_small(&ctx, &be, &w);
+        assert!(y.collect(&ctx).sub(&blas::matmul(&a, &w)).max_abs() < 1e-12);
+
+        let g = d.gram(&ctx, &be);
+        assert!(g.sub(&blas::gram(&a)).max_abs() < 1e-11);
+
+        let cn = d.col_norms(&ctx);
+        for (got, want) in cn.iter().zip(a.col_norms()) {
+            assert!((got - want).abs() < 1e-11);
+        }
+
+        let sel = d.select_cols(&ctx, &[5, 0, 2]);
+        assert_eq!(sel.collect(&ctx), a.select_cols(&[5, 0, 2]));
+
+        let mut scaled = d.clone();
+        scaled.scale_cols(&ctx, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let mut want = a.clone();
+        for j in 0..7 {
+            want.scale_col(j, (j + 1) as f64);
+        }
+        assert!(scaled.collect(&ctx).sub(&want).max_abs() < 1e-13);
+
+        let x: Vec<f64> = (0..7).map(|i| i as f64 - 3.0).collect();
+        let yv = d.matvec(&ctx, &x);
+        let ym = blas::gemv(&a, &x);
+        for (g, w) in yv.iter().zip(&ym) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        let z: Vec<f64> = (0..60).map(|i| (i % 5) as f64).collect();
+        let zv = d.rmatvec(&ctx, &z);
+        let zm = blas::gemv_t(&a, &z);
+        for (g, w) in zv.iter().zip(&zm) {
+            assert!((g - w).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn map_rows_applies_in_place() {
+        let ctx = Context::new(2);
+        let a = randmat(5, 20, 4);
+        let mut d = DistRowMatrix::from_matrix(&a, 6);
+        d.map_rows(&ctx, |row| {
+            for v in row.iter_mut() {
+                *v *= 2.0;
+            }
+        });
+        assert!(d.collect(&ctx).sub(&a.scale(2.0)).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn block_matrix_roundtrip_and_products() {
+        let ctx = Context::new(4);
+        let a = randmat(6, 33, 21);
+        let d = DistBlockMatrix::from_matrix(&a, 10, 8);
+        assert_eq!(d.rows(), 33);
+        assert_eq!(d.cols(), 21);
+        assert_eq!(d.num_blocks(), (4, 3));
+        assert_eq!(d.collect(&ctx), a);
+        let be = NativeCompute;
+
+        let w = randmat(7, 21, 4);
+        let y = d.matmul_small(&ctx, &be, &w);
+        assert!(y.collect(&ctx).sub(&blas::matmul(&a, &w)).max_abs() < 1e-12);
+
+        let z = d.rmatmul_small(&ctx, &be, &y);
+        let want = blas::matmul(&a.transpose(), &blas::matmul(&a, &w));
+        assert!(z.sub(&want).max_abs() < 1e-11);
+
+        let x: Vec<f64> = (0..21).map(|i| (i as f64).sin()).collect();
+        let yv = d.matvec(&ctx, &x);
+        let ym = blas::gemv(&a, &x);
+        for (g, w) in yv.iter().zip(&ym) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        let yy: Vec<f64> = (0..33).map(|i| (i as f64).cos()).collect();
+        let zv = d.rmatvec(&ctx, &yy);
+        let zm = blas::gemv_t(&a, &yy);
+        for (g, w) in zv.iter().zip(&zm) {
+            assert!((g - w).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn block_generators_agree() {
+        let ctx = Context::new(2);
+        let f = |i: usize, j: usize| (i * 100 + j) as f64;
+        let by_entry = DistBlockMatrix::generate(&ctx, 15, 11, 4, 5, f);
+        let by_block = DistBlockMatrix::generate_blocks(&ctx, 15, 11, 4, 5, |r0, r1, c0, c1| {
+            Matrix::from_fn(r1 - r0, c1 - c0, |i, j| f(r0 + i, c0 + j))
+        });
+        assert_eq!(by_entry.collect(&ctx), by_block.collect(&ctx));
+    }
+
+    #[test]
+    fn stages_are_counted_per_operation() {
+        let ctx = Context::new(4);
+        let a = randmat(8, 64, 6);
+        let d = DistRowMatrix::from_matrix(&a, 8);
+        ctx.reset_metrics();
+        let _ = d.gram(&ctx, &NativeCompute);
+        let m = ctx.take_metrics();
+        // 8 partition tasks + ⌈log2 8⌉ = 3 merge levels
+        assert!(m.tasks >= 8 + 4 + 2 + 1, "tasks {}", m.tasks);
+        assert!(m.stages >= 4, "stages {}", m.stages);
+        assert!(m.shuffle_bytes > 0);
+        assert!(m.cpu_time >= m.wall_clock);
+    }
+}

@@ -1,0 +1,138 @@
+//! Per-run execution metrics — the "CPU Time" and "Wall-Clock" columns
+//! of the paper's tables, plus the scheduler bookkeeping the benches
+//! report (stage/task counts, shuffled bytes).
+//!
+//! Two clocks are kept deliberately distinct:
+//!
+//! * `cpu_time` — the sum of measured task durations plus driver-side
+//!   work. Independent of how many OS workers or logical executors run
+//!   the job (the paper's Appendix A contract: shrinking the cluster
+//!   10× leaves CPU time comparable).
+//! * `wall_clock` — the *simulated* elapsed time of the same task
+//!   durations list-scheduled onto `executors` logical executors, the
+//!   way Spark's greedy scheduler places tasks. This is the column that
+//!   moves when `--executors` changes, exactly as in Tables 3–5 vs
+//!   11–13.
+//!
+//! `driver_elapsed` additionally records the *real* elapsed seconds the
+//! driver observed (stages + serialized driver sections) — the number
+//! that shrinks when `DSVD_WORKERS` grows on a multi-core machine.
+//!
+//! Invariant: `cpu_time >= wall_clock` always (a makespan over E ≥ 1
+//! executors can never exceed the serial sum, and driver work adds to
+//! both sides equally).
+
+/// Accumulated metrics for one measurement window (between
+/// `Context::reset_metrics` and `Context::take_metrics`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    /// Total task + driver compute, seconds.
+    pub cpu_time: f64,
+    /// Simulated wall clock on `executors` logical executors, seconds.
+    pub wall_clock: f64,
+    /// Real elapsed seconds observed by the driver thread.
+    pub driver_elapsed: f64,
+    /// Number of stages executed.
+    pub stages: usize,
+    /// Number of partition tasks executed.
+    pub tasks: usize,
+    /// Bytes moved between executors (tree merges) or to the driver.
+    pub shuffle_bytes: usize,
+}
+
+impl Metrics {
+    /// Fold one completed stage into the totals.
+    pub(crate) fn record_stage(&mut self, durations: &[f64], executors: usize, real_elapsed: f64) {
+        self.stages += 1;
+        self.tasks += durations.len();
+        self.cpu_time += durations.iter().sum::<f64>();
+        self.wall_clock += simulate_makespan(durations, executors);
+        self.driver_elapsed += real_elapsed;
+    }
+
+    /// Fold one serialized driver-side section into the totals.
+    pub(crate) fn record_driver(&mut self, secs: f64) {
+        self.cpu_time += secs;
+        self.wall_clock += secs;
+        self.driver_elapsed += secs;
+    }
+
+    pub(crate) fn add_shuffle(&mut self, bytes: usize) {
+        self.shuffle_bytes += bytes;
+    }
+}
+
+/// Greedy list-scheduling makespan: tasks are placed in submission order
+/// onto the least-loaded of `executors` logical executors (Spark's
+/// scheduler modulo locality). Returns the maximum executor load.
+pub fn simulate_makespan(durations: &[f64], executors: usize) -> f64 {
+    let e = executors.max(1);
+    if durations.is_empty() {
+        return 0.0;
+    }
+    if durations.len() <= e {
+        return durations.iter().cloned().fold(0.0, f64::max);
+    }
+    let mut loads = vec![0.0f64; e];
+    for &d in durations {
+        let mut idx = 0;
+        let mut best = f64::INFINITY;
+        for (i, &v) in loads.iter().enumerate() {
+            if v < best {
+                best = v;
+                idx = i;
+            }
+        }
+        loads[idx] += d;
+    }
+    loads.iter().cloned().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_edges() {
+        assert_eq!(simulate_makespan(&[], 4), 0.0);
+        // fewer tasks than executors: the longest task dominates
+        assert_eq!(simulate_makespan(&[3.0, 1.0], 8), 3.0);
+        // one executor: serial sum
+        assert_eq!(simulate_makespan(&[1.0, 1.0, 1.0, 1.0], 1), 4.0);
+        // greedy placement: [3] vs [1,1,1]
+        assert_eq!(simulate_makespan(&[3.0, 1.0, 1.0, 1.0], 2), 3.0);
+    }
+
+    #[test]
+    fn makespan_bounded_by_sum_and_max() {
+        let d = [0.5, 2.0, 1.0, 0.25, 0.25, 1.5, 0.75];
+        let sum: f64 = d.iter().sum();
+        let max = 2.0;
+        for e in 1..10 {
+            let m = simulate_makespan(&d, e);
+            assert!(m <= sum + 1e-12, "e={e}");
+            assert!(m >= max - 1e-12, "e={e}");
+            assert!(m >= sum / e as f64 - 1e-12, "e={e}");
+        }
+    }
+
+    #[test]
+    fn cpu_never_below_wall() {
+        let mut m = Metrics::default();
+        m.record_stage(&[1.0, 2.0, 0.5], 2, 0.1);
+        m.record_driver(0.3);
+        m.record_stage(&[0.25; 16], 4, 0.05);
+        assert!(m.cpu_time >= m.wall_clock);
+        assert_eq!(m.stages, 2);
+        assert_eq!(m.tasks, 19);
+    }
+
+    #[test]
+    fn take_semantics_via_default() {
+        let mut m = Metrics::default();
+        m.add_shuffle(1024);
+        let taken = std::mem::take(&mut m);
+        assert_eq!(taken.shuffle_bytes, 1024);
+        assert_eq!(m, Metrics::default());
+    }
+}

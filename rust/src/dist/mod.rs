@@ -1,0 +1,38 @@
+//! `dist` — the from-scratch mini-Spark substrate the paper's
+//! algorithms are written against.
+//!
+//! The layer models a Spark cluster faithfully enough for the paper's
+//! experiments to be reproduced on one machine, while executing for
+//! real on a worker-thread pool:
+//!
+//! | piece | Spark analogue | here |
+//! |---|---|---|
+//! | [`Context`] | `SparkContext` | stage/driver split + metrics |
+//! | [`pool::WorkerPool`] | executor JVMs | OS threads (`DSVD_WORKERS`) |
+//! | [`DistRowMatrix`] | `IndexedRowMatrix` | contiguous row slabs |
+//! | [`DistBlockMatrix`] | `BlockMatrix` | dense block grid |
+//! | [`tree_aggregate`] | `treeAggregate` | fan-in-wide parallel merges |
+//! | [`tsqr`] / [`tsqr_r`] | modified `computeSVD` QR | reduction-tree TSQR |
+//! | [`Metrics`] | Spark UI stage metrics | CPU/wall/shuffle accounting |
+//!
+//! Determinism is a hard guarantee: stage results return in task order
+//! and every reduction folds groups by index, so the factorizations are
+//! bit-identical for a given seed regardless of `DSVD_WORKERS` or
+//! scheduling (see `tests/integration.rs::same_seed_same_factorization`).
+//!
+//! See `src/dist/README.md` for the design rationale and knobs.
+
+pub mod context;
+pub mod matrix;
+pub mod metrics;
+pub mod tsqr;
+
+// The worker pool lives at the crate root (`crate::pool`) so the local
+// BLAS kernels can share it without a linalg→dist layering cycle;
+// re-exported here because it is conceptually part of this layer.
+pub use crate::pool;
+
+pub use context::{tree_aggregate, Context};
+pub use matrix::{DistBlockMatrix, DistRowMatrix, RowPartition};
+pub use metrics::{simulate_makespan, Metrics};
+pub use tsqr::{tsqr, tsqr_r, TsqrFactors};

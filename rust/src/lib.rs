@@ -23,6 +23,7 @@ pub mod linalg;
 pub mod config;
 pub mod gen;
 pub mod harness;
+pub mod pool;
 pub mod rng;
 pub mod runtime;
 pub mod srft;

@@ -10,6 +10,56 @@ const MC: usize = 64;
 const KC: usize = 128;
 const NC: usize = 256;
 
+/// Base row-chunk size for the pool-parallel Gram / transposed-GEMM
+/// paths. Fixed (not derived from the worker count) so the partial-sum
+/// merge order — and therefore the floating-point result — is identical
+/// no matter how many workers run (`DSVD_WORKERS` must not change bits).
+const PAR_CHUNK_ROWS: usize = 512;
+/// Minimum `rows × cols` before the chunked path is worth the fan-out.
+const PAR_MIN_ELEMS: usize = 1 << 17;
+/// Cap on simultaneous partial accumulators: every chunk holds a full
+/// n×n (or kₐ×k_b) partial until the merge, so peak memory is
+/// `chunks · n²` — for very tall inputs the chunk grows to keep the
+/// partial count (and memory) bounded while staying shape-only.
+const PAR_MAX_CHUNKS: usize = 64;
+
+/// Fixed row chunking for the reduction kernels, or `None` when the
+/// problem is too small. The decision depends ONLY on the input shape —
+/// never on pool state — so the summation tree (and therefore every
+/// bit of the result) is a pure function of the input: the same chunks
+/// are computed inline when the pool cannot parallelize.
+fn par_row_ranges(m: usize, work_cols: usize) -> Option<Vec<(usize, usize)>> {
+    if m < 2 * PAR_CHUNK_ROWS || m.saturating_mul(work_cols) < PAR_MIN_ELEMS {
+        return None;
+    }
+    let chunk = PAR_CHUNK_ROWS.max(m.div_ceil(PAR_MAX_CHUNKS));
+    Some((0..m).step_by(chunk).map(|r0| (r0, (r0 + chunk).min(m))).collect())
+}
+
+/// Run `kernel` over every row chunk — across the shared pool when it
+/// can parallelize, inline otherwise (`run_scoped` falls back to
+/// in-order sequential execution inside workers or 1-thread pools) —
+/// and merge the partial accumulators in chunk order. Either way the
+/// merge order, and hence the floating-point result, is identical.
+fn par_reduce(
+    ranges: Vec<(usize, usize)>,
+    kernel: impl Fn(usize, usize) -> Matrix + Sync,
+) -> Matrix {
+    let kernel = &kernel;
+    let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = ranges
+        .into_iter()
+        .map(|(r0, r1)| {
+            Box::new(move || kernel(r0, r1)) as Box<dyn FnOnce() -> Matrix + Send + '_>
+        })
+        .collect();
+    let mut parts = crate::pool::global().run_scoped(tasks).into_iter();
+    let mut acc = parts.next().expect("at least one row chunk").0;
+    for (p, _) in parts {
+        acc.add_assign(&p);
+    }
+    acc
+}
+
 /// C = A · B (plain).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch {:?}x{:?}", a.shape(), b.shape());
@@ -80,16 +130,32 @@ pub fn gemm_acc(c: &mut Matrix, a: &Matrix, b: &Matrix) {
 
 /// C = Aᵀ · B  (A is m×k used as k-tall: result is A.cols × B.cols).
 /// This is the Gram-style kernel: for `gram`, call with a == b.
+///
+/// §Perf: the row accumulation is a pure reduction over rows, so for
+/// tall inputs it is chunked across the shared worker pool and the
+/// partial accumulators merged in chunk order (deterministic; see
+/// `PAR_CHUNK_ROWS`). Driver-side hot paths scale with the same knob
+/// (`DSVD_WORKERS`) as the distributed stages.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
     let (m, ka) = a.shape();
+    let kb = b.cols();
+    match par_row_ranges(m, ka.max(kb)) {
+        Some(ranges) => par_reduce(ranges, |r0, r1| matmul_tn_range(a, b, r0, r1)),
+        None => matmul_tn_range(a, b, 0, m),
+    }
+}
+
+/// Serial kernel for `matmul_tn` restricted to rows `[r0, r1)`.
+/// Row-major friendly: accumulates outer products of rows of A and B.
+fn matmul_tn_range(a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
+    let ka = a.cols();
     let kb = b.cols();
     let mut c = Matrix::zeros(ka, kb);
     let adata = a.data();
     let bdata = b.data();
     let cdata = c.data_mut();
-    // Row-major friendly: accumulate outer products of rows of A and B.
-    for i in 0..m {
+    for i in r0..r1 {
         let arow = &adata[i * ka..(i + 1) * ka];
         let brow = &bdata[i * kb..(i + 1) * kb];
         for p in 0..ka {
@@ -127,13 +193,34 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// Symmetric rank-k update: G = Aᵀ·A (the Gram matrix of the columns of A).
-/// Exploits symmetry: computes the upper triangle and mirrors it.
+/// Exploits symmetry: computes the upper triangle and mirrors it once.
+///
+/// §Perf: tall inputs chunk their rows across the shared worker pool
+/// (partial upper triangles merged in chunk order, so the result is
+/// deterministic for any `DSVD_WORKERS`), then mirror at the end.
 pub fn gram(a: &Matrix) -> Matrix {
     let (m, n) = a.shape();
+    let mut g = match par_row_ranges(m, n) {
+        Some(ranges) => par_reduce(ranges, |r0, r1| gram_upper_range(a, r0, r1)),
+        None => gram_upper_range(a, 0, m),
+    };
+    // mirror the strict upper triangle
+    let gdata = g.data_mut();
+    for p in 0..n {
+        for j in (p + 1)..n {
+            gdata[j * n + p] = gdata[p * n + j];
+        }
+    }
+    g
+}
+
+/// Upper-triangle Gram accumulation over rows `[r0, r1)` (no mirror).
+fn gram_upper_range(a: &Matrix, r0: usize, r1: usize) -> Matrix {
+    let n = a.cols();
     let mut g = Matrix::zeros(n, n);
     let adata = a.data();
     let gdata = g.data_mut();
-    for i in 0..m {
+    for i in r0..r1 {
         let arow = &adata[i * n..(i + 1) * n];
         for p in 0..n {
             let aip = arow[p];
@@ -144,12 +231,6 @@ pub fn gram(a: &Matrix) -> Matrix {
             for j in p..n {
                 grow[j] += aip * arow[j];
             }
-        }
-    }
-    // mirror the strict upper triangle
-    for p in 0..n {
-        for j in (p + 1)..n {
-            gdata[j * n + p] = gdata[p * n + j];
         }
     }
     g
@@ -308,6 +389,31 @@ mod tests {
         for j in 0..5 {
             assert!((w[j] - wm[(j, 0)]).abs() < 1e-13);
         }
+    }
+
+    #[test]
+    fn parallel_reduction_paths_match_serial() {
+        // tall enough to take the chunked pool path (when workers > 1)
+        let mut rng = Rng::seed(77);
+        let m = 2 * super::PAR_CHUNK_ROWS + 331;
+        let n = 128; // m·n must clear PAR_MIN_ELEMS to exercise the fan-out
+        assert!(m * n >= super::PAR_MIN_ELEMS);
+        let a = randmat(&mut rng, m, n);
+        let b = randmat(&mut rng, m, 24);
+        let g = gram(&a);
+        let g_want = matmul(&a.transpose(), &a);
+        assert!(g.sub(&g_want).max_abs() < 1e-9, "{}", g.sub(&g_want).max_abs());
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(g[(i, j)], g[(j, i)], "gram must stay exactly symmetric");
+            }
+        }
+        let c = matmul_tn(&a, &b);
+        let c_want = matmul(&a.transpose(), &b);
+        assert!(c.sub(&c_want).max_abs() < 1e-9);
+        // determinism: two runs are bit-identical
+        assert_eq!(gram(&a), g);
+        assert_eq!(matmul_tn(&a, &b), c);
     }
 
     #[test]

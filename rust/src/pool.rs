@@ -1,0 +1,300 @@
+//! The reusable worker pool under every [`crate::dist::Context`] stage
+//! — the piece that turns the simulated cluster into *real* parallelism
+//! on the machine's cores. A crate-level leaf module (no `dist` or
+//! `linalg` dependencies) so both the distributed layer and the local
+//! BLAS kernels can fan out over the same threads without layering
+//! cycles.
+//!
+//! Design:
+//!
+//! * A fixed set of OS threads pulls jobs from one shared queue; the
+//!   threads live for the life of the pool (no per-stage spawning).
+//! * `run_scoped` accepts *non-`'static`* tasks — partition closures
+//!   borrow the driver's matrices — and blocks until every task has
+//!   finished, which is what makes the lifetime erasure sound: no task
+//!   can outlive the borrows it captures because the caller does not
+//!   regain control until all tasks are done (panics included; they are
+//!   caught on the worker and re-thrown on the driver).
+//! * Results come back keyed by submission index, so a stage's output
+//!   order — and therefore every floating-point reduction downstream —
+//!   is deterministic regardless of worker count or scheduling.
+//! * Worker threads are tagged with a thread-local flag; `run_scoped`
+//!   executes inline when called *from* a worker (a task that fans out
+//!   again must never block waiting on its own pool) and when the fan-out
+//!   could not help (single task, single-thread pool).
+//!
+//! The process-wide default pool (`global()`) is sized by the
+//! `DSVD_WORKERS` environment variable, falling back to the number of
+//! available cores. `Context::with_workers(n)` swaps in a dedicated
+//! pool when a run wants explicit control.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_WORKER: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// True when the current thread is a pool worker (any pool). Used to
+/// run nested fan-outs inline instead of deadlocking on a busy queue.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+/// Worker count for the default pool: `DSVD_WORKERS` if set and > 0,
+/// else the number of available cores.
+pub fn default_workers() -> usize {
+    std::env::var("DSVD_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&w| w > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4))
+}
+
+/// The process-wide shared pool (lazily created, never torn down).
+pub fn global() -> &'static Arc<WorkerPool> {
+    static POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(WorkerPool::new(default_workers())))
+}
+
+/// A fixed-size pool of job-pulling OS threads.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+/// Shared completion state for one `run_scoped` call.
+struct StageSync<T> {
+    inner: Mutex<StageSlots<T>>,
+    done: Condvar,
+}
+
+struct StageSlots<T> {
+    slots: Vec<Option<std::thread::Result<(T, f64)>>>,
+    remaining: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `size` (min 1) worker threads.
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("dsvd-worker-{i}"))
+                    .spawn(move || worker_main(rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run every task, in parallel where possible, and return
+    /// `(value, task_seconds)` per task in submission order.
+    ///
+    /// Tasks may borrow from the caller: this call does not return until
+    /// every task has completed (or one has panicked, in which case the
+    /// panic resumes here after the remaining tasks finished).
+    pub fn run_scoped<'a, T: Send + 'a>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'a>>,
+    ) -> Vec<(T, f64)> {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Inline paths: a lone task gains nothing from dispatch, a
+        // 1-thread pool serializes anyway, and a worker thread must not
+        // block on the queue it is supposed to drain.
+        if n == 1 || self.size == 1 || in_worker() {
+            return tasks
+                .into_iter()
+                .map(|t| {
+                    let t0 = Instant::now();
+                    let v = t();
+                    (v, t0.elapsed().as_secs_f64())
+                })
+                .collect();
+        }
+
+        let sync = Arc::new(StageSync {
+            inner: Mutex::new(StageSlots {
+                slots: (0..n).map(|_| None).collect(),
+                remaining: n,
+            }),
+            done: Condvar::new(),
+        });
+        for (i, task) in tasks.into_iter().enumerate() {
+            let sync2 = Arc::clone(&sync);
+            let job: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                let t0 = Instant::now();
+                let out = catch_unwind(AssertUnwindSafe(task));
+                let dt = t0.elapsed().as_secs_f64();
+                let mut g = sync2.inner.lock().unwrap();
+                g.slots[i] = Some(out.map(|v| (v, dt)));
+                g.remaining -= 1;
+                if g.remaining == 0 {
+                    sync2.done.notify_all();
+                }
+            });
+            // SAFETY: the job is erased to 'static to enter the queue,
+            // but this function blocks below until `remaining == 0`,
+            // which only happens after every job body has run to
+            // completion (panics are caught and stored). Hence nothing
+            // the job borrows can be dropped while it may still run.
+            let job: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'a>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            self.tx
+                .as_ref()
+                .expect("pool is shut down")
+                .send(job)
+                .expect("pool workers exited");
+        }
+
+        let mut g = sync.inner.lock().unwrap();
+        while g.remaining > 0 {
+            g = sync.done.wait(g).unwrap();
+        }
+        let slots = std::mem::take(&mut g.slots);
+        drop(g);
+
+        let mut out = Vec::with_capacity(n);
+        for s in slots {
+            match s.expect("every slot filled at remaining == 0") {
+                Ok(v) => out.push(v),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channel wakes every idle worker with RecvError
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(rx: Arc<Mutex<Receiver<Job>>>) {
+    IN_WORKER.with(|c| c.set(true));
+    loop {
+        // hold the queue lock only while receiving, never while running
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_submission_order() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<usize> = (0..64).collect();
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send + '_>> = data
+            .iter()
+            .map(|&x| Box::new(move || x * x) as Box<dyn FnOnce() -> usize + Send + '_>)
+            .collect();
+        let got: Vec<usize> = pool.run_scoped(tasks).into_iter().map(|(v, _)| v).collect();
+        let want: Vec<usize> = data.iter().map(|&x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tasks_may_borrow_driver_data() {
+        let pool = WorkerPool::new(3);
+        let text = String::from("scoped-borrow");
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send + '_>> = (0..8)
+            .map(|i| {
+                let text = &text;
+                Box::new(move || text.len() + i) as Box<dyn FnOnce() -> usize + Send + '_>
+            })
+            .collect();
+        let got: Vec<usize> = pool.run_scoped(tasks).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(got, (0..8).map(|i| text.len() + i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom in task 2")]
+    fn task_panic_propagates_to_driver() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("boom in task 2");
+                    }
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let _ = pool.run_scoped(tasks);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_stage() {
+        let pool = WorkerPool::new(2);
+        let bad: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            vec![Box::new(|| panic!("first")), Box::new(|| 7)];
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.run_scoped(bad)));
+        assert!(caught.is_err());
+        // the workers caught the panic and are still serving
+        let ok: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4).map(|i| Box::new(move || i + 1) as Box<dyn FnOnce() -> usize + Send>).collect();
+        let got: Vec<usize> = pool.run_scoped(ok).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn durations_are_measured() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> f64 + Send>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    // ~1e6 flops so the duration is safely nonzero
+                    let mut s = 0.0f64;
+                    for i in 0..200_000 {
+                        s += (i as f64).sqrt();
+                    }
+                    s
+                }) as Box<dyn FnOnce() -> f64 + Send>
+            })
+            .collect();
+        for (_, dt) in pool.run_scoped(tasks) {
+            assert!(dt > 0.0);
+        }
+    }
+
+    #[test]
+    fn env_default_workers_positive() {
+        assert!(default_workers() >= 1);
+        assert!(global().size() >= 1);
+    }
+}

@@ -1,10 +1,33 @@
 //! Runtime bridge between the Rust coordinator (L3) and the AOT-compiled
 //! JAX/Pallas artifacts (L2/L1): PJRT client, artifact registry, and the
 //! fixed-shape tile engine. See DESIGN.md §2.
+//!
+//! The PJRT pieces need the external `xla` crate, so they are gated
+//! behind the non-default `pjrt` feature; without it, build-time stubs
+//! keep every call site compiling and return descriptive load errors,
+//! leaving the default build with zero external native dependencies.
 
 pub mod compute;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub mod engine {
+    //! Stub of the PJRT tile engine (`pjrt` feature disabled).
+    pub use super::stub::PjrtCompute;
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    //! Stub of the PJRT runtime (`pjrt` feature disabled).
+    pub use super::stub::PjrtEngine;
+}
 
 pub use compute::{Compute, NativeCompute};
 pub use engine::PjrtCompute;

@@ -1,0 +1,76 @@
+//! Build-time stand-ins for the PJRT backend when the (non-default)
+//! `pjrt` feature is disabled. Every call site keeps compiling with
+//! zero external dependencies; all loads fail with a clear message and
+//! no instance can ever be constructed, so the trait methods are
+//! unreachable.
+
+use std::path::{Path, PathBuf};
+
+use super::compute::Compute;
+use crate::linalg::Matrix;
+
+const UNAVAILABLE: &str =
+    "dsvd was built without the `pjrt` feature; rebuild with `--features pjrt` \
+     (and the optional deps in Cargo.toml uncommented) after `make artifacts`";
+
+/// Stub for `runtime::pjrt::PjrtEngine`.
+pub struct PjrtEngine {
+    pub artifact_dir: PathBuf,
+    _private: (),
+}
+
+impl PjrtEngine {
+    pub fn load(_dir: &Path) -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn load_default() -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+}
+
+/// Stub for `runtime::engine::PjrtCompute`.
+pub struct PjrtCompute {
+    _private: (),
+}
+
+impl PjrtCompute {
+    pub fn load_default() -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+impl Compute for PjrtCompute {
+    fn gram(&self, _x: &Matrix) -> Matrix {
+        unreachable!("stub PjrtCompute cannot be constructed")
+    }
+
+    fn matmul(&self, _a: &Matrix, _b: &Matrix) -> Matrix {
+        unreachable!("stub PjrtCompute cannot be constructed")
+    }
+
+    fn matmul_tn(&self, _a: &Matrix, _b: &Matrix) -> Matrix {
+        unreachable!("stub PjrtCompute cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt (disabled)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_fail_with_guidance() {
+        let err = PjrtCompute::load_default().map(|_| ()).unwrap_err();
+        assert!(err.contains("pjrt"), "{err}");
+        let err = PjrtEngine::load_default().map(|_| ()).unwrap_err();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration tests for the `dist` execution layer against the paper's
+//! headline numbers: TSQR orthonormality at machine precision,
+//! Algorithm 2's `MaxEntry(|UᵀU−I|) ≤ 1e-13`, tree-R agreement with
+//! dense Householder QR, and the metrics invariants the harness tables
+//! rely on. The worker-scaling wall-clock check is `#[ignore]`d by
+//! default (timing-sensitive); `scripts/verify.sh` runs it on capable
+//! machines.
+
+use dsvd::algs::{algorithm2, TallSkinnyOpts};
+use dsvd::dist::{tsqr, tsqr_r, Context, DistRowMatrix};
+use dsvd::gen::{spectrum_geometric, DctTestMatrix};
+use dsvd::linalg::qr::thin_qr;
+use dsvd::linalg::{blas, Matrix};
+use dsvd::rng::Rng;
+use dsvd::runtime::compute::NativeCompute;
+use dsvd::verify::max_entry_gram_minus_identity;
+
+/// The seeded 2048×64 geometric-spectrum matrix of the acceptance
+/// criteria (equation (2) with spectrum (3), numerically rank-deficient).
+fn seeded_2048x64(ctx: &Context) -> DistRowMatrix {
+    let sigma = spectrum_geometric(64);
+    DctTestMatrix::new(2048, 64, &sigma).generate(ctx, &NativeCompute, 128)
+}
+
+#[test]
+fn tsqr_q_is_orthonormal_to_machine_precision() {
+    let ctx = Context::new(18);
+    let a = seeded_2048x64(&ctx);
+    let f = tsqr(&ctx, &a);
+    let orth = max_entry_gram_minus_identity(&ctx, &NativeCompute, &f.q);
+    assert!(orth <= 1e-13, "explicit-Q TSQR orthonormality: {orth}");
+    // and Q·R still reconstructs A
+    let ql = f.q.collect(&ctx);
+    let al = a.collect(&ctx);
+    let rec = blas::matmul(&ql, &f.r).sub(&al).max_abs();
+    assert!(rec < 1e-12, "TSQR reconstruction: {rec}");
+}
+
+#[test]
+fn algorithm2_hits_the_paper_machine_precision_bound() {
+    // the paper's central claim (Tables 3–5, Algorithm 2 row):
+    // left singular vectors orthonormal to ~machine precision
+    let ctx = Context::new(18);
+    let a = seeded_2048x64(&ctx);
+    let out = algorithm2(&ctx, &NativeCompute, &a, &TallSkinnyOpts::default());
+    let u_orth = max_entry_gram_minus_identity(&ctx, &NativeCompute, &out.u);
+    assert!(u_orth <= 1e-13, "MaxEntry(|UᵀU−I|) = {u_orth} > 1e-13");
+}
+
+#[test]
+fn tsqr_r_agrees_with_dense_householder_up_to_signs() {
+    // R of a full-rank matrix is unique up to row signs; normalize each
+    // row by its diagonal sign and compare against a dense local QR
+    let ctx = Context::new(8).with_fan_in(2);
+    let mut rng = Rng::seed(9001);
+    let a_local = Matrix::from_fn(1500, 24, |_, _| rng.gauss());
+    let d = DistRowMatrix::from_matrix(&a_local, 100);
+    let r_tree = tsqr_r(&ctx, &d);
+    let r_dense = thin_qr(&a_local).r;
+    assert_eq!(r_tree.shape(), r_dense.shape());
+    for i in 0..r_tree.rows() {
+        let st = r_tree[(i, i)].signum();
+        let sd = r_dense[(i, i)].signum();
+        assert!(st != 0.0 && sd != 0.0, "unexpected zero diagonal at {i}");
+        for j in 0..r_tree.cols() {
+            let x = st * r_tree[(i, j)];
+            let y = sd * r_dense[(i, j)];
+            assert!((x - y).abs() < 1e-10 * (1.0 + y.abs()), "({i},{j}): {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn tsqr_is_deterministic_across_worker_counts() {
+    let sigma = spectrum_geometric(48);
+    let run = |workers: usize| {
+        let ctx = Context::new(16).with_workers(workers);
+        let a = DctTestMatrix::new(1024, 48, &sigma).generate(&ctx, &NativeCompute, 64);
+        tsqr_r(&ctx, &a)
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    assert_eq!(r1.data(), r4.data(), "R must be bit-identical for any worker count");
+}
+
+#[test]
+fn harness_metrics_invariants() {
+    let ctx = Context::new(18);
+    let a = seeded_2048x64(&ctx);
+    ctx.reset_metrics();
+    let _r = tsqr_r(&ctx, &a);
+    let m = ctx.take_metrics();
+    assert!(m.tasks >= 16, "16 leaf tasks plus merges, got {}", m.tasks);
+    assert!(m.stages >= 1 + 4, "leaf stage + ⌈log2 16⌉ levels, got {}", m.stages);
+    assert!(m.cpu_time > 0.0);
+    assert!(m.wall_clock > 0.0);
+    assert!(m.shuffle_bytes > 0, "R factors must be accounted as shuffled");
+    // the tables' invariant: summed task time can never be beaten by
+    // the simulated schedule of those same tasks
+    assert!(m.cpu_time >= m.wall_clock, "cpu {} < wall {}", m.cpu_time, m.wall_clock);
+}
+
+/// Acceptance criterion for the parallel layer: with 4 workers on a
+/// ≥4-core machine, `tsqr_r` on a 65536×64 partitioned matrix is ≥2×
+/// faster wall-clock than with 1 worker. Timing-sensitive, so ignored
+/// in the default test run; `scripts/verify.sh` opts in.
+#[test]
+#[ignore = "timing-sensitive; run explicitly (scripts/verify.sh) on a >=4-core machine"]
+fn tsqr_worker_scaling_speedup() {
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if cores < 4 {
+        eprintln!("skipping: only {cores} cores available");
+        return;
+    }
+    let sigma = spectrum_geometric(64);
+    let timed = |workers: usize| -> f64 {
+        let ctx = Context::new(64).with_workers(workers);
+        let a = DctTestMatrix::new(65536, 64, &sigma).generate(&ctx, &NativeCompute, 1024);
+        // warm-up, then best of 3
+        let _ = tsqr_r(&ctx, &a);
+        (0..3)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                let _ = tsqr_r(&ctx, &a);
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let t1 = timed(1);
+    let t4 = timed(4);
+    let speedup = t1 / t4;
+    println!("tsqr_r 65536x64: 1 worker {t1:.3}s, 4 workers {t4:.3}s, speedup {speedup:.2}x");
+    assert!(speedup >= 2.0, "expected >=2x, got {speedup:.2}x ({t1:.3}s vs {t4:.3}s)");
+}

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus the scaled perf record.
+#
+#   scripts/verify.sh            tier-1 (build + tests) and the scaled
+#                                tall-skinny bench -> BENCH_tall_skinny.json
+#   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
+#                                scaling acceptance test (>=4 cores)
+#
+# Env passthrough:
+#   DSVD_WORKERS      worker threads for the shared pool
+#   DSVD_BENCH_SCALE  row divisor for the bench (default 64 here)
+#   DSVD_BENCH_JSON   output path for the JSON record
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+echo "== scaled bench: tables_tall_skinny (DSVD_BENCH_SCALE=${DSVD_BENCH_SCALE:-64})"
+DSVD_BENCH_SCALE="${DSVD_BENCH_SCALE:-64}" \
+DSVD_BENCH_POWER="${DSVD_BENCH_POWER:-20}" \
+DSVD_BENCH_JSON="${DSVD_BENCH_JSON:-BENCH_tall_skinny.json}" \
+    cargo bench --bench tables_tall_skinny
+
+echo "== perf record: ${DSVD_BENCH_JSON:-BENCH_tall_skinny.json}"
+
+if [ "${FULL:-0}" = "1" ]; then
+    echo "== worker-scaling acceptance (tsqr_r, 65536x64, 1 vs 4 workers)"
+    cargo test --release --test dist_parallel -- --ignored --nocapture tsqr_worker_scaling_speedup
+fi
+
+echo "verify OK"
