@@ -4,8 +4,13 @@
 //!   DSVD_BENCH_SCALE   divide every m by this factor (default 1)
 //!   DSVD_BENCH_BACKEND native | pjrt (default native)
 //!   DSVD_BENCH_POWER   power iterations for error columns (default 40)
+//!   DSVD_BENCH_JSON    output path for this bench's JSON record
+//!   DSVD_SHUFFLE_LATENCY / DSVD_TASK_OVERHEAD
+//!                      comms model for ALL runs (the fan-in sweeps
+//!                      default to a nonzero Spark-ish model when unset)
 
 use dsvd::config::{Backend, RunConfig};
+use dsvd::dist::Metrics;
 use dsvd::harness::TableRow;
 use dsvd::runtime::compute::Compute;
 use std::sync::Arc;
@@ -26,6 +31,57 @@ pub fn bench_config() -> (RunConfig, Arc<dyn Compute>, usize) {
     }
     let be = cfg.compute().expect("backend");
     (cfg, be, scale)
+}
+
+/// Fill in a nonzero comms model for the fan-in sweeps when the
+/// environment did not configure one: a 1 GB/s fabric plus Spark's
+/// ~5 ms task-launch latency, so the sweep genuinely trades
+/// reduction-tree depth against shuffle volume. A usable env value
+/// (per `CommsModel::env_override`) — even an explicit 0 — is always
+/// honored.
+#[allow(dead_code)]
+pub fn ensure_sweep_comms(cfg: &mut RunConfig) {
+    use dsvd::dist::CommsModel;
+    if CommsModel::env_override("DSVD_SHUFFLE_LATENCY").is_none() {
+        cfg.shuffle_latency = 1e-9;
+    }
+    if CommsModel::env_override("DSVD_TASK_OVERHEAD").is_none() {
+        cfg.task_overhead = 5e-3;
+    }
+}
+
+/// The metrics fields shared by every bench JSON record.
+#[allow(dead_code)]
+pub fn metrics_json(m: &Metrics) -> String {
+    format!(
+        "\"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
+         \"comms_time\": {:e}, \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}",
+        m.cpu_time, m.wall_clock, m.driver_elapsed, m.comms_time, m.stages, m.tasks,
+        m.shuffle_bytes
+    )
+}
+
+/// Write one JSON array of records (each entry the body of an object)
+/// to `default_path`, overridable via `DSVD_BENCH_JSON`.
+#[allow(dead_code)]
+pub fn write_bench_json(default_path: &str, records: &[String]) {
+    let path =
+        std::env::var("DSVD_BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
+    let mut json = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        json.push_str("  {");
+        json.push_str(r);
+        json.push('}');
+        if i + 1 != records.len() {
+            json.push(',');
+        }
+        json.push('\n');
+    }
+    json.push_str("]\n");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path} ({} records)", records.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }
 
 /// Print one table: measured rows next to the paper's reference rows.

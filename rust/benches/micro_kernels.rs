@@ -11,7 +11,7 @@
 
 use dsvd::algs::{algorithm1, algorithm1_explicit_q, TallSkinnyOpts};
 use dsvd::config::RunConfig;
-use dsvd::dist::{tsqr_r, Context, DistRowMatrix};
+use dsvd::dist::{tsqr, tsqr_lineage, tsqr_r, Context, DistRowMatrix};
 use dsvd::gen::{spectrum_geometric, DctTestMatrix};
 use dsvd::linalg::{blas, Matrix};
 use dsvd::rng::Rng;
@@ -70,6 +70,23 @@ fn main() {
             m.stages,
             m.shuffle_bytes / 1024,
             m.wall_clock
+        );
+    }
+
+    // ---- explicit-Q reconstruction: two-pass vs lineage -----------------
+    println!("\n== explicit-Q TSQR: two-pass down-sweep vs lineage (m=32768 n=128, 64 partitions)");
+    for fan_in in [2usize, 8] {
+        let ctx = Context::new(64).with_fan_in(fan_in);
+        let d = DistRowMatrix::from_matrix(&am, 512);
+        ctx.reset_metrics();
+        let (_f, t_two) = time(|| tsqr(&ctx, &d));
+        let m_two = ctx.take_metrics();
+        let (_f, t_lin) = time(|| tsqr_lineage(&ctx, &d));
+        let m_lin = ctx.take_metrics();
+        println!(
+            "  fan-in {fan_in:2}: two-pass {t_two:.3}s / {} KiB shuffled;  lineage {t_lin:.3}s / {} KiB shuffled",
+            m_two.shuffle_bytes / 1024,
+            m_lin.shuffle_bytes / 1024
         );
     }
 

@@ -7,12 +7,13 @@
 
 mod bench_common;
 
-use bench_common::bench_config;
+use bench_common::{bench_config, metrics_json, write_bench_json};
 use dsvd::harness::{run_generation, sci, Spectrum, SCALED_M, SCALED_N};
 
 fn main() {
     let (cfg, be, scale) = bench_config();
     let n = SCALED_N;
+    let mut measured: Vec<(String, usize, usize, String, dsvd::dist::Metrics)> = Vec::new();
 
     println!("\nTable 27: generating (2) with (3) — paper: (1e6,2e3)=4.76E+03 CPU, (1e5)=4.50E+02, (1e4)=5.00E+01");
     println!("{:>10} {:>8} {:>12} {:>12}", "m", "n", "CPU Time", "Wall-Clock");
@@ -20,6 +21,7 @@ fn main() {
         let m = (m / scale).max(n);
         let met = run_generation(&cfg, be.as_ref(), m, n, Spectrum::Geometric);
         println!("{:>10} {:>8} {:>12} {:>12}", m, n, sci(met.cpu_time), sci(met.wall_clock));
+        measured.push(("T27".to_string(), m, n, "geometric".to_string(), met));
     }
 
     println!("\nTable 28: generating (2) with (5), l=20 — paper: 5.61E+02 / 6.30E+01 / 8.00E+00 CPU");
@@ -28,6 +30,7 @@ fn main() {
         let m = (m / scale).max(n);
         let met = run_generation(&cfg, be.as_ref(), m, n, Spectrum::LowRank(20));
         println!("{:>10} {:>8} {:>12} {:>12}", m, n, sci(met.cpu_time), sci(met.wall_clock));
+        measured.push(("T28".to_string(), m, n, "lowrank:20".to_string(), met));
     }
 
     println!("\nTable 29: generating (2) with (5), l=10, big shapes — paper: 7.30E+01 / 4.93E+02 / 4.20E+01 CPU");
@@ -37,5 +40,21 @@ fn main() {
         let nn = (nn / scale).max(64);
         let met = run_generation(&cfg, be.as_ref(), m, nn, Spectrum::LowRank(10));
         println!("{:>10} {:>8} {:>12} {:>12}", m, nn, sci(met.cpu_time), sci(met.wall_clock));
+        measured.push(("T29".to_string(), m, nn, "lowrank:10".to_string(), met));
     }
+
+    let records: Vec<String> = measured
+        .iter()
+        .map(|(table, m, n, spectrum, met)| {
+            format!(
+                "\"table\": \"{}\", \"m\": {}, \"n\": {}, \"spectrum\": \"{}\", {}",
+                table,
+                m,
+                n,
+                spectrum,
+                metrics_json(met)
+            )
+        })
+        .collect();
+    write_bench_json("BENCH_gen.json", &records);
 }

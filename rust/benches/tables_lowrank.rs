@@ -7,7 +7,7 @@
 
 mod bench_common;
 
-use bench_common::{bench_config, print_table};
+use bench_common::{bench_config, ensure_sweep_comms, metrics_json, print_table, write_bench_json};
 use dsvd::harness::{run_lowrank, LrAlg, Spectrum, SCALED_M, SCALED_N};
 
 type PaperRow = (&'static str, &'static str, &'static str, &'static str, &'static str, &'static str);
@@ -55,6 +55,8 @@ fn main() {
         ("Table 24 (Appendix B: staircase, E=18)", PAPER_T22, SCALED_M[2], 18, Spectrum::Staircase(l)),
     ];
 
+    let mut measured: Vec<(String, usize, usize, usize, f64, f64, dsvd::harness::TableRow)> =
+        Vec::new();
     for (title, paper, m, executors, spectrum) in suites {
         let m = (m / scale).max(n * 2);
         let mut cfg = cfg_base.clone();
@@ -69,5 +71,93 @@ fn main() {
             paper,
             &rows,
         );
+        let id = title.split_whitespace().take(2).collect::<Vec<_>>().join(" ");
+        for row in rows {
+            measured.push((
+                id.clone(),
+                m,
+                n,
+                cfg.fan_in,
+                cfg.shuffle_latency,
+                cfg.task_overhead,
+                row,
+            ));
+        }
     }
+
+    // ---- fan-in sweep under a nonzero comms model -------------------
+    // Algorithm 7 at the smallest table size: the subspace iteration
+    // runs the whole dist stack (block matmuls, per-column rmatmul
+    // reduces, TSQR trees), so the fan-in knob moves wall_clock through
+    // both tree depth and per-merge shuffle volume.
+    let mut sweep_cfg = cfg_base.clone();
+    ensure_sweep_comms(&mut sweep_cfg);
+    sweep_cfg.executors = 18;
+    sweep_cfg.cols_per_part = n;
+    let m_sweep = (SCALED_M[2] / scale).max(n * 2);
+    sweep_cfg.rows_per_part = (m_sweep / 16).max(1); // 16 row partitions
+    println!("\n================================================================");
+    println!(
+        "Fan-in sweep — Algorithm 7, m={m_sweep} n={n} l={l} i={iters}, E=18, \
+         shuffle latency {:.1e} s/B, task overhead {:.1e} s",
+        sweep_cfg.shuffle_latency, sweep_cfg.task_overhead
+    );
+    println!("----------------------------------------------------------------");
+    println!("{:>7}  {:>10}  {:>10}  {:>10}  {:>14}", "fan-in", "CPU Time", "Wall-Clock", "Comms", "Shuffle bytes");
+    for fan in [2usize, 4, 8] {
+        sweep_cfg.fan_in = fan;
+        let row = run_lowrank(
+            &sweep_cfg,
+            be.as_ref(),
+            m_sweep,
+            n,
+            l,
+            iters,
+            Spectrum::LowRank(l),
+            LrAlg::A7,
+        );
+        println!(
+            "{:>7}  {:>10}  {:>10}  {:>10}  {:>14}",
+            fan,
+            dsvd::harness::sci(row.metrics.cpu_time),
+            dsvd::harness::sci(row.metrics.wall_clock),
+            dsvd::harness::sci(row.metrics.comms_time),
+            row.metrics.shuffle_bytes
+        );
+        measured.push((
+            "FANIN".to_string(),
+            m_sweep,
+            n,
+            fan,
+            sweep_cfg.shuffle_latency,
+            sweep_cfg.task_overhead,
+            row,
+        ));
+    }
+
+    let records: Vec<String> = measured
+        .iter()
+        .map(|(table, m, n, fan, lat, ovh, row)| {
+            format!(
+                "\"table\": \"{}\", \"m\": {}, \"n\": {}, \"l\": {}, \"iters\": {}, \
+                 \"algorithm\": \"{}\", \"fan_in\": {}, \"shuffle_latency\": {:e}, \
+                 \"task_overhead\": {:e}, {}, \"recon\": {:e}, \"u_orth\": {:e}, \
+                 \"v_orth\": {:e}",
+                table,
+                m,
+                n,
+                l,
+                iters,
+                row.algorithm,
+                fan,
+                lat,
+                ovh,
+                metrics_json(&row.metrics),
+                row.recon,
+                row.u_orth,
+                row.v_orth,
+            )
+        })
+        .collect();
+    write_bench_json("BENCH_lowrank.json", &records);
 }

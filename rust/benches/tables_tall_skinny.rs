@@ -12,7 +12,7 @@
 
 mod bench_common;
 
-use bench_common::{bench_config, print_table};
+use bench_common::{bench_config, ensure_sweep_comms, metrics_json, print_table, write_bench_json};
 use dsvd::harness::{run_tall_skinny, Spectrum, TsAlg, SCALED_M, SCALED_N};
 
 type PaperRow = (&'static str, &'static str, &'static str, &'static str, &'static str, &'static str);
@@ -72,7 +72,9 @@ fn main() {
         ("T21", "Table 21 (Appendix B: staircase, E=18; paper mirrors T19 shape)", PAPER_T19, SCALED_M[2], 18, Spectrum::Staircase(n)),
     ];
 
-    let mut measured: Vec<(String, usize, usize, dsvd::harness::TableRow)> = Vec::new();
+    // each record: (table id, m, n, fan_in, shuffle_latency, task_overhead, row)
+    let mut measured: Vec<(String, usize, usize, usize, f64, f64, dsvd::harness::TableRow)> =
+        Vec::new();
     for (id, title, paper, m, executors, spectrum) in suites {
         let m = (m / scale).max(n * 2);
         let mut cfg = cfg_base.clone();
@@ -87,36 +89,83 @@ fn main() {
             &rows,
         );
         for row in rows {
-            measured.push((id.to_string(), m, n, row));
+            measured.push((
+                id.to_string(),
+                m,
+                n,
+                cfg.fan_in,
+                cfg.shuffle_latency,
+                cfg.task_overhead,
+                row,
+            ));
         }
+    }
+
+    // ---- fan-in sweep under a nonzero comms model -------------------
+    // The depth-vs-volume ablation the paper's communication-avoiding
+    // claim rests on: deeper trees (fan-in 2) pay more task launches
+    // and more intermediate-R hops; shallower trees pay bigger merges.
+    // With the per-byte latency and per-task overhead charged by the
+    // scheduler, wall_clock now moves across fan-ins (the acceptance
+    // criterion) while the factorization stays bit-identical.
+    let mut sweep_cfg = cfg_base.clone();
+    ensure_sweep_comms(&mut sweep_cfg);
+    sweep_cfg.executors = 18;
+    let m_sweep = (SCALED_M[0] / scale).max(n * 2);
+    sweep_cfg.rows_per_part = (m_sweep / 32).max(1); // 32 partitions: deep at fan-in 2
+    println!("\n================================================================");
+    println!(
+        "Fan-in sweep — Algorithm 2, m={m_sweep} n={n}, 32 partitions, E=18, \
+         shuffle latency {:.1e} s/B, task overhead {:.1e} s",
+        sweep_cfg.shuffle_latency, sweep_cfg.task_overhead
+    );
+    println!("----------------------------------------------------------------");
+    println!("{:>7}  {:>10}  {:>10}  {:>10}  {:>14}", "fan-in", "CPU Time", "Wall-Clock", "Comms", "Shuffle bytes");
+    for fan in [2usize, 4, 8, 16] {
+        sweep_cfg.fan_in = fan;
+        let row =
+            run_tall_skinny(&sweep_cfg, be.as_ref(), m_sweep, n, Spectrum::Geometric, TsAlg::A2);
+        println!(
+            "{:>7}  {:>10}  {:>10}  {:>10}  {:>14}",
+            fan,
+            dsvd::harness::sci(row.metrics.cpu_time),
+            dsvd::harness::sci(row.metrics.wall_clock),
+            dsvd::harness::sci(row.metrics.comms_time),
+            row.metrics.shuffle_bytes
+        );
+        measured.push((
+            "FANIN".to_string(),
+            m_sweep,
+            n,
+            fan,
+            sweep_cfg.shuffle_latency,
+            sweep_cfg.task_overhead,
+            row,
+        ));
     }
 
     // machine-readable record for the perf trajectory across PRs:
     // one object per (table, algorithm) with the timing and error columns
-    let path = std::env::var("DSVD_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_tall_skinny.json".to_string());
-    let mut json = String::from("[\n");
-    for (i, (table, m, n, row)) in measured.iter().enumerate() {
-        json.push_str(&format!(
-            "  {{\"table\": \"{}\", \"m\": {}, \"n\": {}, \"algorithm\": \"{}\", \
-             \"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
-             \"recon\": {:e}, \"u_orth\": {:e}, \"v_orth\": {:e}}}{}\n",
-            table,
-            m,
-            n,
-            row.algorithm,
-            row.metrics.cpu_time,
-            row.metrics.wall_clock,
-            row.metrics.driver_elapsed,
-            row.recon,
-            row.u_orth,
-            row.v_orth,
-            if i + 1 == measured.len() { "" } else { "," }
-        ));
-    }
-    json.push_str("]\n");
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("\nwrote {path} ({} rows)", measured.len()),
-        Err(e) => eprintln!("\ncould not write {path}: {e}"),
-    }
+    let records: Vec<String> = measured
+        .iter()
+        .map(|(table, m, n, fan, lat, ovh, row)| {
+            format!(
+                "\"table\": \"{}\", \"m\": {}, \"n\": {}, \"algorithm\": \"{}\", \
+                 \"fan_in\": {}, \"shuffle_latency\": {:e}, \"task_overhead\": {:e}, \
+                 {}, \"recon\": {:e}, \"u_orth\": {:e}, \"v_orth\": {:e}",
+                table,
+                m,
+                n,
+                row.algorithm,
+                fan,
+                lat,
+                ovh,
+                metrics_json(&row.metrics),
+                row.recon,
+                row.u_orth,
+                row.v_orth,
+            )
+        })
+        .collect();
+    write_bench_json("BENCH_tall_skinny.json", &records);
 }

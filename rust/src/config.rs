@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::dist::Context;
+use crate::dist::{CommsModel, Context};
 use crate::runtime::compute::{Compute, NativeCompute};
 use crate::runtime::engine::PjrtCompute;
 
@@ -46,6 +46,12 @@ pub struct RunConfig {
     pub fan_in: usize,
     /// OS worker threads actually executing tasks (0 = all cores).
     pub workers: usize,
+    /// Simulated seconds per shuffled byte a task receives (e.g. `1e-9`
+    /// for a 1 GB/s fabric). Defaults from `DSVD_SHUFFLE_LATENCY`, else 0.
+    pub shuffle_latency: f64,
+    /// Simulated fixed seconds per task (Spark's launch latency,
+    /// typically `1e-3`–`1e-2`). Defaults from `DSVD_TASK_OVERHEAD`, else 0.
+    pub task_overhead: f64,
     /// The paper's working precision (Remark 1).
     pub working_precision: f64,
     /// Chained D·F·S products in the SRFT (Remark 5).
@@ -60,12 +66,15 @@ pub struct RunConfig {
 
 impl Default for RunConfig {
     fn default() -> Self {
+        let comms = CommsModel::from_env();
         RunConfig {
             executors: 180,
             rows_per_part: 1024,
             cols_per_part: 1024,
             fan_in: 2,
             workers: 0,
+            shuffle_latency: comms.byte_latency,
+            task_overhead: comms.task_overhead,
             working_precision: 1e-11,
             srft_chains: 2,
             seed: 0x5EED,
@@ -76,9 +85,14 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// The communication cost model this configuration charges.
+    pub fn comms(&self) -> CommsModel {
+        CommsModel { byte_latency: self.shuffle_latency, task_overhead: self.task_overhead }
+    }
+
     /// Build the sparklite driver context for this configuration.
     pub fn context(&self) -> Context {
-        let ctx = Context::new(self.executors).with_fan_in(self.fan_in);
+        let ctx = Context::new(self.executors).with_fan_in(self.fan_in).with_comms(self.comms());
         if self.workers > 0 {
             ctx.with_workers(self.workers)
         } else {
@@ -119,6 +133,20 @@ impl RunConfig {
             }
             "fan-in" | "fan_in" => self.fan_in = value.parse().map_err(|e| bad(&e))?,
             "workers" => self.workers = value.parse().map_err(|e| bad(&e))?,
+            "shuffle-latency" | "shuffle_latency" => {
+                let v: f64 = value.parse().map_err(|e| bad(&e))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("bad value for {key}: must be finite and >= 0"));
+                }
+                self.shuffle_latency = v;
+            }
+            "task-overhead" | "task_overhead" => {
+                let v: f64 = value.parse().map_err(|e| bad(&e))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("bad value for {key}: must be finite and >= 0"));
+                }
+                self.task_overhead = v;
+            }
             "working-precision" | "working_precision" => {
                 self.working_precision = value.parse().map_err(|e| bad(&e))?
             }
@@ -217,6 +245,18 @@ mod tests {
     }
 
     #[test]
+    fn parse_comms_model_flags() {
+        let (c, _) =
+            parse_flags(&s(&["--shuffle-latency", "2e-9", "--task-overhead=1e-3"])).unwrap();
+        assert_eq!(c.shuffle_latency, 2e-9);
+        assert_eq!(c.task_overhead, 1e-3);
+        let model = c.comms();
+        assert_eq!(model.byte_latency, 2e-9);
+        assert_eq!(model.task_overhead, 1e-3);
+        assert!(!model.is_free());
+    }
+
+    #[test]
     fn config_file_then_cli_override() {
         let dir = std::env::temp_dir().join("dsvd_cfg_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -239,5 +279,11 @@ mod tests {
         assert!(parse_flags(&s(&["--executors"])).is_err());
         let mut c = RunConfig::default();
         assert!(c.apply("backend", "cuda").is_err());
+        // comms knobs must be finite and nonnegative (a negative byte
+        // latency would drive the simulated wall clock negative)
+        assert!(c.apply("shuffle-latency", "-1e-9").is_err());
+        assert!(c.apply("task-overhead", "NaN").is_err());
+        assert!(c.apply("task-overhead", "inf").is_err());
+        assert!(c.apply("shuffle-latency", "0").is_ok());
     }
 }

@@ -1,7 +1,7 @@
 //! The driver-side execution context — the mini-Spark "SparkContext" of
 //! this reproduction.
 //!
-//! A [`Context`] owns three things:
+//! A [`Context`] owns four things:
 //!
 //! * a handle to the worker pool that really executes partition tasks
 //!   (shared process-wide by default, dedicated after
@@ -10,18 +10,24 @@
 //!   `maxExecutors`) and the reduction-tree `fan_in` (Spark
 //!   treeAggregate's depth knob) — which drives the simulated wall-clock
 //!   accounting without changing any numerical result;
+//! * the communication cost model ([`CommsModel`]) the simulated
+//!   scheduler charges — per-byte shuffle latency and per-task fixed
+//!   overhead, env-defaulted (`DSVD_SHUFFLE_LATENCY`,
+//!   `DSVD_TASK_OVERHEAD`) and overridable per run;
 //! * the [`Metrics`] accumulator for the current measurement window.
 //!
 //! The two execution primitives mirror Spark's split of the world:
-//! [`Context::stage`] runs a batch of partition tasks in parallel and
-//! charges them to the task clocks, while [`Context::driver`] runs a
-//! serialized closure on the driver and charges it to both clocks
-//! (driver work stalls the whole cluster).
+//! [`Context::stage`] / [`Context::stage_shuffled`] run a batch of
+//! partition tasks in parallel and charge them to the task clocks
+//! (`stage_shuffled` additionally attributes per-task shuffle bytes, so
+//! the scheduler prices the communication each task waits on), while
+//! [`Context::driver`] runs a serialized closure on the driver and
+//! charges it to both clocks (driver work stalls the whole cluster).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::metrics::Metrics;
+use super::metrics::{CommsModel, Metrics};
 use crate::pool::{self, WorkerPool};
 
 /// Simulated-cluster driver context. Cheap to create; every experiment
@@ -29,17 +35,21 @@ use crate::pool::{self, WorkerPool};
 pub struct Context {
     executors: usize,
     fan_in: usize,
+    comms: CommsModel,
     pool: Arc<WorkerPool>,
     metrics: Mutex<Metrics>,
 }
 
 impl Context {
     /// Context for `executors` logical executors, the shared worker
-    /// pool (`DSVD_WORKERS` / all cores), and fan-in 2.
+    /// pool (`DSVD_WORKERS` / all cores), fan-in 2, and the
+    /// env-configured comms model (free unless `DSVD_SHUFFLE_LATENCY` /
+    /// `DSVD_TASK_OVERHEAD` are set).
     pub fn new(executors: usize) -> Context {
         Context {
             executors: executors.max(1),
             fan_in: 2,
+            comms: CommsModel::from_env(),
             pool: Arc::clone(pool::global()),
             metrics: Mutex::new(Metrics::default()),
         }
@@ -57,12 +67,23 @@ impl Context {
         self
     }
 
+    /// Override the communication cost model for this run.
+    pub fn with_comms(mut self, comms: CommsModel) -> Context {
+        self.comms = comms;
+        self
+    }
+
     pub fn executors(&self) -> usize {
         self.executors
     }
 
     pub fn fan_in(&self) -> usize {
         self.fan_in
+    }
+
+    /// The communication cost model charged by the simulated scheduler.
+    pub fn comms(&self) -> CommsModel {
+        self.comms
     }
 
     /// OS worker threads actually executing tasks.
@@ -74,16 +95,41 @@ impl Context {
     /// back in task order (deterministic reductions downstream), and the
     /// stage is charged to the metrics: `cpu_time` gets the sum of task
     /// durations, `wall_clock` their list-scheduled makespan over the
-    /// logical executors.
+    /// logical executors (plus the per-task overhead of the comms
+    /// model). Tasks in a plain `stage` receive no shuffled bytes; use
+    /// [`Context::stage_shuffled`] when they do.
     pub fn stage<'a, T: Send + 'a>(
         &self,
         tasks: Vec<Box<dyn FnOnce() -> T + Send + 'a>>,
     ) -> Vec<T> {
+        self.stage_shuffled(tasks, &[])
+    }
+
+    /// Execute one stage whose task `i` first receives `bytes[i]`
+    /// shuffled bytes over the simulated network (an empty slice means
+    /// zero for every task). The greedy list scheduler places each task
+    /// with duration `measured + comms.task_cost(bytes[i])`, so fan-in
+    /// and shuffle-volume choices move the simulated wall clock the way
+    /// they move a real cluster's.
+    pub fn stage_shuffled<'a, T: Send + 'a>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'a>>,
+        bytes: &[usize],
+    ) -> Vec<T> {
+        assert!(
+            bytes.is_empty() || bytes.len() == tasks.len(),
+            "stage_shuffled: {} byte counts for {} tasks",
+            bytes.len(),
+            tasks.len()
+        );
         let t0 = Instant::now();
         let results = self.pool.run_scoped(tasks);
         let real = t0.elapsed().as_secs_f64();
         let durations: Vec<f64> = results.iter().map(|r| r.1).collect();
-        self.metrics.lock().unwrap().record_stage(&durations, self.executors, real);
+        self.metrics
+            .lock()
+            .unwrap()
+            .record_stage(&durations, bytes, self.executors, &self.comms, real);
         results.into_iter().map(|r| r.0).collect()
     }
 
@@ -111,9 +157,11 @@ impl Context {
         std::mem::take(&mut *self.metrics.lock().unwrap())
     }
 
-    /// Record bytes moved between executors / to the driver.
+    /// Record a driver-bound gather of `bytes` (e.g. `collect`): the
+    /// bytes count toward `shuffle_bytes` and, under a nonzero comms
+    /// model, stall the simulated wall clock at the per-byte latency.
     pub(crate) fn add_shuffle(&self, bytes: usize) {
-        self.metrics.lock().unwrap().add_shuffle(bytes);
+        self.metrics.lock().unwrap().add_shuffle(bytes, &self.comms);
     }
 }
 
@@ -138,7 +186,8 @@ pub(crate) fn chunk_owned<T>(v: Vec<T>, size: usize) -> Vec<Vec<T>> {
 /// Spark's `treeAggregate`: reduce `items` with `merge` over a tree of
 /// fan-in [`Context::fan_in`], each tree level one parallel stage.
 /// `size_of` estimates the shuffled bytes of an item for the metrics
-/// (every non-first member of a merge group moves to its group leader).
+/// (every non-first member of a merge group moves to its group leader,
+/// and the merge task is charged those bytes by the comms model).
 ///
 /// The grouping is by index, and each group folds left-to-right, so the
 /// result is bit-deterministic for a given fan-in regardless of worker
@@ -155,13 +204,9 @@ where
     }
     let fan = ctx.fan_in();
     while level.len() > 1 {
-        let mut moved = 0usize;
-        for g in level.chunks(fan) {
-            for x in &g[1..] {
-                moved += size_of(x);
-            }
-        }
-        ctx.add_shuffle(moved);
+        // every non-leading group member ships to its group leader
+        let group_bytes: Vec<usize> =
+            level.chunks(fan).map(|g| g[1..].iter().map(&size_of).sum()).collect();
 
         let merge_ref = &merge;
         let groups = chunk_owned(level, fan);
@@ -178,7 +223,7 @@ where
                 }) as Box<dyn FnOnce() -> T + Send + '_>
             })
             .collect();
-        level = ctx.stage(tasks);
+        level = ctx.stage_shuffled(tasks, &group_bytes);
     }
     level.into_iter().next()
 }
@@ -200,8 +245,16 @@ mod tests {
     }
 
     #[test]
+    fn with_comms_overrides_the_env_default() {
+        let model = CommsModel { byte_latency: 1e-9, task_overhead: 1e-3 };
+        let ctx = Context::new(4).with_comms(model);
+        assert_eq!(ctx.comms(), model);
+    }
+
+    #[test]
     fn stage_and_driver_feed_the_clocks() {
-        let ctx = Context::new(4).with_workers(2);
+        // pinned to the free model: cpu >= wall only holds there
+        let ctx = Context::new(4).with_workers(2).with_comms(crate::dist::FREE_COMMS);
         let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..8)
             .map(|i| {
                 Box::new(move || {
@@ -226,6 +279,21 @@ mod tests {
         let taken = ctx.take_metrics();
         assert_eq!(taken.stages, 1);
         assert_eq!(ctx.metrics(), Metrics::default());
+    }
+
+    #[test]
+    fn stage_shuffled_prices_the_bytes() {
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
+        let ctx = Context::new(1).with_workers(1).with_comms(model);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4).map(|i| Box::new(move || i) as Box<dyn FnOnce() -> usize + Send>).collect();
+        let out = ctx.stage_shuffled(tasks, &[1, 2, 3, 4]);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        let m = ctx.metrics();
+        assert_eq!(m.shuffle_bytes, 10);
+        // 1 executor: the 10 "seconds" of byte latency all serialize
+        assert!(m.wall_clock >= 10.0, "wall {}", m.wall_clock);
+        assert!((m.comms_time - 10.0).abs() < 1e-9, "comms {}", m.comms_time);
     }
 
     #[test]
@@ -264,5 +332,23 @@ mod tests {
                 tree_aggregate(&ctx, items, |a, b| format!("{a}{b}"), |s| s.len()).unwrap();
             assert_eq!(got, "0123456789abc", "workers={workers}");
         }
+    }
+
+    #[test]
+    fn wider_fan_in_trades_depth_for_volume_per_merge() {
+        // with a per-task overhead the shallow tree (fewer stages, fewer
+        // tasks) finishes sooner even though each merge is bigger
+        let model = CommsModel { byte_latency: 0.0, task_overhead: 0.1 };
+        let wall = |fan: usize| {
+            let ctx = Context::new(64).with_fan_in(fan).with_comms(model).with_workers(1);
+            let _ = tree_aggregate(&ctx, (0..64u64).collect(), |a, b| a + b, |_| 8);
+            ctx.take_metrics().wall_clock
+        };
+        let deep = wall(2);
+        let shallow = wall(8);
+        assert!(
+            shallow < deep,
+            "fan-8 should beat fan-2 under task overhead: {shallow} vs {deep}"
+        );
     }
 }

@@ -11,9 +11,12 @@
 //! Every operation that touches partition data runs as a
 //! [`Context::stage`] fan-out over the worker pool, with FLOP-dominant
 //! products dispatched through the pluggable [`Compute`] backend;
-//! reductions (Gram, column norms, transposed products) fold through
+//! reductions (Gram, column norms, matvecs) fold through
 //! [`tree_aggregate`] so their cost and shuffle volume follow the
-//! configured tree fan-in, exactly like Spark's `treeAggregate`.
+//! configured tree fan-in, exactly like Spark's `treeAggregate`, while
+//! [`DistBlockMatrix::rmatmul_small`] reduces per-block partials keyed
+//! by block-column (one strip task per column, per-task shuffle bytes
+//! attributed by the comms model) instead of shipping n×l slabs.
 
 use crate::linalg::{blas, Matrix};
 use crate::runtime::compute::Compute;
@@ -487,46 +490,87 @@ impl DistBlockMatrix {
     }
 
     /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l) — the
-    /// `B = QᵀA` step of Algorithm 6 read transposed. One task per
-    /// block-row pairs its blocks with the matching rows of `Q`; the
-    /// n×l partials fold through treeAggregate to the driver.
+    /// `B = QᵀA` step of Algorithm 6 read transposed.
+    ///
+    /// One task **per block** pairs that block with its rows of `Q` and
+    /// emits one `(c1−c0)×l` partial keyed by block-column — never an
+    /// n×l slab, so peak task memory is `O(block rows·l + block
+    /// width·l)` however wide the matrix is (the n ≫ 10⁴ regime). A
+    /// second stage then folds each block-column's partials in
+    /// block-row order: one parallel reduce task per column strip,
+    /// each charged only the bytes of the strips it receives, replacing
+    /// the former `log_f`-level treeAggregate of dense n×l slabs
+    /// (bounded task memory, fewer stages, and per-task shuffle the
+    /// comms model can attribute to the column that caused it). The
+    /// `Q` row slab is re-sliced per block — `O(rows·l)` copies, noise
+    /// next to the `O(rows·width·l)` GEMM each task performs.
     pub fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
         assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
         let l = q.cols();
         let n = self.cols;
         let cb = &self.col_bounds;
         let rb = &self.row_bounds;
-        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
+        let nbc = cb.len() - 1;
+        let nbr = rb.len() - 1;
+
+        // stage 1 — one task per block, one column-keyed partial each
+        let mut tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> =
+            Vec::with_capacity(nbr * nbc);
+        for (bi, row_blocks) in self.grid.iter().enumerate() {
+            let r0 = rb[bi];
+            let r1 = rb[bi + 1];
+            for b in row_blocks.iter() {
+                tasks.push(Box::new(move || {
                     let qs = q.rows_slice(r0, r1);
-                    let mut acc = Matrix::zeros(n, l);
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let partial = be.matmul_tn(b, &qs); // (c1−c0) × l
-                        for (i, c) in (cb[bj]..cb[bj + 1]).enumerate() {
-                            acc.row_mut(c).copy_from_slice(partial.row(i));
-                        }
+                    be.matmul_tn(b, &qs)
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>);
+            }
+        }
+        let flat = ctx.stage(tasks);
+
+        // regroup by block-column (driver pointer work, no data copied):
+        // flat is block-row major, flat[bi·nbc + bj] ↦ by_col[bj][bi]
+        let mut by_col: Vec<Vec<Matrix>> = (0..nbc).map(|_| Vec::with_capacity(nbr)).collect();
+        let mut it = flat.into_iter();
+        for _bi in 0..nbr {
+            for bj in 0..nbc {
+                by_col[bj].push(it.next().expect("one strip per grid block"));
+            }
+        }
+
+        // stage 2 — fold each column strip in block-row order; every
+        // non-leading partial ships to the column's reduce task
+        let bytes: Vec<usize> = by_col
+            .iter()
+            .map(|ps| ps[1..].iter().map(|p| 8 * p.rows() * p.cols()).sum())
+            .collect();
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = by_col
+            .into_iter()
+            .map(|ps| {
+                Box::new(move || {
+                    let mut it = ps.into_iter();
+                    let mut acc = it.next().expect("every column has one partial per block-row");
+                    for p in it {
+                        acc.add_assign(&p);
                     }
                     acc
                 }) as Box<dyn FnOnce() -> Matrix + Send + '_>
             })
             .collect();
-        let partials = ctx.stage(tasks);
-        tree_aggregate(
-            ctx,
-            partials,
-            |mut a, b| {
-                a.add_assign(&b);
-                a
-            },
-            |m| 8 * m.rows() * m.cols(),
-        )
-        .unwrap_or_else(|| Matrix::zeros(n, l))
+        let strips = ctx.stage_shuffled(tasks, &bytes);
+
+        // assemble the driver-held n×l from the column strips — a
+        // driver-bound gather, charged like `collect`
+        ctx.add_shuffle(8 * n * l);
+        ctx.driver(|| {
+            let mut out = Matrix::zeros(n, l);
+            for (bj, strip) in strips.iter().enumerate() {
+                for (i, c) in (cb[bj]..cb[bj + 1]).enumerate() {
+                    out.row_mut(c).copy_from_slice(strip.row(i));
+                }
+            }
+            out
+        })
     }
 
     /// `y = A·x` (length m), one task per block-row.
@@ -752,7 +796,8 @@ mod tests {
 
     #[test]
     fn stages_are_counted_per_operation() {
-        let ctx = Context::new(4);
+        // pinned to the free model: cpu >= wall only holds there
+        let ctx = Context::new(4).with_comms(crate::dist::FREE_COMMS);
         let a = randmat(8, 64, 6);
         let d = DistRowMatrix::from_matrix(&a, 8);
         ctx.reset_metrics();

@@ -1,53 +1,143 @@
 //! Per-run execution metrics — the "CPU Time" and "Wall-Clock" columns
 //! of the paper's tables, plus the scheduler bookkeeping the benches
-//! report (stage/task counts, shuffled bytes).
+//! report (stage/task counts, shuffled bytes, modeled communication).
 //!
 //! Two clocks are kept deliberately distinct:
 //!
 //! * `cpu_time` — the sum of measured task durations plus driver-side
 //!   work. Independent of how many OS workers or logical executors run
 //!   the job (the paper's Appendix A contract: shrinking the cluster
-//!   10× leaves CPU time comparable).
-//! * `wall_clock` — the *simulated* elapsed time of the same task
-//!   durations list-scheduled onto `executors` logical executors, the
-//!   way Spark's greedy scheduler places tasks. This is the column that
-//!   moves when `--executors` changes, exactly as in Tables 3–5 vs
-//!   11–13.
+//!   10× leaves CPU time comparable). Communication is *not* CPU, so
+//!   the comms model never feeds this clock.
+//! * `wall_clock` — the *simulated* elapsed time of the same tasks
+//!   list-scheduled onto `executors` logical executors, the way Spark's
+//!   greedy scheduler places tasks. Each task is charged its measured
+//!   compute duration **plus** its communication cost under the
+//!   configured [`CommsModel`]: a fixed per-task overhead (scheduling /
+//!   serialization latency) and a per-byte latency on the shuffle bytes
+//!   that task receives. This is the column that moves when
+//!   `--executors`, `--fan-in`, or the comms knobs change, exactly as
+//!   in Tables 3–5 vs 11–13 — and the column that lets fan-in ablations
+//!   trade reduction-tree depth against shuffle volume realistically.
 //!
 //! `driver_elapsed` additionally records the *real* elapsed seconds the
 //! driver observed (stages + serialized driver sections) — the number
 //! that shrinks when `DSVD_WORKERS` grows on a multi-core machine.
 //!
-//! Invariant: `cpu_time >= wall_clock` always (a makespan over E ≥ 1
-//! executors can never exceed the serial sum, and driver work adds to
-//! both sides equally).
+//! Invariant: with the free comms model (the default),
+//! `cpu_time >= wall_clock` always — a makespan over E ≥ 1 executors
+//! can never exceed the serial sum, and driver work adds to both sides
+//! equally. With a nonzero comms model the guaranteed invariant becomes
+//! `cpu_time + comms_time >= wall_clock`: the simulated schedule can
+//! never beat the serial sum of compute *plus* communication charges.
+
+/// Communication cost model for the simulated cluster: what one task
+/// pays, on top of its measured compute time, for the bytes it receives
+/// over the (simulated) network and for being launched at all.
+///
+/// Tunable like `DSVD_WORKERS`: the environment variables
+/// `DSVD_SHUFFLE_LATENCY` (seconds per shuffled byte, e.g. `1e-9` for a
+/// 1 GB/s fabric) and `DSVD_TASK_OVERHEAD` (seconds per task, Spark's
+/// task-launch latency, typically `1e-3`–`1e-2`) set the process-wide
+/// default; `RunConfig`'s `--shuffle-latency` / `--task-overhead` flags
+/// and [`Context::with_comms`](super::Context::with_comms) override it
+/// per run. Both default to zero — the PR-1 zero-cost behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommsModel {
+    /// Seconds charged per shuffled byte a task receives.
+    pub byte_latency: f64,
+    /// Fixed seconds charged per task (launch + serialization).
+    pub task_overhead: f64,
+}
+
+/// Zero-cost model: communication is free, tasks launch instantly.
+pub const FREE_COMMS: CommsModel = CommsModel { byte_latency: 0.0, task_overhead: 0.0 };
+
+impl CommsModel {
+    /// The env var `key` parsed under the model's acceptance rule —
+    /// `Some` only for a finite, nonnegative f64. The single source of
+    /// truth for "is this comms env var usable", shared by
+    /// [`CommsModel::from_env`] and the bench sweep defaults.
+    pub fn env_override(key: &str) -> Option<f64> {
+        std::env::var(key)
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|x| x.is_finite() && *x >= 0.0)
+    }
+
+    /// Model from `DSVD_SHUFFLE_LATENCY` / `DSVD_TASK_OVERHEAD`,
+    /// defaulting to the free model when unset (or unusable).
+    pub fn from_env() -> CommsModel {
+        CommsModel {
+            byte_latency: Self::env_override("DSVD_SHUFFLE_LATENCY").unwrap_or(0.0),
+            task_overhead: Self::env_override("DSVD_TASK_OVERHEAD").unwrap_or(0.0),
+        }
+    }
+
+    /// True when this model charges nothing (the PR-1 behaviour).
+    pub fn is_free(&self) -> bool {
+        self.byte_latency == 0.0 && self.task_overhead == 0.0
+    }
+
+    /// Seconds one task pays for receiving `bytes` shuffled bytes.
+    pub fn task_cost(&self, bytes: usize) -> f64 {
+        self.task_overhead + self.byte_latency * bytes as f64
+    }
+}
 
 /// Accumulated metrics for one measurement window (between
 /// `Context::reset_metrics` and `Context::take_metrics`).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Metrics {
-    /// Total task + driver compute, seconds.
+    /// Total task + driver compute, seconds (communication excluded).
     pub cpu_time: f64,
-    /// Simulated wall clock on `executors` logical executors, seconds.
+    /// Simulated wall clock on `executors` logical executors, seconds
+    /// (compute + modeled communication, list-scheduled).
     pub wall_clock: f64,
     /// Real elapsed seconds observed by the driver thread.
     pub driver_elapsed: f64,
+    /// Total modeled communication seconds charged (per-task overhead +
+    /// per-byte latency, summed over tasks and driver gathers).
+    pub comms_time: f64,
     /// Number of stages executed.
     pub stages: usize,
     /// Number of partition tasks executed.
     pub tasks: usize,
-    /// Bytes moved between executors (tree merges) or to the driver.
+    /// Bytes moved between executors (tree merges, broadcast-down
+    /// transforms) or to the driver.
     pub shuffle_bytes: usize,
 }
 
 impl Metrics {
-    /// Fold one completed stage into the totals.
-    pub(crate) fn record_stage(&mut self, durations: &[f64], executors: usize, real_elapsed: f64) {
+    /// Fold one completed stage into the totals. `bytes[i]` is the
+    /// shuffle volume task `i` receives (an empty slice means no task
+    /// receives anything); the list scheduler places each task with its
+    /// compute duration plus its `model.task_cost(bytes[i])` charge.
+    pub(crate) fn record_stage(
+        &mut self,
+        durations: &[f64],
+        bytes: &[usize],
+        executors: usize,
+        model: &CommsModel,
+        real_elapsed: f64,
+    ) {
+        debug_assert!(bytes.is_empty() || bytes.len() == durations.len());
         self.stages += 1;
         self.tasks += durations.len();
         self.cpu_time += durations.iter().sum::<f64>();
-        self.wall_clock += simulate_makespan(durations, executors);
         self.driver_elapsed += real_elapsed;
+        self.shuffle_bytes += bytes.iter().sum::<usize>();
+        if model.is_free() {
+            self.wall_clock += simulate_makespan(durations, executors);
+        } else {
+            let effective: Vec<f64> = durations
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| d + model.task_cost(bytes.get(i).copied().unwrap_or(0)))
+                .collect();
+            self.comms_time += effective.iter().sum::<f64>() - durations.iter().sum::<f64>();
+            self.wall_clock += simulate_makespan(&effective, executors);
+        }
     }
 
     /// Fold one serialized driver-side section into the totals.
@@ -57,8 +147,14 @@ impl Metrics {
         self.driver_elapsed += secs;
     }
 
-    pub(crate) fn add_shuffle(&mut self, bytes: usize) {
+    /// Record a driver-bound gather (e.g. `collect`): the whole cluster
+    /// stalls while the bytes drain to the driver, so the per-byte
+    /// charge lands on the wall clock directly.
+    pub(crate) fn add_shuffle(&mut self, bytes: usize, model: &CommsModel) {
         self.shuffle_bytes += bytes;
+        let t = model.byte_latency * bytes as f64;
+        self.comms_time += t;
+        self.wall_clock += t;
     }
 }
 
@@ -117,20 +213,68 @@ mod tests {
     }
 
     #[test]
-    fn cpu_never_below_wall() {
+    fn cpu_never_below_wall_under_free_comms() {
         let mut m = Metrics::default();
-        m.record_stage(&[1.0, 2.0, 0.5], 2, 0.1);
+        m.record_stage(&[1.0, 2.0, 0.5], &[], 2, &FREE_COMMS, 0.1);
         m.record_driver(0.3);
-        m.record_stage(&[0.25; 16], 4, 0.05);
+        m.record_stage(&[0.25; 16], &[0; 16], 4, &FREE_COMMS, 0.05);
         assert!(m.cpu_time >= m.wall_clock);
+        assert_eq!(m.comms_time, 0.0);
         assert_eq!(m.stages, 2);
         assert_eq!(m.tasks, 19);
     }
 
     #[test]
+    fn comms_model_charges_bytes_and_overhead() {
+        let model = CommsModel { byte_latency: 1e-6, task_overhead: 0.5 };
+        assert!(!model.is_free());
+        assert!((model.task_cost(1_000_000) - 1.5).abs() < 1e-12);
+
+        let mut m = Metrics::default();
+        // 2 tasks, 1 executor: wall = (1.0 + 0.5 + 1.0) + (2.0 + 0.5 + 0.0)
+        m.record_stage(&[1.0, 2.0], &[1_000_000, 0], 1, &model, 0.0);
+        assert_eq!(m.shuffle_bytes, 1_000_000);
+        assert!((m.cpu_time - 3.0).abs() < 1e-12);
+        assert!((m.comms_time - 2.0).abs() < 1e-12);
+        assert!((m.wall_clock - 5.0).abs() < 1e-12, "wall {}", m.wall_clock);
+        // the honest invariant under a nonzero model
+        assert!(m.cpu_time + m.comms_time >= m.wall_clock - 1e-12);
+    }
+
+    #[test]
+    fn comms_model_moves_wall_clock_with_distribution() {
+        // same total bytes, different placement: concentrating shuffle
+        // on one task lengthens the critical path
+        let model = CommsModel { byte_latency: 1e-3, task_overhead: 0.0 };
+        let mut spread = Metrics::default();
+        spread.record_stage(&[1.0, 1.0], &[500, 500], 2, &model, 0.0);
+        let mut lumped = Metrics::default();
+        lumped.record_stage(&[1.0, 1.0], &[1000, 0], 2, &model, 0.0);
+        assert!(lumped.wall_clock > spread.wall_clock);
+        assert_eq!(lumped.shuffle_bytes, spread.shuffle_bytes);
+    }
+
+    #[test]
+    fn driver_gather_stalls_the_wall_clock() {
+        let model = CommsModel { byte_latency: 1e-6, task_overhead: 0.0 };
+        let mut m = Metrics::default();
+        m.add_shuffle(2_000_000, &model);
+        assert_eq!(m.shuffle_bytes, 2_000_000);
+        assert!((m.wall_clock - 2.0).abs() < 1e-12);
+        assert_eq!(m.cpu_time, 0.0);
+    }
+
+    #[test]
+    fn free_model_from_empty_env_is_free() {
+        // (the test environment does not set the DSVD_* comms vars)
+        assert!(FREE_COMMS.is_free());
+        assert_eq!(FREE_COMMS.task_cost(1 << 30), 0.0);
+    }
+
+    #[test]
     fn take_semantics_via_default() {
         let mut m = Metrics::default();
-        m.add_shuffle(1024);
+        m.add_shuffle(1024, &FREE_COMMS);
         let taken = std::mem::take(&mut m);
         assert_eq!(taken.shuffle_bytes, 1024);
         assert_eq!(m, Metrics::default());

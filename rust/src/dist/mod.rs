@@ -13,7 +13,7 @@
 //! | [`DistBlockMatrix`] | `BlockMatrix` | dense block grid |
 //! | [`tree_aggregate`] | `treeAggregate` | fan-in-wide parallel merges |
 //! | [`tsqr`] / [`tsqr_r`] | modified `computeSVD` QR | reduction-tree TSQR |
-//! | [`Metrics`] | Spark UI stage metrics | CPU/wall/shuffle accounting |
+//! | [`Metrics`] / [`CommsModel`] | Spark UI stage metrics | CPU/wall/shuffle accounting + priced communication |
 //!
 //! Determinism is a hard guarantee: stage results return in task order
 //! and every reduction folds groups by index, so the factorizations are
@@ -34,5 +34,5 @@ pub use crate::pool;
 
 pub use context::{tree_aggregate, Context};
 pub use matrix::{DistBlockMatrix, DistRowMatrix, RowPartition};
-pub use metrics::{simulate_makespan, Metrics};
-pub use tsqr::{tsqr, tsqr_r, TsqrFactors};
+pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
+pub use tsqr::{tsqr, tsqr_lineage, tsqr_r, TsqrFactors};

@@ -11,20 +11,39 @@
 //! to show. Only R factors move between executors (n×n each), never
 //! row data: that is the communication-avoiding part.
 //!
-//! Two entry points:
+//! Three entry points:
 //!
 //! * [`tsqr_r`] — R only. The paper's Spark implementation stops here
 //!   and reconstitutes Q implicitly as `A·R₁₁⁻¹` (see
 //!   `algs::tall_skinny::implicit_q`), accepting the `eps·cond(R₁₁)`
 //!   orthonormality loss that Algorithm 2's second pass repairs.
-//! * [`tsqr`] — explicit Q: the merge tree also carries, per original
-//!   partition, the accumulated basis transform `P_i` such that the
-//!   final `Q` partition is `Q_leaf,i · P_i`. More small GEMMs, but Q
-//!   comes out orthonormal to machine precision in a single pass (the
-//!   ablation upgrade over the paper's code).
+//! * [`tsqr`] — explicit Q by **two-pass down-sweep reconstruction**:
+//!   the up-sweep is exactly [`tsqr_r`]'s R-factor tree, except each
+//!   merge task also keeps its small Householder Q resident on its
+//!   executor; the down-sweep then broadcasts accumulated basis
+//!   transforms back down the same tree — the root's children receive
+//!   their row block of the root's merge Q, every deeper node left-
+//!   multiplies its own block into what its parent sent, and each leaf
+//!   finally materializes `Q_i = Q_leaf,i · T_i`. Exactly one
+//!   `k_child × k_root` transform crosses each tree edge, so the
+//!   shuffle volume is `O(P·n²)` — strictly below the lineage
+//!   alternative's `O(P·log_f(P)·n²)` (see [`tsqr_lineage`]) — while Q
+//!   still comes out orthonormal to machine precision in a single
+//!   logical pass over the data.
+//! * [`tsqr_lineage`] — the PR-1 implementation, kept as the ablation
+//!   reference: the merge tree carries, per original partition, the
+//!   accumulated transform `P_i` through every merge task, so every
+//!   level re-ships every partition's lineage. Numerically it computes
+//!   the same product of merge-Q blocks as [`tsqr`] (associated
+//!   left-to-right instead of right-to-left, so the two agree to
+//!   floating-point roundoff, not bit-for-bit), at measurably higher
+//!   shuffle volume — the regression test in `tests/dist_shapes.rs`
+//!   pins both facts.
 
 use crate::linalg::qr::thin_qr;
 use crate::linalg::{blas, Matrix};
+
+use std::sync::Arc;
 
 use super::context::{chunk_owned, Context};
 use super::matrix::{DistRowMatrix, RowPartition};
@@ -51,9 +70,18 @@ fn stack(rs: &[&Matrix]) -> Matrix {
     out
 }
 
+/// Bytes of the non-leading R factors in each fan-in group (those are
+/// the factors that move to the group leader's executor).
+fn group_r_bytes(rs: &[Matrix], fan: usize) -> Vec<usize> {
+    rs.chunks(fan)
+        .map(|g| g[1..].iter().map(|r| 8 * r.rows() * r.cols()).sum())
+        .collect()
+}
+
 /// R-only TSQR of a distributed tall matrix: per-partition Householder
 /// QR, then fan-in-wide R merges up the tree, one parallel stage per
-/// level. Returns the final upper-triangular R (k×n).
+/// level (each merge task charged the bytes of the Rs it receives).
+/// Returns the final upper-triangular R (k×n).
 pub fn tsqr_r(ctx: &Context, a: &DistRowMatrix) -> Matrix {
     assert!(!a.parts.is_empty(), "tsqr_r of an empty matrix");
     // leaf stage: local QR per partition, keep R only
@@ -66,7 +94,7 @@ pub fn tsqr_r(ctx: &Context, a: &DistRowMatrix) -> Matrix {
 
     let fan = ctx.fan_in();
     while level.len() > 1 {
-        count_moved_r(ctx, level.iter(), fan);
+        let bytes = group_r_bytes(&level, fan);
         let groups = chunk_owned(level, fan);
         let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = groups
             .into_iter()
@@ -80,34 +108,189 @@ pub fn tsqr_r(ctx: &Context, a: &DistRowMatrix) -> Matrix {
                 }) as Box<dyn FnOnce() -> Matrix + Send + '_>
             })
             .collect();
-        level = ctx.stage(tasks);
+        level = ctx.stage_shuffled(tasks, &bytes);
     }
     level.pop().expect("non-empty reduction")
 }
 
-/// Count the bytes of every non-leading R in each merge group (those
-/// are the factors that move to the group leader's executor).
-fn count_moved_r<'m>(ctx: &Context, rs: impl Iterator<Item = &'m Matrix>, fan: usize) {
-    let mut moved = 0usize;
-    for (i, r) in rs.enumerate() {
-        if i % fan != 0 {
-            moved += 8 * r.rows() * r.cols();
-        }
-    }
-    ctx.add_shuffle(moved);
+// ---------------------------------------------------------------------------
+// two-pass explicit Q (up-sweep + down-sweep)
+// ---------------------------------------------------------------------------
+
+/// One merge group recorded by the up-sweep for the down-sweep to walk
+/// back: the row sizes of the stacked children and (for real merges)
+/// the merge factor's Q, resident on the merge executor.
+struct MergeGroup {
+    /// `r.rows()` of each child, in stack order.
+    child_ks: Vec<usize>,
+    /// The stacked factorization's Q (`Σ child_ks × k_out`); `None` for
+    /// singleton pass-through groups, which never factor anything.
+    q: Option<Matrix>,
 }
 
-/// One node of the explicit-Q merge tree: its current R factor plus,
-/// for every original partition beneath it, the accumulated transform
-/// `P` (k_leaf × k_node) mapping leaf-Q columns to node-Q columns.
+/// Explicit-Q TSQR via two-pass down-sweep reconstruction (see module
+/// docs). Pass 1 is the R-factor tree of [`tsqr_r`] with each merge Q
+/// kept where it was computed; pass 2 broadcasts one accumulated
+/// `k_child × k_root` transform down each tree edge and materializes
+/// `Q_i = Q_leaf,i · T_i` at the leaves.
+pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
+    assert!(!a.parts.is_empty(), "tsqr of an empty matrix");
+
+    // ---- pass 1 (up-sweep): leaf QRs, then the R merge tree --------
+    let tasks: Vec<Box<dyn FnOnce() -> crate::linalg::qr::QrFactors + Send + '_>> = a
+        .parts
+        .iter()
+        .map(|p| {
+            Box::new(move || thin_qr(&p.data))
+                as Box<dyn FnOnce() -> crate::linalg::qr::QrFactors + Send + '_>
+        })
+        .collect();
+    let leaves = ctx.stage(tasks);
+
+    let mut leaf_q: Vec<Matrix> = Vec::with_capacity(leaves.len());
+    let mut rs: Vec<Matrix> = Vec::with_capacity(leaves.len());
+    for f in leaves {
+        leaf_q.push(f.q);
+        rs.push(f.r);
+    }
+
+    let fan = ctx.fan_in();
+    // merge levels bottom-up; levels[j] groups the nodes of level j
+    let mut levels: Vec<Vec<MergeGroup>> = Vec::new();
+    while rs.len() > 1 {
+        let bytes = group_r_bytes(&rs, fan);
+        let groups = chunk_owned(rs, fan);
+        let tasks: Vec<Box<dyn FnOnce() -> (Matrix, MergeGroup) + Send + '_>> = groups
+            .into_iter()
+            .map(|g| {
+                Box::new(move || {
+                    let child_ks: Vec<usize> = g.iter().map(|r| r.rows()).collect();
+                    if g.len() == 1 {
+                        let r = g.into_iter().next().expect("singleton group");
+                        return (r, MergeGroup { child_ks, q: None });
+                    }
+                    let refs: Vec<&Matrix> = g.iter().collect();
+                    let f = thin_qr(&stack(&refs));
+                    (f.r, MergeGroup { child_ks, q: Some(f.q) })
+                }) as Box<dyn FnOnce() -> (Matrix, MergeGroup) + Send + '_>
+            })
+            .collect();
+        let out = ctx.stage_shuffled(tasks, &bytes);
+        let mut level_groups = Vec::with_capacity(out.len());
+        rs = Vec::with_capacity(out.len());
+        for (r, grp) in out {
+            rs.push(r);
+            level_groups.push(grp);
+        }
+        levels.push(level_groups);
+    }
+    let root_r = rs.pop().expect("non-empty reduction");
+
+    // ---- pass 2 (down-sweep): broadcast transforms down the tree ---
+    // transforms[v] maps node v's basis to the root basis
+    // (k_v × k_root); `None` encodes the identity (the root, and
+    // anything reached only through singleton pass-through groups).
+    enum Slot {
+        /// Singleton pass-through: inherit the parent transform.
+        Inherit(usize),
+        /// Real merge edge: the result of down-sweep job `j`.
+        Job(usize),
+    }
+    let mut transforms: Vec<Option<Arc<Matrix>>> = vec![None];
+    for lev in levels.iter().rev() {
+        let mut slots: Vec<Slot> = Vec::new();
+        // (merge Q, child row offset, child k, parent transform): the
+        // block slicing happens inside the measured task, where the
+        // parent executor really performs it
+        let mut jobs: Vec<(&Matrix, usize, usize, Option<Arc<Matrix>>)> = Vec::new();
+        let mut bytes: Vec<usize> = Vec::new();
+        for (g, group) in lev.iter().enumerate() {
+            match &group.q {
+                None => slots.push(Slot::Inherit(g)),
+                Some(q) => {
+                    let k_out = q.cols();
+                    let k_root = transforms[g].as_ref().map_or(k_out, |t| t.cols());
+                    let mut off = 0;
+                    for &kj in &group.child_ks {
+                        // the accumulated transform crosses the edge
+                        bytes.push(8 * kj * k_root);
+                        jobs.push((q, off, kj, transforms[g].clone()));
+                        slots.push(Slot::Job(jobs.len() - 1));
+                        off += kj;
+                    }
+                }
+            }
+        }
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = jobs
+            .iter()
+            .map(|(q, off, kj, parent)| {
+                Box::new(move || {
+                    // this child's row block of the parent's merge Q
+                    let block = q.slice(*off, *off + *kj, 0, q.cols());
+                    match parent {
+                        // child of the root: its block IS its transform
+                        None => block,
+                        Some(p) => blas::matmul(&block, p),
+                    }
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let mut results: Vec<Option<Matrix>> =
+            ctx.stage_shuffled(tasks, &bytes).into_iter().map(Some).collect();
+        let next: Vec<Option<Arc<Matrix>>> = slots
+            .into_iter()
+            .map(|s| match s {
+                Slot::Inherit(g) => transforms[g].clone(),
+                Slot::Job(j) => {
+                    Some(Arc::new(results[j].take().expect("each job feeds one child")))
+                }
+            })
+            .collect();
+        transforms = next;
+    }
+    debug_assert_eq!(transforms.len(), leaf_q.len());
+
+    // ---- final stage: materialize each Q partition locally ---------
+    // (leaf Q never moved; its transform arrived in the down-sweep)
+    let k = root_r.rows();
+    let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = (0..leaf_q.len())
+        .map(|i| {
+            let lq = &leaf_q[i];
+            let t = &transforms[i];
+            let r0 = a.parts[i].row_start;
+            Box::new(move || RowPartition {
+                row_start: r0,
+                data: match t {
+                    None => lq.clone(),
+                    Some(t) => blas::matmul(lq, t),
+                },
+            }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+        })
+        .collect();
+    let parts = ctx.stage(tasks);
+    TsqrFactors { q: DistRowMatrix::from_parts(parts, a.rows(), k), r: root_r }
+}
+
+// ---------------------------------------------------------------------------
+// lineage explicit Q (the PR-1 implementation, kept for the ablation)
+// ---------------------------------------------------------------------------
+
+/// One node of the explicit-Q lineage merge tree: its current R factor
+/// plus, for every original partition beneath it, the accumulated
+/// transform `P` (k_leaf × k_node) mapping leaf-Q columns to node-Q
+/// columns.
 struct Node {
     r: Matrix,
     lineage: Vec<(usize, Matrix)>,
 }
 
-/// Explicit-Q TSQR (see module docs).
-pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
-    assert!(!a.parts.is_empty(), "tsqr of an empty matrix");
+/// Explicit-Q TSQR carrying per-partition lineage transforms through
+/// every merge task — the PR-1 implementation, superseded by [`tsqr`]'s
+/// two-pass down-sweep but kept as the ablation baseline: it ships
+/// `O(P·log_f(P))` small transforms where the down-sweep ships `O(P)`,
+/// a difference the comms model prices into `wall_clock`.
+pub fn tsqr_lineage(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
+    assert!(!a.parts.is_empty(), "tsqr_lineage of an empty matrix");
 
     // leaf stage: full local QR per partition
     let tasks: Vec<Box<dyn FnOnce() -> crate::linalg::qr::QrFactors + Send + '_>> = a
@@ -135,16 +318,22 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
         // unlike the R-only path, every non-leader node also ships its
         // lineage transforms to the group leader — the communication
         // cost of carrying explicit Q, which the ablations compare
-        let mut moved = 0usize;
-        for (i, nd) in level.iter().enumerate() {
-            if i % fan != 0 {
-                moved += 8 * nd.r.rows() * nd.r.cols();
-                for (_, p) in &nd.lineage {
-                    moved += 8 * p.rows() * p.cols();
-                }
-            }
-        }
-        ctx.add_shuffle(moved);
+        let bytes: Vec<usize> = level
+            .chunks(fan)
+            .map(|g| {
+                g[1..]
+                    .iter()
+                    .map(|nd| {
+                        8 * nd.r.rows() * nd.r.cols()
+                            + nd
+                                .lineage
+                                .iter()
+                                .map(|(_, p)| 8 * p.rows() * p.cols())
+                                .sum::<usize>()
+                    })
+                    .sum()
+            })
+            .collect();
         let groups = chunk_owned(level, fan);
         let tasks: Vec<Box<dyn FnOnce() -> Node + Send + '_>> = groups
             .into_iter()
@@ -170,7 +359,7 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
                 }) as Box<dyn FnOnce() -> Node + Send + '_>
             })
             .collect();
-        level = ctx.stage(tasks);
+        level = ctx.stage_shuffled(tasks, &bytes);
     }
     let root = level.pop().expect("non-empty reduction");
     let k = root.r.rows();
@@ -183,8 +372,8 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
     let transforms: Vec<Matrix> =
         pmap.into_iter().map(|p| p.expect("every partition reaches the root")).collect();
     // distributing each root transform back to its partition's executor
-    // is the down-sweep's communication
-    ctx.add_shuffle(transforms.iter().map(|p| 8 * p.rows() * p.cols()).sum());
+    // is this variant's final-hop communication
+    let bytes: Vec<usize> = transforms.iter().map(|p| 8 * p.rows() * p.cols()).collect();
     let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = (0..transforms.len())
         .map(|i| {
             let lq = &leaf_q[i];
@@ -194,7 +383,7 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
                 as Box<dyn FnOnce() -> RowPartition + Send + '_>
         })
         .collect();
-    let parts = ctx.stage(tasks);
+    let parts = ctx.stage_shuffled(tasks, &bytes);
     TsqrFactors { q: DistRowMatrix::from_parts(parts, a.rows(), k), r: root.r }
 }
 
@@ -210,19 +399,20 @@ mod tests {
 
     fn check_factorization(ctx: &Context, a: &Matrix, rpp: usize) {
         let d = DistRowMatrix::from_matrix(a, rpp);
-        let f = tsqr(ctx, &d);
-        let k = f.r.rows();
-        assert!(k <= a.rows().min(a.cols()));
-        for i in 0..k {
-            for j in 0..i.min(f.r.cols()) {
-                assert_eq!(f.r[(i, j)], 0.0, "R not upper triangular");
+        for f in [tsqr(ctx, &d), tsqr_lineage(ctx, &d)] {
+            let k = f.r.rows();
+            assert!(k <= a.rows().min(a.cols()));
+            for i in 0..k {
+                for j in 0..i.min(f.r.cols()) {
+                    assert_eq!(f.r[(i, j)], 0.0, "R not upper triangular");
+                }
             }
+            let ql = f.q.collect(ctx);
+            let orth = blas::matmul(&ql.transpose(), &ql).sub(&Matrix::eye(k)).max_abs();
+            assert!(orth < 1e-12, "orth {orth}");
+            let rec = blas::matmul(&ql, &f.r).sub(a).max_abs();
+            assert!(rec < 1e-12 * (1.0 + a.max_abs()), "recon {rec}");
         }
-        let ql = f.q.collect(ctx);
-        let orth = blas::matmul(&ql.transpose(), &ql).sub(&Matrix::eye(k)).max_abs();
-        assert!(orth < 1e-12, "orth {orth}");
-        let rec = blas::matmul(&ql, &f.r).sub(a).max_abs();
-        assert!(rec < 1e-12 * (1.0 + a.max_abs()), "recon {rec}");
     }
 
     #[test]
@@ -266,6 +456,18 @@ mod tests {
     }
 
     #[test]
+    fn two_pass_r_is_bit_identical_to_lineage_r() {
+        // both variants run the identical up-sweep (same stacks, same
+        // thin_qr calls), so the R factors must agree to the bit
+        let ctx = Context::new(8).with_fan_in(2);
+        let a = randmat(11, 300, 9);
+        let d = DistRowMatrix::from_matrix(&a, 11);
+        let r_two_pass = tsqr(&ctx, &d).r;
+        let r_lineage = tsqr_lineage(&ctx, &d).r;
+        assert_eq!(r_two_pass.data(), r_lineage.data());
+    }
+
+    #[test]
     fn partitions_smaller_than_cols() {
         // slabs of 3 rows for a 10-column matrix: leaf Rs are 3×10
         let ctx = Context::new(4);
@@ -300,5 +502,23 @@ mod tests {
         assert!(bytes[0] > 0 && bytes[1] > 0);
         // wider fan-in: fewer levels, fewer intermediate Rs shuffled
         assert!(bytes[1] <= bytes[0], "fan 8 {} vs fan 2 {}", bytes[1], bytes[0]);
+    }
+
+    #[test]
+    fn down_sweep_ships_fewer_bytes_than_lineage() {
+        let a = randmat(10, 512, 8);
+        for (rpp, fan) in [(16usize, 2usize), (16, 4), (128, 2), (512, 2)] {
+            let ctx = Context::new(8).with_fan_in(fan);
+            let d = DistRowMatrix::from_matrix(&a, rpp);
+            ctx.reset_metrics();
+            let _ = tsqr(&ctx, &d);
+            let two_pass = ctx.take_metrics().shuffle_bytes;
+            let _ = tsqr_lineage(&ctx, &d);
+            let lineage = ctx.take_metrics().shuffle_bytes;
+            assert!(
+                two_pass < lineage,
+                "rpp={rpp} fan={fan}: two-pass {two_pass} vs lineage {lineage}"
+            );
+        }
     }
 }

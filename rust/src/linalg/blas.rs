@@ -61,11 +61,47 @@ fn par_reduce(
 }
 
 /// C = A · B (plain).
+///
+/// §Perf: each row of C depends only on the matching row of A, so tall
+/// products chunk their M-panels across the shared worker pool like
+/// `gram`/`matmul_tn` and stitch the disjoint C panels back by row —
+/// no floating-point merge at all, hence the result is bit-identical
+/// to the serial kernel for every chunking and every `DSVD_WORKERS`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch {:?}x{:?}", a.shape(), b.shape());
-    let mut c = Matrix::zeros(a.rows(), b.cols());
-    gemm_acc(&mut c, a, b);
-    c
+    let (m, k) = a.shape();
+    let n = b.cols();
+    // The serial kernel and the chunked path are bit-identical (row
+    // panels never merge sums), so skipping the fan-out where it cannot
+    // help — inside a worker task or on a 1-thread pool — saves the
+    // panel copies without affecting any result.
+    let pool_can_help = !crate::pool::in_worker() && crate::pool::global().size() > 1;
+    if let Some(ranges) = par_row_ranges(m, k.max(n)).filter(|_| pool_can_help) {
+        let kernel = |r0: usize, r1: usize| {
+            let a_panel = a.slice(r0, r1, 0, k);
+            let mut c_panel = Matrix::zeros(r1 - r0, n);
+            gemm_acc(&mut c_panel, &a_panel, b);
+            (r0, c_panel)
+        };
+        let kernel = &kernel;
+        let tasks: Vec<Box<dyn FnOnce() -> (usize, Matrix) + Send + '_>> = ranges
+            .into_iter()
+            .map(|(r0, r1)| {
+                Box::new(move || kernel(r0, r1)) as Box<dyn FnOnce() -> (usize, Matrix) + Send + '_>
+            })
+            .collect();
+        let mut c = Matrix::zeros(m, n);
+        for ((r0, panel), _) in crate::pool::global().run_scoped(tasks) {
+            for i in 0..panel.rows() {
+                c.row_mut(r0 + i).copy_from_slice(panel.row(i));
+            }
+        }
+        c
+    } else {
+        let mut c = Matrix::zeros(m, n);
+        gemm_acc(&mut c, a, b);
+        c
+    }
 }
 
 /// C += A · B, blocked over (MC × KC) panels of A and (KC × NC) panels of B.
@@ -414,6 +450,29 @@ mod tests {
         // determinism: two runs are bit-identical
         assert_eq!(gram(&a), g);
         assert_eq!(matmul_tn(&a, &b), c);
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches_serial_bitwise() {
+        // tall enough to take the chunked M-panel path (when the shared
+        // pool can parallelize); the serial reference is the raw kernel.
+        // Row panels never merge floating-point sums, so the result must
+        // be IDENTICAL for every chunking — this is the worker-count
+        // determinism guarantee (1-worker pools and in-worker calls run
+        // the same chunks inline).
+        let mut rng = Rng::seed(78);
+        let m = 2 * super::PAR_CHUNK_ROWS + 117;
+        let k = 128;
+        let n = 40;
+        assert!(m * k.max(n) >= super::PAR_MIN_ELEMS);
+        let a = randmat(&mut rng, m, k);
+        let b = randmat(&mut rng, k, n);
+        let c = matmul(&a, &b);
+        let mut serial = Matrix::zeros(m, n);
+        gemm_acc(&mut serial, &a, &b);
+        assert_eq!(c.data(), serial.data(), "chunked GEMM must be bit-identical to serial");
+        // and stable across repeated runs (scheduling-independent)
+        assert_eq!(matmul(&a, &b).data(), c.data());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! Global flags (any order): --executors N --rows-per-part N
 //! --cols-per-part N --fan-in N --workers N --working-precision X
 //! --srft-chains N --seed N --backend native|pjrt --power-iters N
-//! --config FILE
+//! --shuffle-latency X --task-overhead X --config FILE
 
 use std::process::ExitCode;
 
@@ -210,4 +210,6 @@ global flags:
   --executors N (180)      --rows-per-part N (1024)  --cols-per-part N (1024)
   --fan-in N (2)           --workers N (0 = all)     --working-precision X (1e-11)
   --srft-chains N (2)      --seed N                  --backend native|pjrt
-  --power-iters N (60)     --config FILE";
+  --power-iters N (60)     --config FILE
+  --shuffle-latency X (simulated s/byte; env DSVD_SHUFFLE_LATENCY)
+  --task-overhead X  (simulated s/task; env DSVD_TASK_OVERHEAD)";

@@ -85,7 +85,9 @@ fn tsqr_is_deterministic_across_worker_counts() {
 
 #[test]
 fn harness_metrics_invariants() {
-    let ctx = Context::new(18);
+    // pinned to the free comms model: `cpu_time >= wall_clock` is the
+    // free-model invariant (nonzero models guarantee cpu + comms >= wall)
+    let ctx = Context::new(18).with_comms(dsvd::dist::FREE_COMMS);
     let a = seeded_2048x64(&ctx);
     ctx.reset_metrics();
     let _r = tsqr_r(&ctx, &a);

@@ -1,0 +1,144 @@
+//! Accuracy tests for the low-rank drivers (Algorithms 5–8) against a
+//! *dense* reference SVD:
+//!
+//! * the spectral-norm reconstruction error of Algorithm 7 must land
+//!   within the Halko–Martinsson–Tropp bound
+//!   `(1 + 9·√(l·min(m,n)))^(1/(2i+1)) · σ_{l+1}` (HMT Thm 1.2 /
+//!   Cor 10.10 with `i` power iterations) and can never beat the
+//!   optimal `σ_{l+1}`;
+//! * the double-orthonormalization variants (Algorithms 7 and 8, whose
+//!   final subspace factorization runs Algorithm 2/4) must return left
+//!   singular vectors with `MaxEntry(|UᵀU−I|) ≤ 1e-13` — the paper's
+//!   machine-precision claim — on tall and wide shapes alike.
+
+use dsvd::algs::{algorithm7, algorithm8, LowRankOpts};
+use dsvd::dist::{Context, DistBlockMatrix};
+use dsvd::gen::DctBlockTestMatrix;
+use dsvd::linalg::svd::svd;
+use dsvd::linalg::{blas, Matrix};
+use dsvd::runtime::compute::NativeCompute;
+use dsvd::verify::{max_entry_gram_minus_identity, max_entry_gram_minus_identity_local};
+
+/// Spectral norm of `A − U Σ Vᵀ`, computed densely (exact up to the
+/// dense SVD's own roundoff — no power-method estimate involved).
+fn dense_residual_norm(a: &Matrix, u: &Matrix, s: &[f64], v: &Matrix) -> f64 {
+    let mut us = u.clone();
+    for (j, &sj) in s.iter().enumerate() {
+        us.scale_col(j, sj);
+    }
+    let rec = blas::matmul_nt(&us, v); // (m×k)·(n×k)ᵀ
+    svd(&a.sub(&rec)).s[0]
+}
+
+fn geometric_block_matrix(
+    ctx: &Context,
+    m: usize,
+    n: usize,
+) -> (DistBlockMatrix, Matrix, Vec<f64>) {
+    // full-rank spectrum σ_j = 2^−j: every truncation level is
+    // meaningful and σ_{l+1} is well above roundoff for small l
+    let sigma: Vec<f64> = (0..n.min(m)).map(|j| 0.5f64.powi(j as i32)).collect();
+    let gen = DctBlockTestMatrix::new(m, n, &sigma);
+    let a = gen.generate(ctx, &NativeCompute, 16, 16);
+    let a_dense = a.collect(ctx);
+    (a, a_dense, sigma)
+}
+
+fn opts(l: usize, iters: usize) -> LowRankOpts {
+    let mut o = LowRankOpts::new(l, iters);
+    o.rows_per_part = 16;
+    o
+}
+
+#[test]
+fn dense_reference_confirms_designed_spectrum() {
+    // the DCT test-matrix generator must deliver the singular values it
+    // promises — otherwise the bounds below test nothing
+    let ctx = Context::new(4);
+    let (_a, a_dense, sigma) = geometric_block_matrix(&ctx, 80, 48);
+    let reference = svd(&a_dense);
+    for j in 0..12 {
+        assert!(
+            (reference.s[j] - sigma[j]).abs() <= 1e-10 * sigma[0],
+            "σ_{j}: dense {} vs designed {}",
+            reference.s[j],
+            sigma[j]
+        );
+    }
+}
+
+#[test]
+fn algorithm7_within_hmt_bound_of_dense_reference() {
+    let (m, n, l, iters) = (80usize, 48usize, 6usize, 2usize);
+    let ctx = Context::new(8);
+    let (a, a_dense, _) = geometric_block_matrix(&ctx, m, n);
+    let reference = svd(&a_dense);
+    let sigma_opt = reference.s[l]; // σ_{l+1}: the optimal rank-l error
+
+    let out = algorithm7(&ctx, &NativeCompute, &a, &opts(l, iters));
+    let u_dense = out.u.collect(&ctx);
+    let err = dense_residual_norm(&a_dense, &u_dense, &out.s, &out.v);
+
+    // HMT-style bound with i power iterations
+    let factor = (1.0 + 9.0 * ((l * n.min(m)) as f64).sqrt())
+        .powf(1.0 / (2.0 * iters as f64 + 1.0));
+    assert!(
+        err <= factor * sigma_opt,
+        "‖A−UΣVᵀ‖₂ = {err} exceeds HMT bound {} (= {factor:.3}·σ_l+1)",
+        factor * sigma_opt
+    );
+    // no rank-l approximation beats the optimal truncation
+    assert!(err >= 0.999 * sigma_opt, "err {err} below the optimal {sigma_opt}");
+
+    // top singular values agree with the dense reference
+    for j in 0..3 {
+        let rel = (out.s[j] - reference.s[j]).abs() / reference.s[j];
+        assert!(rel < 1e-6, "σ_{j}: {} vs dense {} (rel {rel})", out.s[j], reference.s[j]);
+    }
+}
+
+#[test]
+fn algorithm8_within_hmt_bound_of_dense_reference() {
+    // the Gram engine loses half the digits on reconstruction (Table
+    // 10's contrast) but σ_{l+1} = 2^−6 dwarfs that loss here, so the
+    // same HMT bound must hold
+    let (m, n, l, iters) = (80usize, 48usize, 6usize, 2usize);
+    let ctx = Context::new(8);
+    let (a, a_dense, _) = geometric_block_matrix(&ctx, m, n);
+    let reference = svd(&a_dense);
+    let sigma_opt = reference.s[l];
+
+    let out = algorithm8(&ctx, &NativeCompute, &a, &opts(l, iters));
+    let u_dense = out.u.collect(&ctx);
+    let err = dense_residual_norm(&a_dense, &u_dense, &out.s, &out.v);
+    let factor = (1.0 + 9.0 * ((l * n.min(m)) as f64).sqrt())
+        .powf(1.0 / (2.0 * iters as f64 + 1.0));
+    assert!(err <= factor * sigma_opt, "err {err} vs bound {}", factor * sigma_opt);
+    assert!(err >= 0.999 * sigma_opt, "err {err} below the optimal {sigma_opt}");
+}
+
+#[test]
+fn double_orthonormalization_hits_machine_precision() {
+    // MaxEntry(|UᵀU−I|) ≤ 1e-13 for BOTH double-orthonormalization
+    // engines, on a tall and a wide shape
+    for (m, n, l) in [(96usize, 64usize, 8usize), (48, 96, 5)] {
+        let ctx = Context::new(8);
+        let sigma: Vec<f64> = (0..n.min(m)).map(|j| 0.5f64.powi(j as i32)).collect();
+        let a = DctBlockTestMatrix::new(m, n, &sigma).generate(&ctx, &NativeCompute, 16, 16);
+        for (name, out) in [
+            ("algorithm7", algorithm7(&ctx, &NativeCompute, &a, &opts(l, 2))),
+            ("algorithm8", algorithm8(&ctx, &NativeCompute, &a, &opts(l, 2))),
+        ] {
+            let u_orth = max_entry_gram_minus_identity(&ctx, &NativeCompute, &out.u);
+            assert!(
+                u_orth <= 1e-13,
+                "{name} ({m}x{n}): MaxEntry(|UᵀU−I|) = {u_orth} > 1e-13"
+            );
+            let v_orth = max_entry_gram_minus_identity_local(&out.v);
+            assert!(
+                v_orth <= 1e-13,
+                "{name} ({m}x{n}): MaxEntry(|VᵀV−I|) = {v_orth} > 1e-13"
+            );
+        }
+    }
+}
