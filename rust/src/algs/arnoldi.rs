@@ -14,7 +14,7 @@
 //! paper's Tables 6–8.
 
 use super::tall_skinny::DistSvd;
-use crate::dist::{Context, DistBlockMatrix};
+use crate::dist::{Context, DistOp};
 use crate::linalg::blas::{axpy, dot, nrm2};
 use crate::linalg::eigh::eigh;
 use crate::linalg::Matrix;
@@ -44,10 +44,12 @@ impl ArnoldiOpts {
 }
 
 /// MLlib-style low-rank SVD via restarted Krylov iteration on `AᵀA`.
+/// Touches the input only through [`DistOp`] mat-vec products, exactly
+/// as MLlib's ARPACK wrapper touches its distributed matrix.
 pub fn preexisting_lowrank(
     ctx: &Context,
     be: &dyn Compute,
-    a: &DistBlockMatrix,
+    a: &dyn DistOp,
     opts: &ArnoldiOpts,
 ) -> DistSvd {
     let n = a.cols();

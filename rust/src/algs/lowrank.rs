@@ -10,11 +10,16 @@
 //! * **Algorithm 6** — the straightforward finish (Algorithm 5.1 of HMT):
 //!   `B = QᵀA`, small SVD of B, `U = Q Ũ`.
 //! * **Algorithm 7** = 5(+1/2) → 6;  **Algorithm 8** = 5(+3/4) → 6.
+//!
+//! All of them take the input as `&dyn DistOp` — the `A·Ω` / `Aᵀ·Q`
+//! operator contract — so the same code serves dense block grids,
+//! per-block CSR, generator-backed implicit storage, and row-slab
+//! matrices without ever materializing anything it was not handed.
 
 use super::tall_skinny::{
     algorithm1, algorithm2, algorithm3, algorithm4, DistSvd, TallSkinnyOpts,
 };
-use crate::dist::{Context, DistBlockMatrix, DistRowMatrix};
+use crate::dist::{Context, DistOp, DistRowMatrix};
 use crate::linalg::svd::svd;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -89,7 +94,7 @@ fn factor_q_local(
 pub fn algorithm5(
     ctx: &Context,
     be: &dyn Compute,
-    a: &DistBlockMatrix,
+    a: &dyn DistOp,
     method: TsMethod,
     opts: &LowRankOpts,
 ) -> DistRowMatrix {
@@ -118,7 +123,7 @@ pub fn algorithm5(
 pub fn algorithm6(
     ctx: &Context,
     be: &dyn Compute,
-    a: &DistBlockMatrix,
+    a: &dyn DistOp,
     q: &DistRowMatrix,
 ) -> DistSvd {
     // Bᵀ = Aᵀ Q (n×l, driver) — computed distributedly per block
@@ -134,7 +139,7 @@ pub fn algorithm6(
 pub fn algorithm7(
     ctx: &Context,
     be: &dyn Compute,
-    a: &DistBlockMatrix,
+    a: &dyn DistOp,
     opts: &LowRankOpts,
 ) -> DistSvd {
     let q = algorithm5(ctx, be, a, TsMethod::Randomized, opts);
@@ -146,7 +151,7 @@ pub fn algorithm7(
 pub fn algorithm8(
     ctx: &Context,
     be: &dyn Compute,
-    a: &DistBlockMatrix,
+    a: &dyn DistOp,
     opts: &LowRankOpts,
 ) -> DistSvd {
     let q = algorithm5(ctx, be, a, TsMethod::Gram, opts);
@@ -156,6 +161,7 @@ pub fn algorithm8(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::DistBlockMatrix;
     use crate::gen::{spectrum_lowrank, DctBlockTestMatrix};
     use crate::runtime::compute::NativeCompute;
     use crate::verify::{error_report, spectral_norm, ResidualOp};

@@ -11,6 +11,14 @@
 //!
 //! All return `A ≈ U Σ Vᵀ` with `U` distributed (same partitioning as
 //! `A`), `Σ` and `V` on the driver, and singular values descending.
+//!
+//! These algorithms genuinely need the row data (SRFT mixing, TSQR,
+//! Gram), so they keep taking a concrete [`DistRowMatrix`] — but they
+//! sit *under* the `DistOp` operator layer: Algorithm 5's power
+//! iteration reaches any storage backend through `&dyn DistOp` and
+//! hands the resulting dense tall factors here for orthonormalization,
+//! and the power-method verification path accepts every `DistOp` via
+//! [`crate::verify::LinOp`].
 
 use crate::dist::{tsqr, tsqr_r, Context, DistRowMatrix, TsqrFactors};
 use crate::linalg::qr::{significant_diagonal, significant_prefix, tri_inverse_upper};

@@ -4,9 +4,15 @@
 //!   row-slab partitions: contiguous row blocks, each a dense local
 //!   [`Matrix`]. This is the layout of every tall-skinny workload
 //!   (problem {1}) and of the left factors everywhere.
-//! * [`DistBlockMatrix`] mirrors Spark's `BlockMatrix`: a grid of dense
-//!   blocks for the wide / low-rank workloads (problem {2}), where no
-//!   full row set fits one executor.
+//! * [`DistBlockMatrix`] mirrors Spark's `BlockMatrix`: a grid of
+//!   [`Block`] cells for the wide / low-rank workloads (problem {2}),
+//!   where no full row set fits one executor. Each cell picks its own
+//!   storage backend — [`Block::Dense`] (the original layout),
+//!   [`Block::SparseCsr`] (per-block CSR, work and shuffle ∝ nnz), or
+//!   [`Block::Implicit`] (a seeded generator materialized only inside
+//!   the task that consumes it) — and the low-rank algorithms reach all
+//!   of them through the [`super::DistOp`] operator trait, never the
+//!   concrete storage.
 //!
 //! Every operation that touches partition data runs as a
 //! [`Context::stage`] fan-out over the worker pool, with FLOP-dominant
@@ -15,13 +21,15 @@
 //! [`tree_aggregate`] so their cost and shuffle volume follow the
 //! configured tree fan-in, exactly like Spark's `treeAggregate`, while
 //! [`DistBlockMatrix::rmatmul_small`] reduces per-block partials keyed
-//! by block-column (one strip task per column, per-task shuffle bytes
+//! by block-column through fan-in-sized chunks (per-task shuffle bytes
 //! attributed by the comms model) instead of shipping n×l slabs.
 
-use crate::linalg::{blas, Matrix};
+use crate::linalg::{blas, Csr, Matrix};
 use crate::runtime::compute::Compute;
 
-use super::context::{tree_aggregate, Context};
+use std::sync::Arc;
+
+use super::context::{chunk_owned, tree_aggregate, Context};
 
 /// One contiguous row slab of a [`DistRowMatrix`].
 #[derive(Clone, Debug)]
@@ -338,6 +346,170 @@ impl DistRowMatrix {
         )
         .unwrap_or_else(|| vec![0.0; self.cols])
     }
+
+    /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l): one
+    /// `matmul_tn` task per partition pairing the matching rows of `Q`,
+    /// then a treeAggregate of the n×l partials — the row-matrix face
+    /// of the [`super::DistOp`] contract.
+    pub fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let qs = q.rows_slice(p.row_start, p.row_start + p.data.rows());
+                    be.matmul_tn(&p.data, &qs)
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, q.cols()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block — the pluggable storage behind DistBlockMatrix (the DistOp layer)
+// ---------------------------------------------------------------------------
+
+/// Storage-backend selector for the block-matrix generators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockStorage {
+    /// Dense row-major cells (the PR-2 layout; bit-for-bit identical).
+    Dense,
+    /// Per-block CSR ([`crate::linalg::Csr`]); work and shuffle ∝ nnz.
+    SparseCsr,
+    /// Generator-backed cells materialized only inside the consuming
+    /// task — O(block) resident memory however large the matrix.
+    Implicit,
+}
+
+/// A generator-backed block: the cell's global coordinates plus the
+/// shared seeded generator, materialized by [`ImplicitBlock::materialize`]
+/// inside whichever task consumes it (so its cost lands on that task's
+/// clock and nothing stays resident between stages).
+#[derive(Clone)]
+pub struct ImplicitBlock {
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    gen: Arc<dyn Fn(usize, usize, usize, usize) -> Matrix + Send + Sync>,
+}
+
+/// Bytes one implicit-block descriptor ships: four coordinates plus the
+/// generator handle.
+const IMPLICIT_DESCRIPTOR_BYTES: usize = 48;
+
+impl ImplicitBlock {
+    /// Run the generator for this cell (called inside consuming tasks).
+    pub fn materialize(&self) -> Matrix {
+        let b = (self.gen)(self.r0, self.r1, self.c0, self.c1);
+        assert_eq!(
+            b.shape(),
+            (self.r1 - self.r0, self.c1 - self.c0),
+            "implicit generator returned a wrong-shape cell"
+        );
+        b
+    }
+}
+
+/// One cell of a [`DistBlockMatrix`] grid. Every product the low-rank
+/// algorithms issue dispatches through these methods, so the algorithms
+/// above never see which storage holds the matrix.
+#[derive(Clone)]
+pub enum Block {
+    /// Dense local matrix (the original layout).
+    Dense(Matrix),
+    /// Compressed sparse rows; kernels in `linalg::blas`.
+    SparseCsr(Csr),
+    /// Seeded generator closure; materialized per consuming task.
+    Implicit(ImplicitBlock),
+}
+
+impl Block {
+    pub fn rows(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.rows(),
+            Block::SparseCsr(c) => c.rows(),
+            Block::Implicit(i) => i.r1 - i.r0,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.cols(),
+            Block::SparseCsr(c) => c.cols(),
+            Block::Implicit(i) => i.c1 - i.c0,
+        }
+    }
+
+    /// Bytes this block's stored representation actually moves when it
+    /// crosses the simulated network — the [`super::DistOp`]
+    /// `shuffle_bytes` hint, per cell: dense ships every entry, CSR
+    /// ships nnz-proportional arrays, implicit ships its descriptor.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Block::Dense(m) => 8 * m.rows() * m.cols(),
+            Block::SparseCsr(c) => c.storage_bytes(),
+            Block::Implicit(_) => IMPLICIT_DESCRIPTOR_BYTES,
+        }
+    }
+
+    /// Densify (a copy for dense blocks, decompression for CSR, one
+    /// generator run for implicit).
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            Block::Dense(m) => m.clone(),
+            Block::SparseCsr(c) => c.to_dense(),
+            Block::Implicit(i) => i.materialize(),
+        }
+    }
+
+    /// `block · W` for a dense W.
+    pub fn matmul(&self, be: &dyn Compute, w: &Matrix) -> Matrix {
+        match self {
+            Block::Dense(m) => be.matmul(m, w),
+            Block::SparseCsr(c) => c.matmul(w),
+            Block::Implicit(i) => be.matmul(&i.materialize(), w),
+        }
+    }
+
+    /// `blockᵀ · Q` for a dense Q with the block's row count.
+    pub fn matmul_tn(&self, be: &dyn Compute, q: &Matrix) -> Matrix {
+        match self {
+            Block::Dense(m) => be.matmul_tn(m, q),
+            Block::SparseCsr(c) => c.matmul_tn(q),
+            Block::Implicit(i) => be.matmul_tn(&i.materialize(), q),
+        }
+    }
+
+    /// `block · x`.
+    pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            Block::Dense(m) => blas::gemv(m, x),
+            Block::SparseCsr(c) => c.gemv(x),
+            Block::Implicit(i) => blas::gemv(&i.materialize(), x),
+        }
+    }
+
+    /// `blockᵀ · y`.
+    pub fn gemv_t(&self, y: &[f64]) -> Vec<f64> {
+        match self {
+            Block::Dense(m) => blas::gemv_t(m, y),
+            Block::SparseCsr(c) => c.gemv_t(y),
+            Block::Implicit(i) => blas::gemv_t(&i.materialize(), y),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -347,14 +519,49 @@ impl DistRowMatrix {
 /// Block-partitioned distributed matrix (the Spark `BlockMatrix` shape).
 #[derive(Clone)]
 pub struct DistBlockMatrix {
-    /// `grid[bi][bj]` is the dense block at block-row `bi`, block-col `bj`.
-    grid: Vec<Vec<Matrix>>,
+    /// `grid[bi][bj]` is the block at block-row `bi`, block-col `bj`.
+    grid: Vec<Vec<Block>>,
     /// Row cut points, length `num_block_rows + 1`.
     row_bounds: Vec<usize>,
     /// Column cut points, length `num_block_cols + 1`.
     col_bounds: Vec<usize>,
     rows: usize,
     cols: usize,
+}
+
+/// Reassemble a block-row-major flat cell list into the grid shape.
+fn grid_from_flat(flat: Vec<Block>, nbr: usize, nbc: usize) -> Vec<Vec<Block>> {
+    let mut it = flat.into_iter();
+    (0..nbr)
+        .map(|_| (0..nbc).map(|_| it.next().expect("one cell per task")).collect())
+        .collect()
+}
+
+/// Shared staging for the block generators: one task per cell of the
+/// `(rb, cb)` grid (block-row major), each wrapped into a [`Block`].
+fn generate_grid<T: Send>(
+    ctx: &Context,
+    rb: &[usize],
+    cb: &[usize],
+    cell: impl Fn(usize, usize, usize, usize) -> T + Sync,
+    wrap: impl Fn(T) -> Block,
+) -> Vec<Vec<Block>> {
+    let nbr = rb.len() - 1;
+    let nbc = cb.len() - 1;
+    let cell = &cell;
+    let mut coords = Vec::with_capacity(nbr * nbc);
+    for bi in 0..nbr {
+        for bj in 0..nbc {
+            coords.push((rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]));
+        }
+    }
+    let tasks: Vec<Box<dyn FnOnce() -> T + Send + '_>> = coords
+        .into_iter()
+        .map(|(r0, r1, c0, c1)| {
+            Box::new(move || cell(r0, r1, c0, c1)) as Box<dyn FnOnce() -> T + Send + '_>
+        })
+        .collect();
+    grid_from_flat(ctx.stage(tasks).into_iter().map(wrap).collect(), nbr, nbc)
 }
 
 impl DistBlockMatrix {
@@ -370,33 +577,82 @@ impl DistBlockMatrix {
     ) -> Self {
         let rb = bounds(rows, rows_per_block);
         let cb = bounds(cols, cols_per_block);
-        let nbr = rb.len() - 1;
-        let nbc = cb.len() - 1;
-        let block = &block;
-        let mut coords = Vec::with_capacity(nbr * nbc);
-        for bi in 0..nbr {
-            for bj in 0..nbc {
-                coords.push((rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]));
-            }
-        }
-        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = coords
-            .into_iter()
-            .map(|(r0, r1, c0, c1)| {
-                Box::new(move || {
-                    let b = block(r0, r1, c0, c1);
-                    assert_eq!(
-                        b.shape(),
-                        (r1 - r0, c1 - c0),
-                        "block generator returned a wrong-shape cell"
-                    );
-                    b
-                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+        let grid = generate_grid(
+            ctx,
+            &rb,
+            &cb,
+            |r0, r1, c0, c1| {
+                let b = block(r0, r1, c0, c1);
+                assert_eq!(
+                    b.shape(),
+                    (r1 - r0, c1 - c0),
+                    "block generator returned a wrong-shape cell"
+                );
+                b
+            },
+            Block::Dense,
+        );
+        DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows, cols }
+    }
+
+    /// Build a CSR-backed grid distributedly: one task per block,
+    /// `block(r0, r1, c0, c1)` returning the cell in compressed form.
+    pub fn generate_csr_blocks(
+        ctx: &Context,
+        rows: usize,
+        cols: usize,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        block: impl Fn(usize, usize, usize, usize) -> Csr + Sync,
+    ) -> Self {
+        let rb = bounds(rows, rows_per_block);
+        let cb = bounds(cols, cols_per_block);
+        let grid = generate_grid(
+            ctx,
+            &rb,
+            &cb,
+            |r0, r1, c0, c1| {
+                let b = block(r0, r1, c0, c1);
+                assert_eq!(
+                    (b.rows(), b.cols()),
+                    (r1 - r0, c1 - c0),
+                    "CSR block generator returned a wrong-shape cell"
+                );
+                b
+            },
+            Block::SparseCsr,
+        );
+        DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows, cols }
+    }
+
+    /// Build a generator-backed grid: nothing is materialized here —
+    /// each cell is a descriptor that whichever task consumes it runs
+    /// (`O(block)` resident memory however large the matrix), so huge
+    /// synthetic inputs never exist densely anywhere at once.
+    pub fn implicit(
+        rows: usize,
+        cols: usize,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        gen: Arc<dyn Fn(usize, usize, usize, usize) -> Matrix + Send + Sync>,
+    ) -> Self {
+        let rb = bounds(rows, rows_per_block);
+        let cb = bounds(cols, cols_per_block);
+        let grid: Vec<Vec<Block>> = (0..rb.len() - 1)
+            .map(|bi| {
+                (0..cb.len() - 1)
+                    .map(|bj| {
+                        Block::Implicit(ImplicitBlock {
+                            r0: rb[bi],
+                            r1: rb[bi + 1],
+                            c0: cb[bj],
+                            c1: cb[bj + 1],
+                            gen: Arc::clone(&gen),
+                        })
+                    })
+                    .collect()
             })
             .collect();
-        let flat = ctx.stage(tasks);
-        let mut it = flat.into_iter();
-        let grid: Vec<Vec<Matrix>> =
-            (0..nbr).map(|_| (0..nbc).map(|_| it.next().expect("one cell per task")).collect()).collect();
         DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows, cols }
     }
 
@@ -419,14 +675,60 @@ impl DistBlockMatrix {
     pub fn from_matrix(a: &Matrix, rows_per_block: usize, cols_per_block: usize) -> Self {
         let rb = bounds(a.rows(), rows_per_block);
         let cb = bounds(a.cols(), cols_per_block);
-        let grid: Vec<Vec<Matrix>> = (0..rb.len() - 1)
+        let grid: Vec<Vec<Block>> = (0..rb.len() - 1)
             .map(|bi| {
                 (0..cb.len() - 1)
-                    .map(|bj| a.slice(rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]))
+                    .map(|bj| Block::Dense(a.slice(rb[bi], rb[bi + 1], cb[bj], cb[bj + 1])))
                     .collect()
             })
             .collect();
         DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows: a.rows(), cols: a.cols() }
+    }
+
+    /// Partition a driver-held matrix into a CSR block grid (exact
+    /// zeros dropped per cell).
+    pub fn from_matrix_csr(a: &Matrix, rows_per_block: usize, cols_per_block: usize) -> Self {
+        let rb = bounds(a.rows(), rows_per_block);
+        let cb = bounds(a.cols(), cols_per_block);
+        let grid: Vec<Vec<Block>> = (0..rb.len() - 1)
+            .map(|bi| {
+                (0..cb.len() - 1)
+                    .map(|bj| {
+                        Block::SparseCsr(Csr::from_dense(
+                            &a.slice(rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]),
+                        ))
+                    })
+                    .collect()
+            })
+            .collect();
+        DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows: a.rows(), cols: a.cols() }
+    }
+
+    /// Densify every cell (one task per block) — the reference matrix
+    /// the op-equivalence suite compares every backend against.
+    pub fn densify(&self, ctx: &Context) -> DistBlockMatrix {
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .grid
+            .iter()
+            .flat_map(|row_blocks| row_blocks.iter())
+            .map(|b| Box::new(move || b.to_dense()) as Box<dyn FnOnce() -> Matrix + Send + '_>)
+            .collect();
+        let flat = ctx.stage(tasks).into_iter().map(Block::Dense).collect();
+        let (nbr, nbc) = self.num_blocks();
+        DistBlockMatrix {
+            grid: grid_from_flat(flat, nbr, nbc),
+            row_bounds: self.row_bounds.clone(),
+            col_bounds: self.col_bounds.clone(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    /// Total bytes of the stored representation across all blocks — the
+    /// [`super::DistOp::shuffle_bytes`] hint (dense: every entry; CSR:
+    /// nnz-proportional; implicit: descriptors only).
+    pub fn storage_bytes(&self) -> usize {
+        self.grid.iter().flat_map(|r| r.iter()).map(|b| b.storage_bytes()).sum()
     }
 
     pub fn rows(&self) -> usize {
@@ -442,17 +744,29 @@ impl DistBlockMatrix {
         (self.row_bounds.len() - 1, self.col_bounds.len() - 1)
     }
 
-    /// Gather to the driver as one dense matrix.
+    /// Gather to the driver as one dense matrix. The shuffle charge is
+    /// the *stored* representation's bytes (what actually crosses the
+    /// network): identical to the old dense accounting for dense grids,
+    /// nnz-proportional for CSR, descriptors only for implicit (whose
+    /// cells the driver then generates locally, on the driver clock).
     pub fn collect(&self, ctx: &Context) -> Matrix {
-        ctx.add_shuffle(8 * self.rows * self.cols);
+        ctx.add_shuffle(self.storage_bytes());
         ctx.driver(|| {
             let mut out = Matrix::zeros(self.rows, self.cols);
             for (bi, row_blocks) in self.grid.iter().enumerate() {
                 let r0 = self.row_bounds[bi];
                 for (bj, b) in row_blocks.iter().enumerate() {
                     let c0 = self.col_bounds[bj];
-                    for i in 0..b.rows() {
-                        out.row_mut(r0 + i)[c0..c0 + b.cols()].copy_from_slice(b.row(i));
+                    let densified;
+                    let m = match b {
+                        Block::Dense(m) => m,
+                        other => {
+                            densified = other.to_dense();
+                            &densified
+                        }
+                    };
+                    for i in 0..m.rows() {
+                        out.row_mut(r0 + i)[c0..c0 + m.cols()].copy_from_slice(m.row(i));
                     }
                 }
             }
@@ -479,7 +793,7 @@ impl DistBlockMatrix {
                     let mut acc = Matrix::zeros(r1 - r0, l);
                     for (bj, b) in row_blocks.iter().enumerate() {
                         let ws = w.slice(cb[bj], cb[bj + 1], 0, l);
-                        acc.add_assign(&be.matmul(b, &ws));
+                        acc.add_assign(&b.matmul(be, &ws));
                     }
                     RowPartition { row_start: r0, data: acc }
                 }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
@@ -495,15 +809,17 @@ impl DistBlockMatrix {
     /// One task **per block** pairs that block with its rows of `Q` and
     /// emits one `(c1−c0)×l` partial keyed by block-column — never an
     /// n×l slab, so peak task memory is `O(block rows·l + block
-    /// width·l)` however wide the matrix is (the n ≫ 10⁴ regime). A
-    /// second stage then folds each block-column's partials in
-    /// block-row order: one parallel reduce task per column strip,
-    /// each charged only the bytes of the strips it receives, replacing
-    /// the former `log_f`-level treeAggregate of dense n×l slabs
-    /// (bounded task memory, fewer stages, and per-task shuffle the
-    /// comms model can attribute to the column that caused it). The
-    /// `Q` row slab is re-sliced per block — `O(rows·l)` copies, noise
-    /// next to the `O(rows·width·l)` GEMM each task performs.
+    /// width·l)` however wide the matrix is (the n ≫ 10⁴ regime). The
+    /// reduce then folds each block-column's partials in block-row
+    /// order through fan-in-sized chunks: with ≤ fan-in block-rows this
+    /// is one parallel task per column strip (the PR-2 behaviour,
+    /// bit-for-bit), while deeper grids climb `log_f(block rows)`
+    /// levels so tall-grid reduces parallelize instead of serializing
+    /// in one task per column. Every group's task is charged only the
+    /// bytes of the partials it receives, so the comms model attributes
+    /// each shuffled byte to the column strip that caused it. The `Q`
+    /// row slab is re-sliced per block — `O(rows·l)` copies, noise
+    /// next to the `O(block nnz·l)` product each task performs.
     pub fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
         assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
         let l = q.cols();
@@ -522,7 +838,7 @@ impl DistBlockMatrix {
             for b in row_blocks.iter() {
                 tasks.push(Box::new(move || {
                     let qs = q.rows_slice(r0, r1);
-                    be.matmul_tn(b, &qs)
+                    b.matmul_tn(be, &qs)
                 }) as Box<dyn FnOnce() -> Matrix + Send + '_>);
             }
         }
@@ -538,26 +854,46 @@ impl DistBlockMatrix {
             }
         }
 
-        // stage 2 — fold each column strip in block-row order; every
-        // non-leading partial ships to the column's reduce task
-        let bytes: Vec<usize> = by_col
-            .iter()
-            .map(|ps| ps[1..].iter().map(|p| 8 * p.rows() * p.cols()).sum())
-            .collect();
-        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = by_col
+        // stage 2 — fold each column's partials in block-row order
+        // through fan-in-sized chunks, so on very tall grids (many
+        // block-rows, few columns) the reduce parallelizes like a
+        // treeAggregate instead of serializing one fold task per
+        // column. Groups are keyed by index and folded left-to-right
+        // (bit-deterministic for a given fan-in); each group's task is
+        // charged the bytes of the non-leading partials it receives,
+        // and with ≤ fan-in block-rows this is exactly the former
+        // single-fold stage. Singleton groups pass through untouched.
+        let fan = ctx.fan_in();
+        while by_col.iter().any(|ps| ps.len() > 1) {
+            let mut group_counts = Vec::with_capacity(by_col.len());
+            let mut bytes: Vec<usize> = Vec::new();
+            let mut tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = Vec::new();
+            for ps in std::mem::take(&mut by_col) {
+                let groups = chunk_owned(ps, fan);
+                group_counts.push(groups.len());
+                for g in groups {
+                    bytes.push(g[1..].iter().map(|p| 8 * p.rows() * p.cols()).sum());
+                    tasks.push(Box::new(move || {
+                        let mut it = g.into_iter();
+                        let mut acc = it.next().expect("chunk_owned never yields empty groups");
+                        for p in it {
+                            acc.add_assign(&p);
+                        }
+                        acc
+                    }) as Box<dyn FnOnce() -> Matrix + Send + '_>);
+                }
+            }
+            let flat = ctx.stage_shuffled(tasks, &bytes);
+            let mut it = flat.into_iter();
+            by_col = group_counts
+                .into_iter()
+                .map(|c| (0..c).map(|_| it.next().expect("one result per group")).collect())
+                .collect();
+        }
+        let strips: Vec<Matrix> = by_col
             .into_iter()
-            .map(|ps| {
-                Box::new(move || {
-                    let mut it = ps.into_iter();
-                    let mut acc = it.next().expect("every column has one partial per block-row");
-                    for p in it {
-                        acc.add_assign(&p);
-                    }
-                    acc
-                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
-            })
+            .map(|mut ps| ps.pop().expect("one folded strip per column"))
             .collect();
-        let strips = ctx.stage_shuffled(tasks, &bytes);
 
         // assemble the driver-held n×l from the column strips — a
         // driver-bound gather, charged like `collect`
@@ -588,7 +924,7 @@ impl DistBlockMatrix {
                 Box::new(move || {
                     let mut y = vec![0.0f64; r1 - r0];
                     for (bj, b) in row_blocks.iter().enumerate() {
-                        let part = blas::gemv(b, &x[cb[bj]..cb[bj + 1]]);
+                        let part = b.gemv(&x[cb[bj]..cb[bj + 1]]);
                         for (yi, pi) in y.iter_mut().zip(&part) {
                             *yi += pi;
                         }
@@ -621,7 +957,7 @@ impl DistBlockMatrix {
                 Box::new(move || {
                     let mut z = vec![0.0f64; n];
                     for (bj, b) in row_blocks.iter().enumerate() {
-                        let part = blas::gemv_t(b, &y[r0..r1]);
+                        let part = b.gemv_t(&y[r0..r1]);
                         for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
                             *zi += pi;
                         }
@@ -808,5 +1144,105 @@ mod tests {
         assert!(m.stages >= 4, "stages {}", m.stages);
         assert!(m.shuffle_bytes > 0);
         assert!(m.cpu_time >= m.wall_clock);
+    }
+
+    fn sparseish(seed: u64, m: usize, n: usize) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        Matrix::from_fn(m, n, |_, _| if rng.uniform() < 0.2 { rng.gauss() } else { 0.0 })
+    }
+
+    #[test]
+    fn csr_backend_matches_dense_backend() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = sparseish(31, 37, 23);
+        let dense = DistBlockMatrix::from_matrix(&a, 10, 8);
+        let csr = DistBlockMatrix::from_matrix_csr(&a, 10, 8);
+        assert_eq!(csr.collect(&ctx), a);
+        assert!(csr.storage_bytes() < dense.storage_bytes(), "CSR must store fewer bytes");
+
+        let w = randmat(32, 23, 4);
+        let yd = dense.matmul_small(&ctx, &be, &w).collect(&ctx);
+        let yc = csr.matmul_small(&ctx, &be, &w).collect(&ctx);
+        assert!(yd.sub(&yc).max_abs() < 1e-13);
+
+        let q = DistRowMatrix::from_matrix(&randmat(33, 37, 3), 9);
+        let zd = dense.rmatmul_small(&ctx, &be, &q);
+        let zc = csr.rmatmul_small(&ctx, &be, &q);
+        assert!(zd.sub(&zc).max_abs() < 1e-13);
+
+        let x: Vec<f64> = (0..23).map(|i| (i as f64).sin()).collect();
+        for (g, w) in csr.matvec(&ctx, &x).iter().zip(dense.matvec(&ctx, &x)) {
+            assert!((g - w).abs() < 1e-13);
+        }
+        let y: Vec<f64> = (0..37).map(|i| (i as f64).cos()).collect();
+        for (g, w) in csr.rmatvec(&ctx, &y).iter().zip(dense.rmatvec(&ctx, &y)) {
+            assert!((g - w).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn implicit_backend_matches_dense_backend_bitwise() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let entry = |i: usize, j: usize| ((i * 31 + j * 7) % 13) as f64 - 6.0;
+        let dense = DistBlockMatrix::generate(&ctx, 29, 17, 8, 6, entry);
+        let gen: Arc<dyn Fn(usize, usize, usize, usize) -> Matrix + Send + Sync> =
+            Arc::new(move |r0, r1, c0, c1| {
+                Matrix::from_fn(r1 - r0, c1 - c0, |i, j| entry(r0 + i, c0 + j))
+            });
+        let imp = DistBlockMatrix::implicit(29, 17, 8, 6, gen);
+        // descriptors only: 12 cells × 48 B, far below the dense bytes
+        assert_eq!(imp.storage_bytes(), 12 * 48);
+        assert!(imp.storage_bytes() < 8 * 29 * 17 / 4);
+        // same cells through the same kernels ⇒ identical bits
+        assert_eq!(imp.collect(&ctx), dense.collect(&ctx));
+        let w = randmat(34, 17, 3);
+        assert_eq!(
+            imp.matmul_small(&ctx, &be, &w).collect(&ctx).data(),
+            dense.matmul_small(&ctx, &be, &w).collect(&ctx).data()
+        );
+        let q = DistRowMatrix::from_matrix(&randmat(35, 29, 2), 7);
+        assert_eq!(
+            imp.rmatmul_small(&ctx, &be, &q).data(),
+            dense.rmatmul_small(&ctx, &be, &q).data()
+        );
+        // densify turns the descriptors into resident dense cells
+        let densified = imp.densify(&ctx);
+        assert_eq!(densified.storage_bytes(), 8 * 29 * 17);
+        assert_eq!(densified.collect(&ctx), dense.collect(&ctx));
+    }
+
+    #[test]
+    fn row_matrix_rmatmul_small_matches_dense() {
+        let ctx = Context::new(4);
+        let a = randmat(41, 50, 6);
+        let d = DistRowMatrix::from_matrix(&a, 9);
+        let q_local = randmat(42, 50, 4);
+        let q = DistRowMatrix::from_matrix(&q_local, 13); // different partitioning
+        let z = d.rmatmul_small(&ctx, &NativeCompute, &q);
+        let want = blas::matmul_tn(&a, &q_local);
+        assert!(z.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn deep_grid_rmatmul_reduce_is_chunked() {
+        // 16 block-rows, 1 block-column, fan-in 2: the per-column fold
+        // must climb ⌈log₂16⌉ = 4 levels (15 reduce tasks), not
+        // serialize in a single task
+        let a = randmat(43, 64, 5);
+        let q_local = randmat(44, 64, 3);
+        let ctx = Context::new(8).with_fan_in(2);
+        let d = DistBlockMatrix::from_matrix(&a, 4, 5);
+        assert_eq!(d.num_blocks(), (16, 1));
+        let q = DistRowMatrix::from_matrix(&q_local, 16);
+        ctx.reset_metrics();
+        let z = d.rmatmul_small(&ctx, &NativeCompute, &q);
+        let m = ctx.take_metrics();
+        assert!(z.sub(&blas::matmul_tn(&a, &q_local)).max_abs() < 1e-12);
+        // 1 map stage + 4 reduce levels
+        assert!(m.stages >= 5, "stages {}", m.stages);
+        // 16 map tasks + 8 + 4 + 2 + 1 reduce tasks
+        assert!(m.tasks >= 16 + 15, "tasks {}", m.tasks);
     }
 }

@@ -10,7 +10,8 @@
 //! | [`Context`] | `SparkContext` | stage/driver split + metrics |
 //! | [`pool::WorkerPool`] | executor JVMs | OS threads (`DSVD_WORKERS`) |
 //! | [`DistRowMatrix`] | `IndexedRowMatrix` | contiguous row slabs |
-//! | [`DistBlockMatrix`] | `BlockMatrix` | dense block grid |
+//! | [`DistBlockMatrix`] | `BlockMatrix` | grid of pluggable [`Block`] cells (dense / CSR / implicit) |
+//! | [`DistOp`] | the `A·Ω` / `Aᵀ·Q` access pattern | operator trait Algorithms 5–8 are written against |
 //! | [`tree_aggregate`] | `treeAggregate` | fan-in-wide parallel merges |
 //! | [`tsqr`] / [`tsqr_r`] | modified `computeSVD` QR | reduction-tree TSQR |
 //! | [`Metrics`] / [`CommsModel`] | Spark UI stage metrics | CPU/wall/shuffle accounting + priced communication |
@@ -25,6 +26,7 @@
 pub mod context;
 pub mod matrix;
 pub mod metrics;
+pub mod op;
 pub mod tsqr;
 
 // The worker pool lives at the crate root (`crate::pool`) so the local
@@ -33,6 +35,9 @@ pub mod tsqr;
 pub use crate::pool;
 
 pub use context::{tree_aggregate, Context};
-pub use matrix::{DistBlockMatrix, DistRowMatrix, RowPartition};
+pub use matrix::{
+    Block, BlockStorage, DistBlockMatrix, DistRowMatrix, ImplicitBlock, RowPartition,
+};
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
-pub use tsqr::{tsqr, tsqr_lineage, tsqr_r, TsqrFactors};
+pub use op::DistOp;
+pub use tsqr::{tsqr, tsqr_lineage, tsqr_r, tsqr_with_stats, TsqrFactors, TsqrMemStats};

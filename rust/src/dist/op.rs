@@ -1,0 +1,187 @@
+//! `DistOp` — the distributed linear-operator contract the low-rank
+//! algorithms are written against.
+//!
+//! The paper's Algorithms 5–8 (and the Arnoldi baseline they are
+//! benchmarked against) only ever touch the input matrix through the
+//! products `A·Ω` and `Aᵀ·Q` — the defining insight of the
+//! randomized-projection framework (Halko–Martinsson–Tropp,
+//! arXiv:0909.4061). This trait captures exactly that access pattern,
+//! so the algorithm layer never sees how the matrix is stored:
+//!
+//! * [`DistBlockMatrix`](super::DistBlockMatrix) serves any mix of
+//!   dense, per-block-CSR, and generator-backed implicit cells (see
+//!   [`super::matrix::Block`]);
+//! * [`DistRowMatrix`](super::DistRowMatrix) serves the row-slab
+//!   layout of the tall-skinny workloads, so the same power-iteration
+//!   and verification paths drive both shapes.
+//!
+//! `shuffle_bytes` is the storage hint the metrics layer charges when
+//! the operator (or a cell of it) crosses the simulated network:
+//! dense storage ships every entry, CSR ships nnz-proportional arrays,
+//! implicit ships only generator descriptors — so the comms model
+//! prices what each backend actually moves instead of assuming dense
+//! `8·m·n` everywhere.
+
+use crate::linalg::Matrix;
+use crate::runtime::compute::Compute;
+
+use super::context::Context;
+use super::matrix::{DistBlockMatrix, DistRowMatrix};
+
+/// A distributed matrix seen purely through its products — the whole
+/// interface the randomized low-rank algorithms need.
+pub trait DistOp {
+    /// Global row count (m).
+    fn rows(&self) -> usize;
+
+    /// Global column count (n).
+    fn cols(&self) -> usize;
+
+    /// Bytes the operator's *stored* representation moves when it
+    /// ships over the simulated network — the hint `Metrics` charges
+    /// instead of assuming dense `8·m·n` for every storage backend.
+    fn shuffle_bytes(&self) -> usize;
+
+    /// `A · W` for a small driver-held `W` (n×l); the result is
+    /// distributed by rows.
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix;
+
+    /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l); the result
+    /// (n×l) lands on the driver.
+    fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix;
+
+    /// `y = A·x` (length m).
+    fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64>;
+
+    /// `z = Aᵀ·y` (length n).
+    fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64>;
+}
+
+impl DistOp for DistBlockMatrix {
+    fn rows(&self) -> usize {
+        DistBlockMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        DistBlockMatrix::cols(self)
+    }
+
+    fn shuffle_bytes(&self) -> usize {
+        self.storage_bytes()
+    }
+
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        DistBlockMatrix::matmul_small(self, ctx, be, w)
+    }
+
+    fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        DistBlockMatrix::rmatmul_small(self, ctx, be, q)
+    }
+
+    fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        DistBlockMatrix::matvec(self, ctx, x)
+    }
+
+    fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        DistBlockMatrix::rmatvec(self, ctx, y)
+    }
+}
+
+impl DistOp for DistRowMatrix {
+    fn rows(&self) -> usize {
+        DistRowMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        DistRowMatrix::cols(self)
+    }
+
+    fn shuffle_bytes(&self) -> usize {
+        // row slabs are always dense
+        8 * DistRowMatrix::rows(self) * DistRowMatrix::cols(self)
+    }
+
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        DistRowMatrix::matmul_small(self, ctx, be, w)
+    }
+
+    fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        DistRowMatrix::rmatmul_small(self, ctx, be, q)
+    }
+
+    fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        DistRowMatrix::matvec(self, ctx, x)
+    }
+
+    fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        DistRowMatrix::rmatvec(self, ctx, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::rng::Rng;
+    use crate::runtime::compute::NativeCompute;
+
+    fn randmat(seed: u64, m: usize, n: usize) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    /// The two concrete layouts must agree through the trait object —
+    /// this is the contract the low-rank algorithms rely on.
+    #[test]
+    fn block_and_row_layouts_agree_through_the_trait() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(71, 40, 11);
+        let row: &dyn DistOp = &DistRowMatrix::from_matrix(&a, 7);
+        let block: &dyn DistOp = &DistBlockMatrix::from_matrix(&a, 9, 4);
+        for op in [row, block] {
+            assert_eq!(op.rows(), 40);
+            assert_eq!(op.cols(), 11);
+            assert_eq!(op.shuffle_bytes(), 8 * 40 * 11);
+        }
+
+        let w = randmat(72, 11, 3);
+        let yr = row.matmul_small(&ctx, &be, &w).collect(&ctx);
+        let yb = block.matmul_small(&ctx, &be, &w).collect(&ctx);
+        let want = blas::matmul(&a, &w);
+        assert!(yr.sub(&want).max_abs() < 1e-12);
+        assert!(yb.sub(&want).max_abs() < 1e-12);
+
+        let q_local = randmat(73, 40, 5);
+        let q = DistRowMatrix::from_matrix(&q_local, 6);
+        let zr = row.rmatmul_small(&ctx, &be, &q);
+        let zb = block.rmatmul_small(&ctx, &be, &q);
+        let zwant = blas::matmul_tn(&a, &q_local);
+        assert!(zr.sub(&zwant).max_abs() < 1e-12);
+        assert!(zb.sub(&zwant).max_abs() < 1e-12);
+
+        let x: Vec<f64> = (0..11).map(|i| (i as f64).sin()).collect();
+        let y: Vec<f64> = (0..40).map(|i| (i as f64).cos()).collect();
+        for op in [row, block] {
+            for (g, w) in op.matvec(&ctx, &x).iter().zip(blas::gemv(&a, &x)) {
+                assert!((g - w).abs() < 1e-12);
+            }
+            for (g, w) in op.rmatvec(&ctx, &y).iter().zip(blas::gemv_t(&a, &y)) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// The shuffle hint tracks the storage backend, not the dense shape.
+    #[test]
+    fn shuffle_hint_follows_storage() {
+        let mut rng = Rng::seed(74);
+        let a = Matrix::from_fn(30, 20, |_, _| if rng.uniform() < 0.1 { rng.gauss() } else { 0.0 });
+        let dense: &dyn DistOp = &DistBlockMatrix::from_matrix(&a, 10, 10);
+        let csr = DistBlockMatrix::from_matrix_csr(&a, 10, 10);
+        let csr_op: &dyn DistOp = &csr;
+        assert_eq!(dense.shuffle_bytes(), 8 * 30 * 20);
+        assert!(csr_op.shuffle_bytes() < dense.shuffle_bytes());
+        assert_eq!(csr_op.shuffle_bytes(), csr.storage_bytes());
+    }
+}

@@ -29,7 +29,11 @@
 //!   shuffle volume is `O(P·n²)` — strictly below the lineage
 //!   alternative's `O(P·log_f(P)·n²)` (see [`tsqr_lineage`]) — while Q
 //!   still comes out orthonormal to machine precision in a single
-//!   logical pass over the data.
+//!   logical pass over the data. Each level's merge Qs are freed the
+//!   moment its down-sweep transforms have been emitted, so resident
+//!   memory shrinks level by level on deep trees instead of holding the
+//!   whole up-sweep until the end ([`tsqr_with_stats`] returns the
+//!   [`TsqrMemStats`] bookkeeping the tests pin).
 //! * [`tsqr_lineage`] — the PR-1 implementation, kept as the ablation
 //!   reference: the merge tree carries, per original partition, the
 //!   accumulated transform `P_i` through every merge task, so every
@@ -128,12 +132,50 @@ struct MergeGroup {
     q: Option<Matrix>,
 }
 
+/// Bytes of the merge-Q matrices one tree level keeps resident.
+fn level_q_bytes(lev: &[MergeGroup]) -> usize {
+    lev.iter().map(|g| g.q.as_ref().map_or(0, |q| 8 * q.rows() * q.cols())).sum()
+}
+
+/// Merge-Q residency bookkeeping of the two-pass TSQR: the down-sweep
+/// frees each level's merge Qs as soon as that level's transforms have
+/// been emitted, so resident bytes shrink level by level instead of
+/// staying at the up-sweep total until the factorization ends (the
+/// very-deep-tree concern of the ROADMAP).
+///
+/// This instruments the level *container* the down-sweep drains — it
+/// pins that the code path hands each level back before walking the
+/// next, not allocator behaviour: a change that `Arc`s or clones a
+/// level's Qs into longer-lived state would evade it. The down-sweep
+/// deliberately moves only `k_child × k_root` transform blocks (never
+/// whole Qs) into `transforms`, which is what keeps the accounting
+/// faithful.
+#[derive(Clone, Debug)]
+pub struct TsqrMemStats {
+    /// Bytes of every merge Q the up-sweep produced (the old
+    /// implementation kept all of them until the final stage).
+    pub merge_q_bytes_total: usize,
+    /// Merge-Q bytes still resident after each down-sweep level
+    /// completes, root level first — strictly decreasing to zero.
+    pub resident_after_level: Vec<usize>,
+    /// Merge-Q bytes resident when the leaf materialization stage runs
+    /// (always zero now: every level was freed on the way down).
+    pub merge_q_bytes_at_materialize: usize,
+}
+
 /// Explicit-Q TSQR via two-pass down-sweep reconstruction (see module
 /// docs). Pass 1 is the R-factor tree of [`tsqr_r`] with each merge Q
 /// kept where it was computed; pass 2 broadcasts one accumulated
 /// `k_child × k_root` transform down each tree edge and materializes
 /// `Q_i = Q_leaf,i · T_i` at the leaves.
 pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
+    tsqr_with_stats(ctx, a).0
+}
+
+/// [`tsqr`] plus the merge-Q residency bookkeeping (the memory claim
+/// `tests` pin: each level's merge Qs are dropped the moment its
+/// down-sweep transforms exist).
+pub fn tsqr_with_stats(ctx: &Context, a: &DistRowMatrix) -> (TsqrFactors, TsqrMemStats) {
     assert!(!a.parts.is_empty(), "tsqr of an empty matrix");
 
     // ---- pass 1 (up-sweep): leaf QRs, then the R merge tree --------
@@ -190,6 +232,12 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
     // transforms[v] maps node v's basis to the root basis
     // (k_v × k_root); `None` encodes the identity (the root, and
     // anything reached only through singleton pass-through groups).
+    // Levels pop root-first and each popped level DROPS at the end of
+    // its iteration: a level's merge Qs are freed the moment its
+    // transforms have been emitted, so only the not-yet-walked levels
+    // stay resident (the stats below assert exactly this).
+    let merge_q_bytes_total: usize = levels.iter().map(|l| level_q_bytes(l)).sum();
+    let mut resident_after_level = Vec::with_capacity(levels.len());
     enum Slot {
         /// Singleton pass-through: inherit the parent transform.
         Inherit(usize),
@@ -197,7 +245,7 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
         Job(usize),
     }
     let mut transforms: Vec<Option<Arc<Matrix>>> = vec![None];
-    for lev in levels.iter().rev() {
+    while let Some(lev) = levels.pop() {
         let mut slots: Vec<Slot> = Vec::new();
         // (merge Q, child row offset, child k, parent transform): the
         // block slicing happens inside the measured task, where the
@@ -247,8 +295,13 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
             })
             .collect();
         transforms = next;
+        // `lev` (popped above) drops here: this level's merge Qs are
+        // gone before the next level runs, so the resident set is only
+        // the not-yet-walked levels
+        resident_after_level.push(levels.iter().map(|l| level_q_bytes(l)).sum());
     }
     debug_assert_eq!(transforms.len(), leaf_q.len());
+    let merge_q_bytes_at_materialize: usize = levels.iter().map(|l| level_q_bytes(l)).sum();
 
     // ---- final stage: materialize each Q partition locally ---------
     // (leaf Q never moved; its transform arrived in the down-sweep)
@@ -268,7 +321,12 @@ pub fn tsqr(ctx: &Context, a: &DistRowMatrix) -> TsqrFactors {
         })
         .collect();
     let parts = ctx.stage(tasks);
-    TsqrFactors { q: DistRowMatrix::from_parts(parts, a.rows(), k), r: root_r }
+    let stats = TsqrMemStats {
+        merge_q_bytes_total,
+        resident_after_level,
+        merge_q_bytes_at_materialize,
+    };
+    (TsqrFactors { q: DistRowMatrix::from_parts(parts, a.rows(), k), r: root_r }, stats)
 }
 
 // ---------------------------------------------------------------------------
@@ -502,6 +560,33 @@ mod tests {
         assert!(bytes[0] > 0 && bytes[1] > 0);
         // wider fan-in: fewer levels, fewer intermediate Rs shuffled
         assert!(bytes[1] <= bytes[0], "fan 8 {} vs fan 2 {}", bytes[1], bytes[0]);
+    }
+
+    #[test]
+    fn down_sweep_frees_each_levels_merge_qs() {
+        // 32 partitions at fan-in 2: five real merge levels
+        let ctx = Context::new(8).with_fan_in(2);
+        let a = randmat(12, 512, 8);
+        let d = DistRowMatrix::from_matrix(&a, 16);
+        let (f, stats) = tsqr_with_stats(&ctx, &d);
+        // the factorization itself is unchanged
+        let ql = f.q.collect(&ctx);
+        let k = f.r.rows();
+        let orth = blas::matmul(&ql.transpose(), &ql).sub(&Matrix::eye(k)).max_abs();
+        assert!(orth < 1e-12, "orth {orth}");
+        assert_eq!(stats.resident_after_level.len(), 5);
+        assert!(stats.merge_q_bytes_total > 0);
+        // the root level frees before the second level runs...
+        assert!(stats.resident_after_level[0] < stats.merge_q_bytes_total);
+        // ...and resident bytes strictly decrease to zero level by level
+        let mut prev = stats.merge_q_bytes_total;
+        for (i, &r) in stats.resident_after_level.iter().enumerate() {
+            assert!(r < prev, "level {i}: resident {r} did not shrink from {prev}");
+            prev = r;
+        }
+        assert_eq!(stats.resident_after_level.last().copied(), Some(0));
+        // nothing from the merge tree survives into the leaf stage
+        assert_eq!(stats.merge_q_bytes_at_materialize, 0);
     }
 
     #[test]

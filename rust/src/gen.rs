@@ -14,11 +14,21 @@
 //! builds its own slab of rows from the closed-form DCT entries and one
 //! local GEMM. Generation is itself a distributed job — its cost is what
 //! Tables 27–29 report.
+//!
+//! Beyond the paper's dense families, the `DistOp` storage backends get
+//! their own workloads: [`SparseRandTestMatrix`] (hash-seeded entries at
+//! a chosen density — identical across dense/CSR/implicit storage, for
+//! the storage-sweep bench), [`SparseSpectrumTestMatrix`] (permutation-
+//! scaled, exactly the prescribed spectrum, genuinely sparse), and
+//! [`DctBlockTestMatrix::generate_implicit`] (the paper's own test
+//! matrices with `O(block)` resident memory).
 
-use crate::dist::{Context, DistBlockMatrix, DistRowMatrix};
+use crate::dist::{BlockStorage, Context, DistBlockMatrix, DistRowMatrix};
 use crate::linalg::dct::{dct_entry, dct_matrix};
-use crate::linalg::Matrix;
-use crate::runtime::compute::Compute;
+use crate::linalg::{Csr, Matrix};
+use crate::runtime::compute::{Compute, NativeCompute};
+
+use std::sync::Arc;
 
 /// Equation (3): σ_j = exp((j−1)/(n−1) · ln 1e-20), j = 1..n.
 pub fn spectrum_geometric(n: usize) -> Vec<f64> {
@@ -121,6 +131,7 @@ impl DctTestMatrix {
 /// Tables 9/10 (m×n with both large): block (r0..r1, c0..c1) is
 /// `U[r0:r1, :k] · diag(σ[:k]) · V[c0:c1, :k]ᵀ`, with k = #nonzero σ —
 /// cheap because the low-rank tables use k = l ≤ 20.
+#[derive(Clone)]
 pub struct DctBlockTestMatrix {
     m: usize,
     n: usize,
@@ -157,6 +168,218 @@ impl DctBlockTestMatrix {
         DistBlockMatrix::generate_blocks(ctx, m, n, rpb, cpb, |r0, r1, c0, c1| {
             self.block(be, r0, r1, c0, c1)
         })
+    }
+
+    /// Generate as a generator-backed *implicit* block matrix: no cell
+    /// is resident until the task consuming it materializes it, so
+    /// paper-scale shapes run with `O(block)` memory instead of the
+    /// dense `8·m·n`. The generator runs the native kernels inside the
+    /// consuming task (the `Compute` backend choice still governs the
+    /// consuming product itself).
+    pub fn generate_implicit(&self, rpb: usize, cpb: usize) -> DistBlockMatrix {
+        let g = self.clone();
+        DistBlockMatrix::implicit(
+            self.m,
+            self.n,
+            rpb,
+            cpb,
+            Arc::new(move |r0, r1, c0, c1| g.block(&NativeCompute, r0, r1, c0, c1)),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sparse test families — the DistOp storage backends' native workloads
+// ---------------------------------------------------------------------------
+
+/// SplitMix64-style per-entry hash: deterministic, blocking-independent.
+fn entry_hash(seed: u64, i: usize, j: usize) -> u64 {
+    let mut z = seed
+        ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (j as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [0, 1) from a hash (top 53 bits, like
+/// [`crate::rng::Rng::uniform`]).
+fn hash_uniform(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Seeded sparse random test matrix: entry `(i, j)` is nonzero with
+/// probability `density` and uniform in [-1, 1), decided by a per-entry
+/// hash — deterministic and blocking-independent, so every storage
+/// backend (dense, CSR, implicit) represents the *identical* operator
+/// and the storage sweep in `benches/tables_sparse.rs` compares like
+/// with like.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseRandTestMatrix {
+    pub m: usize,
+    pub n: usize,
+    pub density: f64,
+    pub seed: u64,
+}
+
+impl SparseRandTestMatrix {
+    pub fn new(m: usize, n: usize, density: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&density), "density must be in [0, 1]");
+        SparseRandTestMatrix { m, n, density, seed }
+    }
+
+    /// The (i, j) entry — a pure function of (seed, i, j).
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        let h = entry_hash(self.seed, i, j);
+        if hash_uniform(h) >= self.density {
+            return 0.0;
+        }
+        2.0 * hash_uniform(entry_hash(self.seed ^ 0xD15C_0DE5, i, j)) - 1.0
+    }
+
+    /// Dense block at (r0..r1) × (c0..c1).
+    pub fn block_dense(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        Matrix::from_fn(r1 - r0, c1 - c0, |i, j| self.entry(r0 + i, c0 + j))
+    }
+
+    /// The same block in CSR form.
+    pub fn block_csr(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        Csr::from_dense(&self.block_dense(r0, r1, c0, c1))
+    }
+
+    /// Generate as a distributed block matrix in the requested storage.
+    pub fn generate(
+        &self,
+        ctx: &Context,
+        rpb: usize,
+        cpb: usize,
+        storage: BlockStorage,
+    ) -> DistBlockMatrix {
+        let g = *self;
+        match storage {
+            BlockStorage::Dense => {
+                DistBlockMatrix::generate_blocks(ctx, self.m, self.n, rpb, cpb, move |a, b, c, d| {
+                    g.block_dense(a, b, c, d)
+                })
+            }
+            BlockStorage::SparseCsr => DistBlockMatrix::generate_csr_blocks(
+                ctx,
+                self.m,
+                self.n,
+                rpb,
+                cpb,
+                move |a, b, c, d| g.block_csr(a, b, c, d),
+            ),
+            BlockStorage::Implicit => DistBlockMatrix::implicit(
+                self.m,
+                self.n,
+                rpb,
+                cpb,
+                Arc::new(move |a, b, c, d| g.block_dense(a, b, c, d)),
+            ),
+        }
+    }
+}
+
+/// Sparse test matrix with an **exactly prescribed spectrum**:
+/// `A = Σ_k σ_k · e_{p(k)} e_{q(k)}ᵀ` with seeded uniformly-random row
+/// and column permutations `p`, `q` — one nonzero per used row and
+/// column, so the singular values are exactly `σ` (the vectors are
+/// coordinate axes). This is the sparse analogue of the equation (2)
+/// test family: any of the paper's spectra (equations (3)/(5), the
+/// Devil's staircase, the [`spectra`] profiles) drops in unchanged,
+/// which is what the sparse accuracy tests and the
+/// `sparse_lowrank` example exercise. Requires `σ_k ≥ 0` (zeros
+/// allowed; the zero tail is skipped).
+#[derive(Clone)]
+pub struct SparseSpectrumTestMatrix {
+    m: usize,
+    n: usize,
+    /// The nonzero prefix of σ.
+    sigma: Vec<f64>,
+    /// Row index p(k) of σ_k.
+    row_of: Vec<usize>,
+    /// Column index q(k) of σ_k.
+    col_of: Vec<usize>,
+}
+
+impl SparseSpectrumTestMatrix {
+    pub fn new(m: usize, n: usize, sigma: &[f64], seed: u64) -> Self {
+        let k = sigma.iter().take_while(|&&s| s != 0.0).count();
+        assert!(k <= m.min(n), "need #nonzero σ ≤ min(m, n)");
+        assert!(sigma[..k].iter().all(|&s| s > 0.0), "σ must be nonnegative");
+        let mut rng = crate::rng::Rng::seed(seed ^ 0x5BA2_5E);
+        let p = rng.permutation(m);
+        let q = rng.permutation(n);
+        SparseSpectrumTestMatrix {
+            m,
+            n,
+            sigma: sigma[..k].to_vec(),
+            row_of: p[..k].to_vec(),
+            col_of: q[..k].to_vec(),
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// The exact singular values (descending iff `σ` was descending).
+    pub fn singular_values(&self) -> &[f64] {
+        &self.sigma
+    }
+
+    /// CSR block at (r0..r1) × (c0..c1): the σ_k whose (p(k), q(k))
+    /// falls inside the window.
+    pub fn block_csr(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        let mut t = Vec::new();
+        for (k, &s) in self.sigma.iter().enumerate() {
+            let (i, j) = (self.row_of[k], self.col_of[k]);
+            if (r0..r1).contains(&i) && (c0..c1).contains(&j) {
+                t.push((i - r0, j - c0, s));
+            }
+        }
+        Csr::from_triplets(r1 - r0, c1 - c0, &t)
+    }
+
+    /// Dense block at (r0..r1) × (c0..c1).
+    pub fn block_dense(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        self.block_csr(r0, r1, c0, c1).to_dense()
+    }
+
+    /// Generate as a distributed block matrix in the requested storage.
+    pub fn generate(
+        &self,
+        ctx: &Context,
+        rpb: usize,
+        cpb: usize,
+        storage: BlockStorage,
+    ) -> DistBlockMatrix {
+        match storage {
+            BlockStorage::Dense => {
+                DistBlockMatrix::generate_blocks(ctx, self.m, self.n, rpb, cpb, |a, b, c, d| {
+                    self.block_dense(a, b, c, d)
+                })
+            }
+            BlockStorage::SparseCsr => DistBlockMatrix::generate_csr_blocks(
+                ctx,
+                self.m,
+                self.n,
+                rpb,
+                cpb,
+                |a, b, c, d| self.block_csr(a, b, c, d),
+            ),
+            BlockStorage::Implicit => {
+                let g = self.clone();
+                DistBlockMatrix::implicit(
+                    self.m,
+                    self.n,
+                    rpb,
+                    cpb,
+                    Arc::new(move |a, b, c, d| g.block_dense(a, b, c, d)),
+                )
+            }
+        }
     }
 }
 
@@ -360,6 +583,80 @@ mod tests {
         let outp = crate::algs::preexisting(&ctx, &NativeCompute, &a, &opts);
         let up = crate::verify::max_entry_gram_minus_identity(&ctx, &NativeCompute, &outp.u);
         assert!(up > 1e-2, "stock baseline must fail here too: {up}");
+    }
+
+    #[test]
+    fn sparse_rand_is_blocking_independent_and_density_correct() {
+        let g = SparseRandTestMatrix::new(60, 40, 0.15, 0xBEEF);
+        // entries are a pure function of (i, j): any two windows agree
+        let whole = g.block_dense(0, 60, 0, 40);
+        let win = g.block_dense(13, 37, 5, 29);
+        for i in 0..24 {
+            for j in 0..24 {
+                assert_eq!(win[(i, j)], whole[(13 + i, 5 + j)]);
+            }
+        }
+        // CSR and dense blocks agree
+        assert_eq!(g.block_csr(13, 37, 5, 29).to_dense(), win);
+        // density lands near the target
+        let nnz = whole.data().iter().filter(|&&x| x != 0.0).count();
+        let expect = 0.15 * (60 * 40) as f64;
+        assert!((nnz as f64 - expect).abs() < 0.35 * expect, "nnz {nnz} vs {expect}");
+        // values bounded
+        assert!(whole.max_abs() <= 1.0);
+    }
+
+    #[test]
+    fn sparse_rand_backends_collect_identically() {
+        let ctx = Context::new(3);
+        let g = SparseRandTestMatrix::new(33, 21, 0.2, 7);
+        let dense = g.generate(&ctx, 10, 8, crate::dist::BlockStorage::Dense);
+        let csr = g.generate(&ctx, 10, 8, crate::dist::BlockStorage::SparseCsr);
+        let imp = g.generate(&ctx, 10, 8, crate::dist::BlockStorage::Implicit);
+        let want = g.block_dense(0, 33, 0, 21);
+        assert_eq!(dense.collect(&ctx), want);
+        assert_eq!(csr.collect(&ctx), want);
+        assert_eq!(imp.collect(&ctx), want);
+        assert!(csr.storage_bytes() < dense.storage_bytes());
+        assert!(imp.storage_bytes() < csr.storage_bytes());
+    }
+
+    #[test]
+    fn sparse_spectrum_matrix_has_exact_svd() {
+        let sigma: Vec<f64> = (0..6).map(|j| 0.5f64.powi(j as i32)).collect();
+        let g = SparseSpectrumTestMatrix::new(24, 18, &sigma, 99);
+        assert_eq!(g.shape(), (24, 18));
+        let dense = g.block_dense(0, 24, 0, 18);
+        // exactly one σ per used row/column ⇒ 6 nonzeros total
+        assert_eq!(dense.data().iter().filter(|&&x| x != 0.0).count(), 6);
+        let r = crate::linalg::svd::svd(&dense);
+        for j in 0..6 {
+            assert!((r.s[j] - sigma[j]).abs() < 1e-14, "σ_{j}: {} vs {}", r.s[j], sigma[j]);
+        }
+        for j in 6..r.s.len() {
+            assert!(r.s[j] < 1e-14);
+        }
+        // all backends collect to the same matrix
+        let ctx = Context::new(2);
+        for storage in [
+            crate::dist::BlockStorage::Dense,
+            crate::dist::BlockStorage::SparseCsr,
+            crate::dist::BlockStorage::Implicit,
+        ] {
+            assert_eq!(g.generate(&ctx, 7, 5, storage).collect(&ctx), dense);
+        }
+    }
+
+    #[test]
+    fn dct_implicit_matches_dense_generation() {
+        let (m, n, l) = (30, 18, 5);
+        let sigma = spectrum_lowrank(n, l);
+        let gen = DctBlockTestMatrix::new(m, n, &sigma);
+        let ctx = Context::new(2);
+        let dense = gen.generate(&ctx, &NativeCompute, 7, 5);
+        let imp = gen.generate_implicit(7, 5);
+        assert_eq!(imp.collect(&ctx), dense.collect(&ctx));
+        assert!(imp.storage_bytes() < dense.storage_bytes());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::algs::{
     preexisting_lowrank, ArnoldiOpts, DistSvd, LowRankOpts,
 };
 use crate::config::RunConfig;
-use crate::dist::{Context, DistBlockMatrix, DistRowMatrix, Metrics};
+use crate::dist::{Context, DistBlockMatrix, DistOp, DistRowMatrix, Metrics};
 use crate::gen::{
     devils_staircase, spectrum_geometric, spectrum_lowrank, DctBlockTestMatrix, DctTestMatrix,
 };
@@ -231,7 +231,7 @@ pub fn run_lowrank(
 pub fn run_lr_alg(
     ctx: &Context,
     be: &dyn Compute,
-    a: &DistBlockMatrix,
+    a: &dyn DistOp,
     cfg: &RunConfig,
     l: usize,
     iters: usize,
@@ -254,6 +254,30 @@ pub fn run_lr_alg(
             preexisting_lowrank(ctx, be, a, &opts)
         }
     }
+}
+
+/// Run one low-rank algorithm over an already-built operator — any
+/// storage backend — timing the algorithm only. This is the entry the
+/// sparse-storage bench (`tables_sparse`) drives: the caller picks the
+/// backend, this times and verifies exactly like [`run_lowrank`].
+pub fn run_lowrank_prepared(
+    cfg: &RunConfig,
+    be: &dyn Compute,
+    a: &DistBlockMatrix,
+    l: usize,
+    iters: usize,
+    alg: LrAlg,
+) -> TableRow {
+    let ctx = cfg.context();
+    ctx.reset_metrics();
+    let out = run_lr_alg(&ctx, be, a, cfg, l, iters, alg);
+    let metrics = ctx.take_metrics();
+
+    let resid = ResidualOp { a, u: &out.u, s: &out.s, v: &out.v };
+    let recon = spectral_norm(&ctx, &resid, cfg.power_iters, cfg.seed ^ 0xE44);
+    let u_orth = max_entry_gram_minus_identity(&ctx, be, &out.u);
+    let v_orth = max_entry_gram_minus_identity_local(&out.v);
+    TableRow { algorithm: alg.name().to_string(), metrics, recon, u_orth, v_orth }
 }
 
 fn verify(

@@ -10,4 +10,5 @@ pub mod matrix;
 pub mod qr;
 pub mod svd;
 
+pub use blas::Csr;
 pub use matrix::Matrix;

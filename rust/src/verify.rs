@@ -11,18 +11,38 @@
 //! Verification time is kept OUT of the algorithm metrics: callers run it
 //! after `Context::take_metrics()`, matching the paper's protocol.
 
-use crate::dist::{Context, DistBlockMatrix, DistRowMatrix};
+use crate::dist::{Context, DistBlockMatrix, DistOp, DistRowMatrix};
 use crate::linalg::blas::{matmul, nrm2};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::compute::Compute;
 
-/// Anything that can act as a linear operator `R^n → R^m` distributedly.
+/// Anything that can act as a linear operator `R^n → R^m` distributedly
+/// — the mat-vec-only face of [`DistOp`] that the power method needs
+/// (implemented for both distributed layouts, for `&dyn DistOp` trait
+/// objects, and for the never-formed [`ResidualOp`]).
 pub trait LinOp {
     fn op_rows(&self) -> usize;
     fn op_cols(&self) -> usize;
     fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64>;
     fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64>;
+}
+
+/// Every distributed operator verifies through the same power-iteration
+/// path, whatever its storage backend.
+impl<'a> LinOp for &'a dyn DistOp {
+    fn op_rows(&self) -> usize {
+        (**self).rows()
+    }
+    fn op_cols(&self) -> usize {
+        (**self).cols()
+    }
+    fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        (**self).matvec(ctx, x)
+    }
+    fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        (**self).rmatvec(ctx, y)
+    }
 }
 
 impl LinOp for DistRowMatrix {
@@ -212,6 +232,20 @@ mod tests {
         let bad = DistRowMatrix::from_matrix(&a, 7);
         let e3 = max_entry_gram_minus_identity(&ctx, &NativeCompute, &bad);
         assert!(e3 > 0.1);
+    }
+
+    #[test]
+    fn dyn_distop_verifies_through_linop() {
+        // the &dyn DistOp face of LinOp must agree (to the bit) with the
+        // concrete impl — this is the path storage-agnostic callers use
+        let ctx = Context::new(2);
+        let mut rng = Rng::seed(103);
+        let a = Matrix::from_fn(20, 6, |_, _| rng.gauss());
+        let d = DistBlockMatrix::from_matrix(&a, 7, 4);
+        let op: &dyn DistOp = &d;
+        let via_trait = spectral_norm(&ctx, &op, 40, 9);
+        let via_concrete = spectral_norm(&ctx, &d, 40, 9);
+        assert_eq!(via_trait.to_bits(), via_concrete.to_bits());
     }
 
     #[test]

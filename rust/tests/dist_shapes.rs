@@ -199,6 +199,37 @@ fn block_matrix_ops_bit_identical_across_worker_counts() {
 }
 
 #[test]
+fn deep_grid_rmatmul_reduce_parallelizes_and_stays_deterministic() {
+    // ROADMAP open item: on a very tall grid (24 block-rows, a single
+    // block-column) the per-column fold must climb fan-in-sized chunks
+    // — ⌈log₂ 24⌉ = 5 reduce levels at fan-in 2, 24 reduce tasks —
+    // instead of serializing the whole column in one task, while
+    // staying bit-identical across worker counts.
+    let a = randmat(0xDEE9, 96, 7);
+    let q_local = randmat(0xDEEA, 96, 3);
+    let mut reference: Option<Vec<f64>> = None;
+    for workers in [1usize, 2, 4] {
+        let ctx = Context::new(8).with_fan_in(2).with_workers(workers);
+        let d = DistBlockMatrix::from_matrix(&a, 4, 7);
+        assert_eq!(d.num_blocks(), (24, 1));
+        let q = DistRowMatrix::from_matrix(&q_local, 10);
+        ctx.reset_metrics();
+        let z = d.rmatmul_small(&ctx, &NativeCompute, &q);
+        let m = ctx.take_metrics();
+        let want = blas::matmul(&a.transpose(), &q_local);
+        assert!(z.sub(&want).max_abs() < 1e-11, "workers={workers}");
+        // 1 map stage + 5 chunked reduce levels (24→12→6→3→2→1)
+        assert!(m.stages >= 6, "workers={workers}: stages {}", m.stages);
+        // 24 map tasks + 12+6+3+2+1 = 24 reduce tasks
+        assert!(m.tasks >= 48, "workers={workers}: tasks {}", m.tasks);
+        match &reference {
+            None => reference = Some(z.data().to_vec()),
+            Some(r) => assert_eq!(z.data(), &r[..], "workers={workers}: bits changed"),
+        }
+    }
+}
+
+#[test]
 fn comms_model_never_changes_results_only_wall_clock() {
     use dsvd::dist::CommsModel;
     let a = randmat(0xC0515, 128, 12);

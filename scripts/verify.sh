@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus the scaled perf records.
+# Lint + tier-1 verification plus the scaled perf records.
 #
-#   scripts/verify.sh            tier-1 (build + tests) and the scaled
-#                                benches -> BENCH_tall_skinny.json,
-#                                BENCH_lowrank.json, BENCH_gen.json
+#   scripts/verify.sh            lint (cargo fmt --check + clippy -D
+#                                warnings), tier-1 (build + tests), and
+#                                the scaled benches ->
+#                                BENCH_tall_skinny.json, BENCH_lowrank.json,
+#                                BENCH_gen.json, BENCH_sparse.json
+#                                (fails if any record was not written)
 #   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
 #                                scaling acceptance test (>=4 cores)
 #
@@ -16,6 +19,22 @@
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+
+# lint gate BEFORE tier-1, so style and lint rot fail fast; a gate is
+# skipped (loudly) only when the toolchain component itself is absent
+# from this environment — a present-but-failing lint still fails the run
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== lint: cargo fmt --check"
+    cargo fmt --check
+else
+    echo "!! rustfmt component not installed; skipping cargo fmt --check"
+fi
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== lint: cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "!! clippy component not installed; skipping cargo clippy"
+fi
 
 echo "== tier-1: cargo build --release"
 cargo build --release
@@ -46,7 +65,20 @@ DSVD_BENCH_SCALE="$SCALE" \
 DSVD_BENCH_JSON="BENCH_gen.json" \
     cargo bench --bench tables_gen
 
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json"
+echo "== scaled bench: tables_sparse (DSVD_BENCH_SCALE=${SCALE})"
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_sparse.json" \
+    cargo bench --bench tables_sparse
+
+# every expected perf record must exist and be non-empty
+for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json; do
+    if [ ! -s "$f" ]; then
+        echo "!! missing perf record: $f" >&2
+        exit 1
+    fi
+done
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json"
 
 if [ "${FULL:-0}" = "1" ]; then
     echo "== worker-scaling acceptance (tsqr_r, 65536x64, 1 vs 4 workers)"
