@@ -50,27 +50,67 @@ pub fn ensure_sweep_comms(cfg: &mut RunConfig) {
     }
 }
 
-/// The metrics fields shared by every bench JSON record.
+/// The metrics fields shared by every bench JSON record (the pass
+/// ledger rides along so fused-vs-unfused comparisons are reproducible
+/// from the records alone).
 #[allow(dead_code)]
 pub fn metrics_json(m: &Metrics) -> String {
     format!(
         "\"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
-         \"comms_time\": {:e}, \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}",
-        m.cpu_time, m.wall_clock, m.driver_elapsed, m.comms_time, m.stages, m.tasks,
-        m.shuffle_bytes
+         \"comms_time\": {:e}, \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}, \
+         \"a_passes\": {}, \"blocks_materialized\": {}",
+        m.cpu_time,
+        m.wall_clock,
+        m.driver_elapsed,
+        m.comms_time,
+        m.stages,
+        m.tasks,
+        m.shuffle_bytes,
+        m.a_passes,
+        m.blocks_materialized
+    )
+}
+
+/// The provenance stamp appended to EVERY record of every bench JSON:
+/// the git revision the numbers were measured at, the worker-pool and
+/// scale knobs, and the process-level comms-model environment — enough
+/// to tell whether two BENCH_*.json files are comparable without
+/// consulting the shell history that produced them.
+#[allow(dead_code)]
+fn provenance_stamp() -> String {
+    let git_rev = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    let workers = std::env::var("DSVD_WORKERS").unwrap_or_else(|_| "auto".to_string());
+    let scale = std::env::var("DSVD_BENCH_SCALE").unwrap_or_else(|_| "1".to_string());
+    let comms = dsvd::dist::CommsModel::from_env();
+    format!(
+        "\"git_rev\": \"{}\", \"dsvd_workers\": \"{}\", \"bench_scale\": \"{}\", \
+         \"env_shuffle_latency\": {:e}, \"env_task_overhead\": {:e}",
+        git_rev, workers, scale, comms.byte_latency, comms.task_overhead
     )
 }
 
 /// Write one JSON array of records (each entry the body of an object)
-/// to `default_path`, overridable via `DSVD_BENCH_JSON`.
+/// to `default_path`, overridable via `DSVD_BENCH_JSON`. Every record
+/// is stamped with the shared provenance fields (git rev,
+/// `DSVD_WORKERS`, scale, comms-model env).
 #[allow(dead_code)]
 pub fn write_bench_json(default_path: &str, records: &[String]) {
     let path =
         std::env::var("DSVD_BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
+    let stamp = provenance_stamp();
     let mut json = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
         json.push_str("  {");
         json.push_str(r);
+        json.push_str(", ");
+        json.push_str(&stamp);
         json.push('}');
         if i + 1 != records.len() {
             json.push(',');

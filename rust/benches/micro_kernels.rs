@@ -139,4 +139,40 @@ fn main() {
     });
     println!("  Gaussian GEMM (m·n·l): {t_gemm:.3}s");
     println!("  SRFT (m·n log n):      {t_srft:.3}s");
+
+    // ---- CSR kernels: index-free row axpy + fused single sweep ----------
+    // The micro-fix record for the SpMM inner loops: the indexed
+    // `crow[j] += v * brow[j]` form re-checked both slice bounds every
+    // element; the index-free `iter_mut().zip(..)` axpy carries no
+    // bounds checks and autovectorizes cleanly — this section is the
+    // before/after pin (rerun it against any kernel change).
+    // `matmul_and_tn` is the fused power-step kernel: both products of
+    // one subspace-iteration round from a single sweep over the
+    // nonzeros, asserted bit-identical to the two-call pair below.
+    println!("\n== CSR kernels (16384x1024 at 1% density, l = 32)");
+    let mut r4 = Rng::seed(4);
+    let mut triplets = Vec::new();
+    for i in 0..16384usize {
+        for j in 0..1024usize {
+            if r4.uniform() < 0.01 {
+                triplets.push((i, j, r4.gauss()));
+            }
+        }
+    }
+    let csr = blas::Csr::from_triplets(16384, 1024, &triplets);
+    let w32 = Matrix::from_fn(1024, 32, |_, _| r4.gauss());
+    let flops_mm = 2.0 * csr.nnz() as f64 * 32.0;
+    let (y32, t_spmm) = time(|| csr.matmul(&w32));
+    println!("  csr matmul    : {t_spmm:.4}s  ({:.2} GFLOP/s)", gflops(flops_mm, t_spmm));
+    let (_, t_spmm_tn) = time(|| csr.matmul_tn(&y32));
+    println!("  csr matmul_tn : {t_spmm_tn:.4}s  ({:.2} GFLOP/s)", gflops(flops_mm, t_spmm_tn));
+    let ((y_f, bt_f), t_fused) = time(|| csr.matmul_and_tn(&w32));
+    println!(
+        "  csr fused     : {t_fused:.4}s  ({:.2} GFLOP/s) vs {:.4}s two-call",
+        gflops(2.0 * flops_mm, t_fused),
+        t_spmm + t_spmm_tn
+    );
+    // the fused sweep must reproduce the two-call bits exactly
+    assert_eq!(y_f.data(), y32.data(), "fused CSR Y must match matmul");
+    assert_eq!(bt_f.data(), csr.matmul_tn(&y32).data(), "fused CSR Bt must match matmul_tn");
 }

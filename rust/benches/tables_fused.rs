@@ -1,0 +1,282 @@
+//! Fused single-pass sketching ablation: the same Algorithm 7 run with
+//! the fused power step (one traversal of A per round) versus the
+//! unfused two-call plan ([`dsvd::dist::UnfusedOp`]), plus the batched
+//! multi-sketch traversal. Hard gates, not just records:
+//!
+//!   * the fused implicit-backend pass count MUST be strictly lower
+//!     than the unfused one (q+2 vs 2q+2, block materializations
+//!     halved per power round) at bit-identical accuracy;
+//!   * the dense-backend fused factorization MUST be bit-identical to
+//!     the two-call plan for every worker count (1/2/4);
+//!   * a k-sketch batch MUST cost one pass where k separate products
+//!     cost k, at bit-identical results.
+//!
+//! Any violated gate panics, which fails `scripts/verify.sh`. Writes
+//! `BENCH_fused.json`.
+//!
+//!     cargo bench --bench tables_fused
+
+mod bench_common;
+
+use bench_common::{bench_config, metrics_json, write_bench_json};
+use dsvd::algs::{algorithm7, DistSvd, LowRankOpts};
+use dsvd::dist::{BlockStorage, Context, DistOp, Metrics, UnfusedOp};
+use dsvd::gen::SparseRandTestMatrix;
+use dsvd::harness::sci;
+use dsvd::linalg::Matrix;
+use dsvd::rng::Rng;
+use dsvd::runtime::compute::Compute;
+use dsvd::verify::{
+    max_entry_gram_minus_identity, max_entry_gram_minus_identity_local, spectral_norm,
+    ResidualOp,
+};
+
+/// (Σ, V bytes, U partition bytes) — the bit-level fingerprint of a
+/// factorization, for the "identical accuracy / identical bits" gates.
+type Snapshot = (Vec<f64>, Vec<f64>, Vec<Vec<f64>>);
+
+fn snapshot(out: &DistSvd) -> Snapshot {
+    (
+        out.s.clone(),
+        out.v.data().to_vec(),
+        out.u.parts.iter().map(|p| p.data.data().to_vec()).collect(),
+    )
+}
+
+struct RunOut {
+    out: DistSvd,
+    metrics: Metrics,
+    recon: f64,
+    u_orth: f64,
+    v_orth: f64,
+}
+
+fn run_alg7(
+    ctx: &Context,
+    be: &dyn Compute,
+    op: &dyn DistOp,
+    opts: &LowRankOpts,
+    power_iters: usize,
+    seed: u64,
+) -> RunOut {
+    ctx.reset_metrics();
+    let out = algorithm7(ctx, be, op, opts);
+    let metrics = ctx.take_metrics();
+    let resid = ResidualOp { a: &op, u: &out.u, s: &out.s, v: &out.v };
+    let recon = spectral_norm(ctx, &resid, power_iters, seed ^ 0xE44);
+    let u_orth = max_entry_gram_minus_identity(ctx, be, &out.u);
+    let v_orth = max_entry_gram_minus_identity_local(&out.v);
+    RunOut { out, metrics, recon, u_orth, v_orth }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    table: &str,
+    mode: &str,
+    backend: &str,
+    workers: &str,
+    m: usize,
+    n: usize,
+    l: usize,
+    iters: usize,
+    r: &RunOut,
+) -> String {
+    format!(
+        "\"table\": \"{}\", \"mode\": \"{}\", \"backend\": \"{}\", \"workers\": \"{}\", \
+         \"m\": {}, \"n\": {}, \"l\": {}, \"iters\": {}, \"algorithm\": \"7\", {}, \
+         \"recon\": {:e}, \"u_orth\": {:e}, \"v_orth\": {:e}",
+        table,
+        mode,
+        backend,
+        workers,
+        m,
+        n,
+        l,
+        iters,
+        metrics_json(&r.metrics),
+        r.recon,
+        r.u_orth,
+        r.v_orth,
+    )
+}
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let scale = (scale / 8).max(1);
+    let n = 384usize;
+    let m = (65536 / scale).max(2 * n);
+    let (l, iters) = (10usize, 2usize);
+    let (rpb, cpb) = (256usize, 128usize);
+    let density = 0.05f64;
+
+    let mut cfg = cfg_base.clone();
+    cfg.executors = 18;
+    cfg.rows_per_part = rpb;
+    cfg.cols_per_part = cpb;
+    let mut opts = LowRankOpts::new(l, iters);
+    opts.rows_per_part = rpb;
+    opts.ts = cfg.ts_opts();
+
+    let mut records = Vec::new();
+
+    // ---- gate 1: fused vs unfused on the implicit backend -----------
+    println!("================================================================");
+    println!(
+        "Fused vs unfused — Algorithm 7, implicit backend, m={m} n={n} l={l} i={iters}, \
+         blocks {rpb}x{cpb}, backend={}",
+        be.name()
+    );
+    println!("----------------------------------------------------------------");
+    let g = SparseRandTestMatrix::new(m, n, density, cfg.seed ^ 0xF5D);
+    let ctx = cfg.context();
+    let a = g.generate(&ctx, rpb, cpb, BlockStorage::Implicit);
+    let (nbr, nbc) = a.num_blocks();
+    let cells = nbr * nbc;
+
+    let fused = run_alg7(&ctx, be.as_ref(), &a, &opts, cfg.power_iters, cfg.seed);
+    let unfused_op = UnfusedOp(&a);
+    let unfused = run_alg7(&ctx, be.as_ref(), &unfused_op, &opts, cfg.power_iters, cfg.seed);
+
+    println!(
+        "{:>9}  {:>8}  {:>14}  {:>10}  {:>10}  {:>12}",
+        "mode", "A passes", "blocks matzd", "CPU Time", "Wall-Clock", "recon"
+    );
+    for (mode, r) in [("fused", &fused), ("unfused", &unfused)] {
+        println!(
+            "{:>9}  {:>8}  {:>14}  {:>10}  {:>10}  {:>12}",
+            mode,
+            r.metrics.a_passes,
+            r.metrics.blocks_materialized,
+            sci(r.metrics.cpu_time),
+            sci(r.metrics.wall_clock),
+            sci(r.recon)
+        );
+    }
+
+    // the verify.sh gate: strictly fewer passes, materializations
+    // halved per power round, identical results to the bit
+    assert!(
+        fused.metrics.a_passes < unfused.metrics.a_passes,
+        "GATE: fused implicit pass count {} must be strictly below unfused {}",
+        fused.metrics.a_passes,
+        unfused.metrics.a_passes
+    );
+    assert_eq!(fused.metrics.a_passes, iters + 2, "fused plan must read A q+2 times");
+    assert_eq!(unfused.metrics.a_passes, 2 * iters + 2, "unfused plan must read A 2q+2 times");
+    assert_eq!(
+        unfused.metrics.blocks_materialized - fused.metrics.blocks_materialized,
+        iters * cells,
+        "each power round must save one materialization per cell"
+    );
+    assert_eq!(snapshot(&fused.out), snapshot(&unfused.out), "fusion must not change any bit");
+    println!(
+        "gate OK: implicit passes {} < {} (per-round materializations {} -> {}), \
+         bit-identical factorizations",
+        fused.metrics.a_passes,
+        unfused.metrics.a_passes,
+        2 * cells,
+        cells
+    );
+    records.push(record("FUSED_VS_UNFUSED", "fused", "implicit", "auto", m, n, l, iters, &fused));
+    records.push(record(
+        "FUSED_VS_UNFUSED",
+        "unfused",
+        "implicit",
+        "auto",
+        m,
+        n,
+        l,
+        iters,
+        &unfused,
+    ));
+
+    // ---- gate 2: dense fused bit-identity across worker counts ------
+    println!("----------------------------------------------------------------");
+    println!("Dense fused vs two-call across worker counts 1/2/4");
+    let m_small = (m / 4).max(2 * n);
+    let gd = SparseRandTestMatrix::new(m_small, n, density, cfg.seed ^ 0xD45);
+    let mut reference: Option<Snapshot> = None;
+    for workers in [1usize, 2, 4] {
+        let mut cfg_w = cfg.clone();
+        cfg_w.workers = workers;
+        let ctx = cfg_w.context();
+        let a = gd.generate(&ctx, rpb, cpb, BlockStorage::Dense);
+        let fused = run_alg7(&ctx, be.as_ref(), &a, &opts, cfg.power_iters, cfg.seed);
+        let unfused_op = UnfusedOp(&a);
+        let unfused = run_alg7(&ctx, be.as_ref(), &unfused_op, &opts, cfg.power_iters, cfg.seed);
+        let snap = snapshot(&fused.out);
+        assert_eq!(
+            snap,
+            snapshot(&unfused.out),
+            "GATE: dense fused must be bit-identical to two-call at workers={workers}"
+        );
+        match &reference {
+            None => reference = Some(snap),
+            Some(r) => {
+                assert_eq!(&snap, r, "GATE: dense fused drifted at workers={workers}");
+            }
+        }
+        println!(
+            "  workers={workers}: fused == two-call (bitwise), passes {} vs {}",
+            fused.metrics.a_passes, unfused.metrics.a_passes
+        );
+        let w = workers.to_string();
+        records.push(record("DENSE_WORKERS", "fused", "dense", &w, m_small, n, l, iters, &fused));
+        records.push(record(
+            "DENSE_WORKERS",
+            "unfused",
+            "dense",
+            &w,
+            m_small,
+            n,
+            l,
+            iters,
+            &unfused,
+        ));
+    }
+
+    // ---- gate 3: batched multi-sketch traversal ---------------------
+    println!("----------------------------------------------------------------");
+    let k = 4usize;
+    println!("Batched sketches — {k} driver factors from one implicit traversal");
+    let mut rng = Rng::seed(cfg.seed ^ 0xBA7C);
+    let ws: Vec<Matrix> = (0..k).map(|_| Matrix::from_fn(n, l, |_, _| rng.gauss())).collect();
+    let ctx = cfg.context();
+    ctx.reset_metrics();
+    let batched = a.matmul_small_batch(&ctx, be.as_ref(), &ws);
+    let mb = ctx.take_metrics();
+    ctx.reset_metrics();
+    let separate: Vec<_> = ws.iter().map(|w| a.matmul_small(&ctx, be.as_ref(), w)).collect();
+    let ms = ctx.take_metrics();
+    assert_eq!(mb.a_passes, 1, "GATE: a {k}-sketch batch must be one traversal");
+    assert_eq!(ms.a_passes, k, "separate products must cost one traversal each");
+    assert_eq!(mb.blocks_materialized * k, ms.blocks_materialized);
+    for (got, want) in batched.iter().zip(&separate) {
+        assert_eq!(
+            got.collect(&ctx).data(),
+            want.collect(&ctx).data(),
+            "GATE: batched sketch must match the separate product bitwise"
+        );
+    }
+    println!(
+        "  batch of {k}: 1 pass / {} blocks vs {} passes / {} blocks; \
+         cpu {} vs {} (bit-identical results)",
+        mb.blocks_materialized,
+        ms.a_passes,
+        ms.blocks_materialized,
+        sci(mb.cpu_time),
+        sci(ms.cpu_time)
+    );
+    records.push(format!(
+        "\"table\": \"BATCH\", \"mode\": \"batched\", \"backend\": \"implicit\", \
+         \"workers\": \"auto\", \"m\": {m}, \"n\": {n}, \"l\": {l}, \"k\": {k}, {}",
+        metrics_json(&mb)
+    ));
+    records.push(format!(
+        "\"table\": \"BATCH\", \"mode\": \"separate\", \"backend\": \"implicit\", \
+         \"workers\": \"auto\", \"m\": {m}, \"n\": {n}, \"l\": {l}, \"k\": {k}, {}",
+        metrics_json(&ms)
+    ));
+
+    write_bench_json("BENCH_fused.json", &records);
+}

@@ -57,9 +57,13 @@ pub fn preexisting_lowrank(
     let ncv = if opts.ncv > 0 { opts.ncv.min(n) } else { (2 * l + 1).max(20).min(n) };
 
     let mut rng = Rng::seed(opts.seed);
+    // the Gram-operator apply routes through the fused normal mat-vec:
+    // one traversal of the stored operator per Krylov vector (implicit
+    // blocks materialize once, not once per product) — bit-identical to
+    // the matvec-then-rmatvec pair it replaces
     let op = |ctx: &Context, x: &[f64]| -> Vec<f64> {
-        let y = a.matvec(ctx, x);
-        a.rmatvec(ctx, &y)
+        let (_ax, z) = a.fused_normal_matvec(ctx, x);
+        z
     };
 
     // seed basis: one random unit vector

@@ -15,15 +15,32 @@
 //! operator contract — so the same code serves dense block grids,
 //! per-block CSR, generator-backed implicit storage, and row-slab
 //! matrices without ever materializing anything it was not handed.
+//!
+//! **Pass structure.** Each power-iteration round issues ONE
+//! [`DistOp::fused_power_step`] — `(Y, Z) = (A·Q̃, Aᵀ·(A·Q̃))` from a
+//! single traversal of the stored operator — instead of the classic
+//! `matmul_small` + `rmatmul_small` pair. The round's orthonormalized
+//! `Q = Y·T` is never materialized: only its small right-transform `T`
+//! is extracted (see `factor_transform`), and `Aᵀ·Q` is recovered as
+//! the driver-side product `Z·T`. A full Algorithm 7/8 run therefore
+//! reads A `i + 2` times (i fused rounds, the final sketch product,
+//! Algorithm 6's `B = QᵀA`) where the unfused plan reads it `2i + 2`
+//! times — on the implicit backend that halving is exactly a halving of
+//! generator runs per round, measured by the
+//! [`Metrics::a_passes`](crate::dist::Metrics) ledger and gated by
+//! `scripts/verify.sh` / `benches/tables_fused.rs`.
 
 use super::tall_skinny::{
-    algorithm1, algorithm2, algorithm3, algorithm4, DistSvd, TallSkinnyOpts,
+    algorithm1, algorithm2, algorithm3, algorithm4, keep_indices, unmix_columns, DistSvd,
+    TallSkinnyOpts,
 };
-use crate::dist::{Context, DistOp, DistRowMatrix};
+use crate::dist::{tsqr_r, Context, DistOp, DistRowMatrix};
+use crate::linalg::qr::{significant_prefix, tri_inverse_upper};
 use crate::linalg::svd::svd;
-use crate::linalg::Matrix;
+use crate::linalg::{blas, Matrix};
 use crate::rng::Rng;
 use crate::runtime::compute::Compute;
+use crate::srft::Srft;
 
 /// Which tall-skinny engine Algorithm 5 uses internally.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,6 +90,80 @@ fn factor_q(
     out.u
 }
 
+/// The small right-transform `T` (l×k, k ≤ l after working-precision
+/// discards) such that the mid-loop orthonormalization of Algorithm 5
+/// is `Q = Y·T` — extracted WITHOUT materializing Q, so the subsequent
+/// `Aᵀ·Q` can be served as `Z·T` from the Z = Aᵀ·Y half of the fused
+/// power step (one traversal of A per round instead of two).
+///
+/// Both engines' single orthonormalizations are right-multiplications
+/// of Y, so T is exact by construction:
+///
+/// * **Randomized** (Algorithm 1 steps 1–3): `mixed = Y·Ωᵀ`, TSQR for
+///   R, discard at the working precision, `Q = mixed[:, :k]·R₁₁⁻¹` —
+///   hence `T = Ωᵀ·[R₁₁⁻¹; 0]`, applied column-wise like Algorithm 1's
+///   own un-mixing. The factorization passes run over Y (m×l) only.
+/// * **Gram** (Algorithm 3): `YᵀY = V D Vᵀ`, `σ = colnorms(Y·V)`
+///   (Remark 6), discard at √wp — hence `T = V_kept·Σ⁻¹_kept`.
+///
+/// The discard decisions are computed from the very same quantities the
+/// unfused path computed them from (the same R, the same column norms),
+/// so the kept rank per round is unchanged. Two things differ from the
+/// pre-fusion `factor_q` mid-loop, neither touching the subspace:
+/// for the Randomized engine, `factor_q` returned Algorithm 1's full
+/// `U = Q·Ũ` (the extra k×k SVD rotation of steps 4–5) where this T
+/// stops at the orthonormal Q of steps 1–3 — per-round iterates differ
+/// by that orthogonal rotation, which the very next orthonormalization
+/// absorbs; and the floating-point association becomes `(Aᵀ·Y)·T`
+/// instead of `Aᵀ·(Y·T)` — both carry the same `eps·‖A‖·‖Y‖·‖T‖`
+/// rounding term, the error the paper's single-orthonormalization
+/// mid-loop already tolerates ("the purpose of the earlier steps is to
+/// track a subspace").
+fn factor_transform(
+    ctx: &Context,
+    be: &dyn Compute,
+    y: &DistRowMatrix,
+    method: TsMethod,
+    ts: &TallSkinnyOpts,
+) -> Matrix {
+    let l = y.cols();
+    match method {
+        TsMethod::Randomized => {
+            let mut rng = Rng::seed(ts.seed);
+            let om = ctx.driver(|| Srft::with_chains(l, ts.srft_chains, &mut rng));
+            let mut mixed = y.clone();
+            mixed.map_rows(ctx, |row| om.forward(row));
+            let r = tsqr_r(ctx, &mixed);
+            let k = significant_prefix(&r, ts.working_precision);
+            assert!(k > 0, "sketch is numerically zero at the working precision");
+            let r11 = r.slice(0, k, 0, k);
+            ctx.driver(|| {
+                let rinv = tri_inverse_upper(&r11);
+                let mut solve = Matrix::zeros(l, k);
+                for i in 0..k {
+                    solve.row_mut(i).copy_from_slice(rinv.row(i));
+                }
+                unmix_columns(&om, &solve)
+            })
+        }
+        TsMethod::Gram => {
+            let b = y.gram(ctx, be);
+            let eig = ctx.driver(|| crate::linalg::eigh::eigh(&b));
+            let u_tilde = y.matmul_small(ctx, be, &eig.v);
+            let sigma = u_tilde.col_norms(ctx);
+            let keep = keep_indices(&sigma, ts.working_precision.sqrt());
+            assert!(!keep.is_empty(), "sketch is numerically zero at the working precision");
+            ctx.driver(|| {
+                let mut t = eig.v.select_cols(&keep);
+                for (j, &kidx) in keep.iter().enumerate() {
+                    t.scale_col(j, 1.0 / sigma[kidx]);
+                }
+                t
+            })
+        }
+    }
+}
+
 /// Same for a driver-held tall matrix (the n×l factorizations of
 /// Algorithm 5's step 6): distribute, factor, collect.
 fn factor_q_local(
@@ -106,11 +197,18 @@ pub fn algorithm5(
     let mut rng = Rng::seed(opts.ts.seed ^ 0xA16_0005);
     let mut q_tilde = ctx.driver(|| Matrix::from_fn(n, l, |_, _| rng.gauss()));
 
-    // steps 2–7 — power iterations with single orthonormalization
+    // steps 2–7 — power iterations with single orthonormalization, one
+    // traversal of A per round: the fused step hands back Y = A·Q̃ and
+    // Z = Aᵀ·Y together, the mid-loop orthonormal Q = Y·T is kept as
+    // its small right-transform T only (extracted from a factorization
+    // of Y — no further passes over A), and Aᵀ·Q = Z·T lands on the
+    // driver as a small product. On the unfused two-call fallback this
+    // costs the classic two passes per round; every block-storage
+    // backend overrides it with a genuinely single-pass plan.
     for _j in 0..opts.iters {
-        let y = a.matmul_small(ctx, be, &q_tilde); // m×l, distributed
-        let q = factor_q(ctx, be, &y, method, false, &opts.ts);
-        let y_tilde = a.rmatmul_small(ctx, be, &q); // n×l, driver
+        let (y, z) = a.fused_power_step(ctx, be, &q_tilde); // one pass over A
+        let t = factor_transform(ctx, be, &y, method, &opts.ts);
+        let y_tilde = ctx.driver(|| blas::matmul(&z, &t)); // = Aᵀ·(Y·T), n×k
         q_tilde = factor_q_local(ctx, be, &y_tilde, method, &opts.ts, opts.rows_per_part);
     }
 
@@ -265,6 +363,22 @@ mod tests {
         assert!(e.recon < 1e-10, "recon {}", e.recon);
         assert!(e.u_orth < 1e-12);
         assert!(e.v_orth < 1e-12);
+    }
+
+    #[test]
+    fn fused_loop_reads_a_once_per_iteration() {
+        // the pass ledger: Algorithm 5 alone is i fused rounds plus the
+        // final sketch product — i + 1 traversals of A, (i + 1)·cells
+        // block accesses, for BOTH engines
+        let (ctx, a, _) = block_matrix(96, 64, 6);
+        let (nbr, nbc) = a.num_blocks();
+        for (method, iters) in [(TsMethod::Randomized, 2usize), (TsMethod::Gram, 3)] {
+            ctx.reset_metrics();
+            let _q = algorithm5(&ctx, &NativeCompute, &a, method, &opts(6, iters));
+            let m = ctx.take_metrics();
+            assert_eq!(m.a_passes, iters + 1, "{method:?} passes");
+            assert_eq!(m.blocks_materialized, (iters + 1) * nbr * nbc, "{method:?} blocks");
+        }
     }
 
     #[test]

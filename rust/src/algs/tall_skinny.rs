@@ -374,8 +374,9 @@ fn discard_by_diagonal(
     (r_kept, q_kept)
 }
 
-/// Keep σ_j ≥ σ_max · cutoff (and σ_j > 0) — Algorithms 3–4, step 5/11.
-fn keep_indices(sigma: &[f64], cutoff: f64) -> Vec<usize> {
+/// Keep σ_j ≥ σ_max · cutoff (and σ_j > 0) — Algorithms 3–4, step 5/11
+/// (shared with Algorithm 5's fused right-transform in `lowrank.rs`).
+pub(crate) fn keep_indices(sigma: &[f64], cutoff: f64) -> Vec<usize> {
     let smax = sigma.iter().cloned().fold(0.0f64, f64::max);
     if smax == 0.0 {
         return vec![];
@@ -383,8 +384,9 @@ fn keep_indices(sigma: &[f64], cutoff: f64) -> Vec<usize> {
     (0..sigma.len()).filter(|&j| sigma[j] >= smax * cutoff && sigma[j] > 0.0).collect()
 }
 
-/// V = Ω⁻¹ Ṽ applied column-wise.
-fn unmix_columns(om: &Srft, v_tilde: &Matrix) -> Matrix {
+/// V = Ω⁻¹ Ṽ applied column-wise (shared with Algorithm 5's fused
+/// right-transform in `lowrank.rs`: `T = Ωᵀ·[R₁₁⁻¹; 0]` column-wise).
+pub(crate) fn unmix_columns(om: &Srft, v_tilde: &Matrix) -> Matrix {
     let (n, k) = v_tilde.shape();
     let mut v = Matrix::zeros(n, k);
     let mut col = vec![0.0; n];

@@ -163,6 +163,13 @@ impl Context {
     pub(crate) fn add_shuffle(&self, bytes: usize) {
         self.metrics.lock().unwrap().add_shuffle(bytes, &self.comms);
     }
+
+    /// Record one traversal of a block-stored operator touching
+    /// `blocks` grid cells (the `a_passes` / `blocks_materialized`
+    /// ledger — see [`Metrics`]).
+    pub(crate) fn add_pass(&self, blocks: usize) {
+        self.metrics.lock().unwrap().add_pass(blocks);
+    }
 }
 
 /// Split a vector into owned chunks of (at most) `size` items,

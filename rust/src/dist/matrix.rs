@@ -375,6 +375,90 @@ impl DistRowMatrix {
         )
         .unwrap_or_else(|| Matrix::zeros(self.cols, q.cols()))
     }
+
+    /// One fused power-iteration step `(Y, Z) = (A·W, Aᵀ·(A·W))` — the
+    /// row-slab face of [`super::DistOp::fused_power_step`]. Each
+    /// partition task streams its rows **once** through
+    /// [`Compute::matmul_and_tn`], emitting its Y slab and its n×l
+    /// Z-partial together; the partials then treeAggregate exactly like
+    /// [`DistRowMatrix::rmatmul_small`]'s, so the result is
+    /// bit-identical to the unfused two-call pair.
+    pub fn fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        assert_eq!(self.cols, w.rows(), "fused_power_step: cols vs W rows");
+        let tasks: Vec<Box<dyn FnOnce() -> (RowPartition, Matrix) + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let (y, bt) = be.matmul_and_tn(&p.data, w);
+                    (RowPartition { row_start: p.row_start, data: y }, bt)
+                }) as Box<dyn FnOnce() -> (RowPartition, Matrix) + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut parts = Vec::with_capacity(results.len());
+        let mut partials = Vec::with_capacity(results.len());
+        for (part, bt) in results {
+            parts.push(part);
+            partials.push(bt);
+        }
+        let y = DistRowMatrix { parts, rows: self.rows, cols: w.cols() };
+        let z = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, w.cols()));
+        (y, z)
+    }
+
+    /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))`: one
+    /// traversal of the row slabs instead of the `matvec` + `rmatvec`
+    /// pair; bit-identical to the two separate calls.
+    pub fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(x.len(), self.cols, "fused_normal_matvec length mismatch");
+        type FusedVecOut = (usize, Vec<f64>, Vec<f64>);
+        let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let y = blas::gemv(&p.data, x);
+                    let z = blas::gemv_t(&p.data, &y);
+                    (p.row_start, y, z)
+                }) as Box<dyn FnOnce() -> FusedVecOut + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        let mut partials = Vec::with_capacity(results.len());
+        for (r0, yc, z) in results {
+            y[r0..r0 + yc.len()].copy_from_slice(&yc);
+            partials.push(z);
+        }
+        let z = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; self.cols]);
+        (y, z)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -490,6 +574,20 @@ impl Block {
             Block::Dense(m) => be.matmul_tn(m, q),
             Block::SparseCsr(c) => c.matmul_tn(q),
             Block::Implicit(i) => be.matmul_tn(&i.materialize(), q),
+        }
+    }
+
+    /// Fused power step `(block·W, blockᵀ·(block·W))` touching the
+    /// stored block exactly once: dense cells stream their rows a
+    /// single time (`Compute::matmul_and_tn`), CSR cells sweep their
+    /// nonzeros once, implicit cells run their generator **once**
+    /// instead of once per product. Bit-identical to
+    /// `(matmul, matmul_tn)` on the same block.
+    pub fn matmul_and_tn(&self, be: &dyn Compute, w: &Matrix) -> (Matrix, Matrix) {
+        match self {
+            Block::Dense(m) => be.matmul_and_tn(m, w),
+            Block::SparseCsr(c) => c.matmul_and_tn(w),
+            Block::Implicit(i) => be.matmul_and_tn(&i.materialize(), w),
         }
     }
 
@@ -707,6 +805,8 @@ impl DistBlockMatrix {
     /// Densify every cell (one task per block) — the reference matrix
     /// the op-equivalence suite compares every backend against.
     pub fn densify(&self, ctx: &Context) -> DistBlockMatrix {
+        let (nbr0, nbc0) = self.num_blocks();
+        ctx.add_pass(nbr0 * nbc0);
         let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
             .grid
             .iter()
@@ -750,6 +850,8 @@ impl DistBlockMatrix {
     /// nnz-proportional for CSR, descriptors only for implicit (whose
     /// cells the driver then generates locally, on the driver clock).
     pub fn collect(&self, ctx: &Context) -> Matrix {
+        let (nbr, nbc) = self.num_blocks();
+        ctx.add_pass(nbr * nbc);
         ctx.add_shuffle(self.storage_bytes());
         ctx.driver(|| {
             let mut out = Matrix::zeros(self.rows, self.cols);
@@ -776,31 +878,12 @@ impl DistBlockMatrix {
 
     /// `A · W` for a small driver-held `W` (n×l): one task per block-row,
     /// accumulating its blocks' partial products; the result is a
-    /// [`DistRowMatrix`] partitioned by the block-row grid.
+    /// [`DistRowMatrix`] partitioned by the block-row grid. The
+    /// singleton case of [`DistBlockMatrix::matmul_small_batch`] — one
+    /// task plan, kept in one place.
     pub fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
-        assert_eq!(self.cols, w.rows(), "matmul_small: block cols vs W rows");
-        let l = w.cols();
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
-                    let mut acc = Matrix::zeros(r1 - r0, l);
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let ws = w.slice(cb[bj], cb[bj + 1], 0, l);
-                        acc.add_assign(&b.matmul(be, &ws));
-                    }
-                    RowPartition { row_start: r0, data: acc }
-                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
-            })
-            .collect();
-        let parts = ctx.stage(tasks);
-        DistRowMatrix { parts, rows: self.rows, cols: l }
+        let mut out = self.matmul_small_batch(ctx, be, std::slice::from_ref(w));
+        out.pop().expect("a singleton batch yields one product")
     }
 
     /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l) — the
@@ -819,50 +902,34 @@ impl DistBlockMatrix {
     /// bytes of the partials it receives, so the comms model attributes
     /// each shuffled byte to the column strip that caused it. The `Q`
     /// row slab is re-sliced per block — `O(rows·l)` copies, noise
-    /// next to the `O(block nnz·l)` product each task performs.
+    /// next to the `O(block nnz·l)` product each task performs. The
+    /// singleton case of [`DistBlockMatrix::rmatmul_small_batch`] —
+    /// one task plan, kept in one place.
     pub fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
-        assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
-        let l = q.cols();
+        let mut out = self.rmatmul_small_batch(ctx, be, &[q]);
+        out.pop().expect("a singleton batch yields one product")
+    }
+
+    /// Stage 2 of `rmatmul_small` (shared with the fused paths): fold
+    /// each block-column's partials in block-row order through
+    /// fan-in-sized chunks, so on very tall grids (many block-rows, few
+    /// columns) the reduce parallelizes like a treeAggregate instead of
+    /// serializing one fold task per column. Groups are keyed by index
+    /// and folded left-to-right (bit-deterministic for a given fan-in);
+    /// each group's task is charged the bytes of the non-leading
+    /// partials it receives, and with ≤ fan-in block-rows this is
+    /// exactly the former single-fold stage. Singleton groups pass
+    /// through untouched. The folded strips are finally assembled into
+    /// the driver-held n×l result (a driver-bound gather, charged like
+    /// `collect`).
+    fn reduce_column_strips(
+        &self,
+        ctx: &Context,
+        mut by_col: Vec<Vec<Matrix>>,
+        l: usize,
+    ) -> Matrix {
         let n = self.cols;
         let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        let nbc = cb.len() - 1;
-        let nbr = rb.len() - 1;
-
-        // stage 1 — one task per block, one column-keyed partial each
-        let mut tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> =
-            Vec::with_capacity(nbr * nbc);
-        for (bi, row_blocks) in self.grid.iter().enumerate() {
-            let r0 = rb[bi];
-            let r1 = rb[bi + 1];
-            for b in row_blocks.iter() {
-                tasks.push(Box::new(move || {
-                    let qs = q.rows_slice(r0, r1);
-                    b.matmul_tn(be, &qs)
-                }) as Box<dyn FnOnce() -> Matrix + Send + '_>);
-            }
-        }
-        let flat = ctx.stage(tasks);
-
-        // regroup by block-column (driver pointer work, no data copied):
-        // flat is block-row major, flat[bi·nbc + bj] ↦ by_col[bj][bi]
-        let mut by_col: Vec<Vec<Matrix>> = (0..nbc).map(|_| Vec::with_capacity(nbr)).collect();
-        let mut it = flat.into_iter();
-        for _bi in 0..nbr {
-            for bj in 0..nbc {
-                by_col[bj].push(it.next().expect("one strip per grid block"));
-            }
-        }
-
-        // stage 2 — fold each column's partials in block-row order
-        // through fan-in-sized chunks, so on very tall grids (many
-        // block-rows, few columns) the reduce parallelizes like a
-        // treeAggregate instead of serializing one fold task per
-        // column. Groups are keyed by index and folded left-to-right
-        // (bit-deterministic for a given fan-in); each group's task is
-        // charged the bytes of the non-leading partials it receives,
-        // and with ≤ fan-in block-rows this is exactly the former
-        // single-fold stage. Singleton groups pass through untouched.
         let fan = ctx.fan_in();
         while by_col.iter().any(|ps| ps.len() > 1) {
             let mut group_counts = Vec::with_capacity(by_col.len());
@@ -895,8 +962,6 @@ impl DistBlockMatrix {
             .map(|mut ps| ps.pop().expect("one folded strip per column"))
             .collect();
 
-        // assemble the driver-held n×l from the column strips — a
-        // driver-bound gather, charged like `collect`
         ctx.add_shuffle(8 * n * l);
         ctx.driver(|| {
             let mut out = Matrix::zeros(n, l);
@@ -914,6 +979,7 @@ impl DistBlockMatrix {
         assert_eq!(x.len(), self.cols, "matvec length mismatch");
         let cb = &self.col_bounds;
         let rb = &self.row_bounds;
+        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
         let tasks: Vec<Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>> = self
             .grid
             .iter()
@@ -947,6 +1013,7 @@ impl DistBlockMatrix {
         let n = self.cols;
         let cb = &self.col_bounds;
         let rb = &self.row_bounds;
+        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
         let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
             .grid
             .iter()
@@ -979,6 +1046,316 @@ impl DistBlockMatrix {
             |v| 8 * v.len(),
         )
         .unwrap_or_else(|| vec![0.0; n])
+    }
+
+    /// One fused power-iteration step: `(Y, Z) = (A·W, Aᵀ·(A·W))` with
+    /// every grid block accessed exactly **once** — the block-matrix
+    /// face of [`super::DistOp::fused_power_step`].
+    ///
+    /// Per block-row task: on a single-block-column grid (the shape of
+    /// every paper table at this scale) the task calls the single-pass
+    /// [`Block::matmul_and_tn`] kernel, so dense cells stream their rows
+    /// once and implicit cells run their generator once. On wider grids
+    /// the Bᵀ partials need the complete Y panel, so the task sweeps its
+    /// row's blocks twice — but implicit cells are still materialized
+    /// only once (held for the task's lifetime, `O(block row)` resident)
+    /// and the ledger still charges one pass. The per-block-column
+    /// partials then reduce through the same fan-in-chunked fold as
+    /// [`DistBlockMatrix::rmatmul_small`], so the result is
+    /// bit-identical to the unfused `matmul_small` + `rmatmul_small`
+    /// pair for dense grids and for deterministic generators.
+    pub fn fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        assert_eq!(self.cols, w.rows(), "fused_power_step: block cols vs W rows");
+        let l = w.cols();
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        let nbc = cb.len() - 1;
+        let nbr = rb.len() - 1;
+        ctx.add_pass(nbr * nbc);
+
+        type FusedOut = (RowPartition, Vec<Matrix>);
+        let tasks: Vec<Box<dyn FnOnce() -> FusedOut + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    if row_blocks.len() == 1 {
+                        // single block column: one stream over the
+                        // stored block serves both products
+                        let ws = w.slice(cb[0], cb[1], 0, l);
+                        let (y, bt) = row_blocks[0].matmul_and_tn(be, &ws);
+                        return (RowPartition { row_start: r0, data: y }, vec![bt]);
+                    }
+                    // wider grid: the Bᵀ partials need the finished Y
+                    // panel, so sweep the row's blocks twice — implicit
+                    // cells materialize once and are reused
+                    let mut cache: Vec<Option<Matrix>> = vec![None; row_blocks.len()];
+                    let mut acc = Matrix::zeros(r1 - r0, l);
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let ws = w.slice(cb[bj], cb[bj + 1], 0, l);
+                        match b {
+                            Block::Implicit(i) => {
+                                let d = i.materialize();
+                                acc.add_assign(&be.matmul(&d, &ws));
+                                cache[bj] = Some(d);
+                            }
+                            other => acc.add_assign(&other.matmul(be, &ws)),
+                        }
+                    }
+                    let partials = row_blocks
+                        .iter()
+                        .zip(&cache)
+                        .map(|(b, cached)| match cached {
+                            Some(d) => be.matmul_tn(d, &acc),
+                            None => b.matmul_tn(be, &acc),
+                        })
+                        .collect();
+                    (RowPartition { row_start: r0, data: acc }, partials)
+                }) as Box<dyn FnOnce() -> FusedOut + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+
+        let mut parts = Vec::with_capacity(nbr);
+        let mut by_col: Vec<Vec<Matrix>> = (0..nbc).map(|_| Vec::with_capacity(nbr)).collect();
+        for (part, partials) in results {
+            parts.push(part);
+            for (bj, p) in partials.into_iter().enumerate() {
+                by_col[bj].push(p);
+            }
+        }
+        let y = DistRowMatrix { parts, rows: self.rows, cols: l };
+        let z = self.reduce_column_strips(ctx, by_col, l);
+        (y, z)
+    }
+
+    /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))` — one
+    /// grid traversal instead of the `matvec` + `rmatvec` pair, the
+    /// step the Krylov baseline issues per basis vector. Implicit cells
+    /// materialize once and serve both products; results are
+    /// bit-identical to the two separate calls.
+    pub fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(x.len(), self.cols, "fused_normal_matvec length mismatch");
+        let n = self.cols;
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+        type FusedVecOut = (usize, Vec<f64>, Vec<f64>);
+        let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    let mut cache: Vec<Option<Matrix>> = vec![None; row_blocks.len()];
+                    let mut y = vec![0.0f64; r1 - r0];
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let xs = &x[cb[bj]..cb[bj + 1]];
+                        let part = match b {
+                            Block::Implicit(i) => {
+                                let d = i.materialize();
+                                let p = blas::gemv(&d, xs);
+                                cache[bj] = Some(d);
+                                p
+                            }
+                            other => other.gemv(xs),
+                        };
+                        for (yi, pi) in y.iter_mut().zip(&part) {
+                            *yi += pi;
+                        }
+                    }
+                    let mut z = vec![0.0f64; n];
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let part = match &cache[bj] {
+                            Some(d) => blas::gemv_t(d, &y),
+                            None => b.gemv_t(&y),
+                        };
+                        for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
+                            *zi += pi;
+                        }
+                    }
+                    (r0, y, z)
+                }) as Box<dyn FnOnce() -> FusedVecOut + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        let mut partials = Vec::with_capacity(results.len());
+        for (r0, yc, z) in results {
+            y[r0..r0 + yc.len()].copy_from_slice(&yc);
+            partials.push(z);
+        }
+        let z = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; n]);
+        (y, z)
+    }
+
+    /// Batched `A · Wₖ` for several driver-held factors: every grid
+    /// block is accessed **once** and serves all k sketches (the
+    /// ROADMAP amortization item — one generator run per implicit cell
+    /// however many factors ride the traversal). Bit-identical to k
+    /// separate [`DistBlockMatrix::matmul_small`] calls; the pass
+    /// ledger charges a single pass.
+    pub fn matmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        ws: &[Matrix],
+    ) -> Vec<DistRowMatrix> {
+        if ws.is_empty() {
+            return Vec::new();
+        }
+        for w in ws {
+            assert_eq!(self.cols, w.rows(), "matmul_small_batch: block cols vs W rows");
+        }
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<RowPartition> + Send + '_>> = self
+            .grid
+            .iter()
+            .enumerate()
+            .map(|(bi, row_blocks)| {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                Box::new(move || {
+                    let mut accs: Vec<Matrix> =
+                        ws.iter().map(|w| Matrix::zeros(r1 - r0, w.cols())).collect();
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        // one access to the stored block for all sketches
+                        let materialized;
+                        let dense_view: Option<&Matrix> = match b {
+                            Block::Implicit(i) => {
+                                materialized = i.materialize();
+                                Some(&materialized)
+                            }
+                            Block::Dense(m) => Some(m),
+                            Block::SparseCsr(_) => None,
+                        };
+                        for (acc, w) in accs.iter_mut().zip(ws) {
+                            let ws_blk = w.slice(cb[bj], cb[bj + 1], 0, w.cols());
+                            match (dense_view, b) {
+                                (Some(m), _) => acc.add_assign(&be.matmul(m, &ws_blk)),
+                                (None, Block::SparseCsr(c)) => {
+                                    acc.add_assign(&c.matmul(&ws_blk))
+                                }
+                                _ => unreachable!("dense view covers non-CSR blocks"),
+                            }
+                        }
+                    }
+                    accs.into_iter()
+                        .map(|data| RowPartition { row_start: r0, data })
+                        .collect()
+                }) as Box<dyn FnOnce() -> Vec<RowPartition> + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut out: Vec<Vec<RowPartition>> =
+            (0..ws.len()).map(|_| Vec::with_capacity(results.len())).collect();
+        for per_task in results {
+            for (k, part) in per_task.into_iter().enumerate() {
+                out[k].push(part);
+            }
+        }
+        out.into_iter()
+            .zip(ws)
+            .map(|(parts, w)| DistRowMatrix { parts, rows: self.rows, cols: w.cols() })
+            .collect()
+    }
+
+    /// Batched `Aᵀ · Qₖ` for several distributed tall factors: stage 1
+    /// accesses every grid block **once** (one generator run per
+    /// implicit cell) and emits one column-keyed partial per factor;
+    /// each factor's partials then reduce through the shared fan-in
+    /// chunked fold. Bit-identical to k separate
+    /// [`DistBlockMatrix::rmatmul_small`] calls; one ledger pass.
+    pub fn rmatmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        qs: &[&DistRowMatrix],
+    ) -> Vec<Matrix> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        for q in qs {
+            assert_eq!(self.rows, q.rows(), "rmatmul_small_batch: row count mismatch");
+        }
+        let cb = &self.col_bounds;
+        let rb = &self.row_bounds;
+        let nbc = cb.len() - 1;
+        let nbr = rb.len() - 1;
+        ctx.add_pass(nbr * nbc);
+
+        let mut tasks: Vec<Box<dyn FnOnce() -> Vec<Matrix> + Send + '_>> =
+            Vec::with_capacity(nbr * nbc);
+        for (bi, row_blocks) in self.grid.iter().enumerate() {
+            let r0 = rb[bi];
+            let r1 = rb[bi + 1];
+            for b in row_blocks.iter() {
+                tasks.push(Box::new(move || {
+                    let materialized;
+                    let dense_view: Option<&Matrix> = match b {
+                        Block::Implicit(i) => {
+                            materialized = i.materialize();
+                            Some(&materialized)
+                        }
+                        Block::Dense(m) => Some(m),
+                        Block::SparseCsr(_) => None,
+                    };
+                    qs.iter()
+                        .map(|q| {
+                            let qsl = q.rows_slice(r0, r1);
+                            match (dense_view, b) {
+                                (Some(m), _) => be.matmul_tn(m, &qsl),
+                                (None, Block::SparseCsr(c)) => c.matmul_tn(&qsl),
+                                _ => unreachable!("dense view covers non-CSR blocks"),
+                            }
+                        })
+                        .collect()
+                }) as Box<dyn FnOnce() -> Vec<Matrix> + Send + '_>);
+            }
+        }
+        let flat = ctx.stage(tasks);
+
+        // regroup: flat[bi·nbc + bj][k] ↦ per_k[k][bj][bi]
+        let mut per_k: Vec<Vec<Vec<Matrix>>> = (0..qs.len())
+            .map(|_| (0..nbc).map(|_| Vec::with_capacity(nbr)).collect())
+            .collect();
+        let mut it = flat.into_iter();
+        for _bi in 0..nbr {
+            for bj in 0..nbc {
+                let per_factor = it.next().expect("one partial set per grid block");
+                for (k, m) in per_factor.into_iter().enumerate() {
+                    per_k[k][bj].push(m);
+                }
+            }
+        }
+        per_k
+            .into_iter()
+            .zip(qs)
+            .map(|(by_col, q)| self.reduce_column_strips(ctx, by_col, q.cols()))
+            .collect()
     }
 }
 
@@ -1223,6 +1600,114 @@ mod tests {
         let z = d.rmatmul_small(&ctx, &NativeCompute, &q);
         let want = blas::matmul_tn(&a, &q_local);
         assert!(z.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_power_step_bit_identical_to_two_calls() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let w = randmat(51, 21, 4);
+        // single- and multi-block-column grids exercise both task plans
+        for cpb in [21usize, 8] {
+            let a = randmat(50, 33, 21);
+            let d = DistBlockMatrix::from_matrix(&a, 10, cpb);
+            let (y_f, z_f) = d.fused_power_step(&ctx, &be, &w);
+            let y_u = d.matmul_small(&ctx, &be, &w);
+            let z_u = d.rmatmul_small(&ctx, &be, &y_u);
+            assert_eq!(y_f.collect(&ctx).data(), y_u.collect(&ctx).data(), "cpb={cpb} Y");
+            assert_eq!(z_f.data(), z_u.data(), "cpb={cpb} Z");
+        }
+        // and the row layout
+        let a = randmat(52, 60, 7);
+        let w = randmat(53, 7, 3);
+        let d = DistRowMatrix::from_matrix(&a, 9);
+        let (y_f, z_f) = d.fused_power_step(&ctx, &be, &w);
+        let y_u = d.matmul_small(&ctx, &be, &w);
+        let z_u = DistRowMatrix::rmatmul_small(&d, &ctx, &be, &y_u);
+        assert_eq!(y_f.collect(&ctx).data(), y_u.collect(&ctx).data());
+        assert_eq!(z_f.data(), z_u.data());
+    }
+
+    #[test]
+    fn fused_normal_matvec_bit_identical_to_two_calls() {
+        let ctx = Context::new(4);
+        let a = randmat(54, 33, 21);
+        let x: Vec<f64> = (0..21).map(|i| (i as f64).sin()).collect();
+        let d = DistBlockMatrix::from_matrix(&a, 10, 8);
+        let (y_f, z_f) = d.fused_normal_matvec(&ctx, &x);
+        let y_u = d.matvec(&ctx, &x);
+        let z_u = d.rmatvec(&ctx, &y_u);
+        assert_eq!(y_f, y_u);
+        assert_eq!(z_f, z_u);
+        let r = DistRowMatrix::from_matrix(&a, 9);
+        let x33: Vec<f64> = (0..21).map(|i| (i as f64).cos()).collect();
+        let (ry_f, rz_f) = r.fused_normal_matvec(&ctx, &x33);
+        let ry_u = r.matvec(&ctx, &x33);
+        let rz_u = r.rmatvec(&ctx, &ry_u);
+        assert_eq!(ry_f, ry_u);
+        assert_eq!(rz_f, rz_u);
+    }
+
+    #[test]
+    fn batched_products_bit_identical_to_separate_calls() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = sparseish(55, 40, 26);
+        for d in [
+            DistBlockMatrix::from_matrix(&a, 12, 9),
+            DistBlockMatrix::from_matrix_csr(&a, 12, 9),
+        ] {
+            let ws = [randmat(56, 26, 3), randmat(57, 26, 5)];
+            let batch = d.matmul_small_batch(&ctx, &be, &ws);
+            assert_eq!(batch.len(), 2);
+            for (got, w) in batch.iter().zip(&ws) {
+                let want = d.matmul_small(&ctx, &be, w);
+                assert_eq!(got.collect(&ctx).data(), want.collect(&ctx).data());
+            }
+            let q0 = DistRowMatrix::from_matrix(&randmat(58, 40, 2), 11);
+            let q1 = DistRowMatrix::from_matrix(&randmat(59, 40, 4), 7);
+            let rbatch = d.rmatmul_small_batch(&ctx, &be, &[&q0, &q1]);
+            assert_eq!(rbatch[0].data(), d.rmatmul_small(&ctx, &be, &q0).data());
+            assert_eq!(rbatch[1].data(), d.rmatmul_small(&ctx, &be, &q1).data());
+        }
+        // empty batches are a no-op
+        assert!(DistBlockMatrix::from_matrix(&a, 12, 9)
+            .matmul_small_batch(&ctx, &be, &[])
+            .is_empty());
+    }
+
+    #[test]
+    fn pass_ledger_charges_block_traversals() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(60, 33, 21);
+        let d = DistBlockMatrix::from_matrix(&a, 10, 8); // 4×3 grid
+        let w = randmat(61, 21, 4);
+
+        ctx.reset_metrics();
+        let y = d.matmul_small(&ctx, &be, &w);
+        let _ = d.rmatmul_small(&ctx, &be, &y);
+        let two_call = ctx.take_metrics();
+        assert_eq!(two_call.a_passes, 2);
+        assert_eq!(two_call.blocks_materialized, 2 * 12);
+
+        ctx.reset_metrics();
+        let _ = d.fused_power_step(&ctx, &be, &w);
+        let fused = ctx.take_metrics();
+        assert_eq!(fused.a_passes, 1);
+        assert_eq!(fused.blocks_materialized, 12);
+
+        // a batch of three sketches is still one traversal
+        ctx.reset_metrics();
+        let ws = [randmat(62, 21, 2), randmat(63, 21, 3), randmat(64, 21, 4)];
+        let _ = d.matmul_small_batch(&ctx, &be, &ws);
+        assert_eq!(ctx.take_metrics().a_passes, 1);
+
+        // row-slab intermediates never charge the ledger
+        ctx.reset_metrics();
+        let _ = y.gram(&ctx, &be);
+        let _ = y.matmul_small(&ctx, &be, &randmat(65, 4, 2));
+        assert_eq!(ctx.take_metrics().a_passes, 0);
     }
 
     #[test]

@@ -106,6 +106,18 @@ pub struct Metrics {
     /// Bytes moved between executors (tree merges, broadcast-down
     /// transforms) or to the driver.
     pub shuffle_bytes: usize,
+    /// Full traversals of block-stored operators (`DistBlockMatrix`
+    /// products, gathers and densifications): every operator-wide
+    /// product charges one pass, however many sketches it serves.
+    /// Row-slab intermediates (sketches, factors) never charge — the
+    /// ledger counts reads of the *data at rest*, the quantity the
+    /// paper's single-pass discussion (and HMT §6.3) minimizes.
+    pub a_passes: usize,
+    /// Grid cells whose stored representation was accessed (dense cells
+    /// streamed, CSR cells swept, implicit cells *generated*) summed
+    /// over all passes. On the implicit backend this is exactly the
+    /// number of generator runs, so a fused power step halves it.
+    pub blocks_materialized: usize,
 }
 
 impl Metrics {
@@ -145,6 +157,14 @@ impl Metrics {
         self.cpu_time += secs;
         self.wall_clock += secs;
         self.driver_elapsed += secs;
+    }
+
+    /// Record one full traversal of a block-stored operator that
+    /// accessed `blocks` grid cells — the pass ledger (see `a_passes` /
+    /// `blocks_materialized`).
+    pub(crate) fn add_pass(&mut self, blocks: usize) {
+        self.a_passes += 1;
+        self.blocks_materialized += blocks;
     }
 
     /// Record a driver-bound gather (e.g. `collect`): the whole cluster
@@ -269,6 +289,19 @@ mod tests {
         // (the test environment does not set the DSVD_* comms vars)
         assert!(FREE_COMMS.is_free());
         assert_eq!(FREE_COMMS.task_cost(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn pass_ledger_accumulates() {
+        let mut m = Metrics::default();
+        m.add_pass(12);
+        m.add_pass(12);
+        m.add_pass(1);
+        assert_eq!(m.a_passes, 3);
+        assert_eq!(m.blocks_materialized, 25);
+        // the ledger is storage bookkeeping, not time or bytes
+        assert_eq!(m.cpu_time, 0.0);
+        assert_eq!(m.shuffle_bytes, 0);
     }
 
     #[test]

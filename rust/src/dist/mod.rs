@@ -39,5 +39,5 @@ pub use matrix::{
     Block, BlockStorage, DistBlockMatrix, DistRowMatrix, ImplicitBlock, RowPartition,
 };
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
-pub use op::DistOp;
+pub use op::{DistOp, UnfusedOp};
 pub use tsqr::{tsqr, tsqr_lineage, tsqr_r, tsqr_with_stats, TsqrFactors, TsqrMemStats};

@@ -55,6 +55,113 @@ pub trait DistOp {
 
     /// `z = Aᵀ·y` (length n).
     fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64>;
+
+    /// One fused power-iteration step: `(Y, Z) = (A·W, Aᵀ·(A·W))`.
+    ///
+    /// The power iteration of the paper's Algorithm 5 touches A twice
+    /// per round — `A·W` then `Aᵀ·Q` — and on a cluster those two
+    /// traversals dominate the cost (HMT §6.3: passes over the data are
+    /// the currency). This method serves both products from a **single
+    /// traversal of the stored operator**: per grid block, the local
+    /// Y-panel and the local Bᵀ-partial are computed inside the same
+    /// task, so implicit (generator-backed) cells materialize once per
+    /// round instead of twice and dense cells stream once.
+    ///
+    /// The default implementation is the two-call fallback, so every
+    /// operator supports the contract; storage-aware layouts override
+    /// it with a genuinely single-pass plan that must stay
+    /// bit-identical to this fallback (pinned by
+    /// `tests/op_equivalence.rs`). The pass ledger
+    /// ([`super::Metrics::a_passes`]) makes the difference measurable:
+    /// one pass fused vs two unfused.
+    fn fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        let y = self.matmul_small(ctx, be, w);
+        let z = self.rmatmul_small(ctx, be, &y);
+        (y, z)
+    }
+
+    /// Fused normal-operator mat-vec: `(y, z) = (A·x, Aᵀ·(A·x))` from
+    /// one traversal — the product pair the Krylov/Arnoldi baseline
+    /// issues per basis vector. Default: two-call fallback; overrides
+    /// must be bit-identical to it.
+    fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let y = self.matvec(ctx, x);
+        let z = self.rmatvec(ctx, &y);
+        (y, z)
+    }
+
+    /// Batched `A · Wₖ` over several driver-held factors, serving every
+    /// sketch from one traversal of the stored operator (one generator
+    /// run per implicit cell however many factors ride along). Default:
+    /// one pass per factor; overrides must be bit-identical to that.
+    fn matmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        ws: &[Matrix],
+    ) -> Vec<DistRowMatrix> {
+        ws.iter().map(|w| self.matmul_small(ctx, be, w)).collect()
+    }
+
+    /// Batched `Aᵀ · Qₖ` over several distributed tall factors from one
+    /// traversal. Default: one pass per factor; overrides must be
+    /// bit-identical to that.
+    fn rmatmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        qs: &[&DistRowMatrix],
+    ) -> Vec<Matrix> {
+        qs.iter().map(|q| self.rmatmul_small(ctx, be, q)).collect()
+    }
+}
+
+/// Ablation wrapper that pins an operator to the trait's **unfused**
+/// default paths: every fused/batched call decomposes into the
+/// classic per-product traversals, whatever the inner operator
+/// implements. This is the baseline of the fused-vs-unfused
+/// comparisons (`benches/tables_fused.rs`, `scripts/verify.sh`'s pass
+/// gate, `tests/op_equivalence.rs`): identical numerics by contract,
+/// strictly more `a_passes` / `blocks_materialized` on every storage
+/// backend.
+pub struct UnfusedOp<'a>(pub &'a dyn DistOp);
+
+impl<'a> DistOp for UnfusedOp<'a> {
+    fn rows(&self) -> usize {
+        self.0.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.0.cols()
+    }
+
+    fn shuffle_bytes(&self) -> usize {
+        self.0.shuffle_bytes()
+    }
+
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        self.0.matmul_small(ctx, be, w)
+    }
+
+    fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        self.0.rmatmul_small(ctx, be, q)
+    }
+
+    fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        self.0.matvec(ctx, x)
+    }
+
+    fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        self.0.rmatvec(ctx, y)
+    }
+    // fused_power_step / fused_normal_matvec / *_batch deliberately NOT
+    // forwarded: the trait defaults decompose them into the unfused
+    // per-product traversals above.
 }
 
 impl DistOp for DistBlockMatrix {
@@ -84,6 +191,37 @@ impl DistOp for DistBlockMatrix {
 
     fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
         DistBlockMatrix::rmatvec(self, ctx, y)
+    }
+
+    fn fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        DistBlockMatrix::fused_power_step(self, ctx, be, w)
+    }
+
+    fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        DistBlockMatrix::fused_normal_matvec(self, ctx, x)
+    }
+
+    fn matmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        ws: &[Matrix],
+    ) -> Vec<DistRowMatrix> {
+        DistBlockMatrix::matmul_small_batch(self, ctx, be, ws)
+    }
+
+    fn rmatmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        qs: &[&DistRowMatrix],
+    ) -> Vec<Matrix> {
+        DistBlockMatrix::rmatmul_small_batch(self, ctx, be, qs)
     }
 }
 
@@ -116,6 +254,22 @@ impl DistOp for DistRowMatrix {
     fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
         DistRowMatrix::rmatvec(self, ctx, y)
     }
+
+    fn fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        DistRowMatrix::fused_power_step(self, ctx, be, w)
+    }
+
+    fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        DistRowMatrix::fused_normal_matvec(self, ctx, x)
+    }
+    // the batched defaults are already optimal for resident row slabs:
+    // every partition is dense in memory, so k traversals read the same
+    // bytes k times whether or not they share a stage
 }
 
 #[cfg(test)]
@@ -169,6 +323,44 @@ mod tests {
             for (g, w) in op.rmatvec(&ctx, &y).iter().zip(blas::gemv_t(&a, &y)) {
                 assert!((g - w).abs() < 1e-12);
             }
+        }
+    }
+
+    /// Through the trait object, the fused step and the batch paths
+    /// must reproduce the unfused products exactly — and the
+    /// `UnfusedOp` wrapper must undo the overrides pass-for-pass.
+    #[test]
+    fn fused_contract_through_the_trait_object() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(75, 40, 11);
+        let w = randmat(76, 11, 3);
+        let block = DistBlockMatrix::from_matrix(&a, 9, 4);
+        let op: &dyn DistOp = &block;
+        let unfused = UnfusedOp(op);
+
+        ctx.reset_metrics();
+        let (yf, zf) = op.fused_power_step(&ctx, &be, &w);
+        let fused_passes = ctx.take_metrics().a_passes;
+        ctx.reset_metrics();
+        let (yu, zu) = unfused.fused_power_step(&ctx, &be, &w);
+        let unfused_passes = ctx.take_metrics().a_passes;
+        assert_eq!(yf.collect(&ctx).data(), yu.collect(&ctx).data());
+        assert_eq!(zf.data(), zu.data());
+        assert_eq!(fused_passes, 1);
+        assert_eq!(unfused_passes, 2);
+
+        let x: Vec<f64> = (0..11).map(|i| (i as f64).sin()).collect();
+        let (ax_f, z_f) = op.fused_normal_matvec(&ctx, &x);
+        let (ax_u, z_u) = unfused.fused_normal_matvec(&ctx, &x);
+        assert_eq!(ax_f, ax_u);
+        assert_eq!(z_f, z_u);
+
+        let ws = [randmat(77, 11, 2), randmat(78, 11, 4)];
+        let batch = op.matmul_small_batch(&ctx, &be, &ws);
+        for (got, w) in batch.iter().zip(&ws) {
+            let want = op.matmul_small(&ctx, &be, w);
+            assert_eq!(got.collect(&ctx).data(), want.collect(&ctx).data());
         }
     }
 

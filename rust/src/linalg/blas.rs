@@ -208,6 +208,97 @@ fn matmul_tn_range(a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
     c
 }
 
+/// Fused power-step kernel: `(Y, Bᵀ) = (A·W, Aᵀ·(A·W))` streaming A's
+/// rows **once** — each row of A is read from memory one time, used to
+/// emit its row of Y and immediately folded into the Bᵀ accumulator.
+/// This is the per-block kernel of `DistOp::fused_power_step`: the
+/// unfused path streams A twice (`matmul`, then `matmul_tn`), which for
+/// generator-backed blocks means materializing every block twice.
+///
+/// Bit-compatibility contract (pinned by
+/// `fused_kernel_bit_identical_to_two_calls`): the result is
+/// bit-identical to `(matmul(a, w), matmul_tn(a, &y))` for finite
+/// inputs — the Y rows accumulate over k ascending exactly like
+/// `gemm_acc`, and the Bᵀ side reuses `matmul_tn`'s row-chunk ranges
+/// and chunk-order merge, so the summation trees coincide.
+pub fn matmul_and_tn(a: &Matrix, w: &Matrix) -> (Matrix, Matrix) {
+    assert_eq!(a.cols(), w.rows(), "matmul_and_tn shape mismatch");
+    let (m, k) = a.shape();
+    let l = w.cols();
+    // No `pool_can_help` gate here, deliberately: `matmul_tn` chunks
+    // unconditionally whenever the shape qualifies (running inline
+    // inside workers), and the Bᵀ merge order must reproduce exactly
+    // that chunking to stay bit-identical — a serial fast path would
+    // change the summation tree for ≥ 2·PAR_CHUNK_ROWS blocks.
+    match par_row_ranges(m, k.max(l)) {
+        Some(ranges) => {
+            let kernel = |r0: usize, r1: usize| {
+                let (y, bt) = matmul_and_tn_range(a, w, r0, r1);
+                (r0, y, bt)
+            };
+            let kernel = &kernel;
+            let tasks: Vec<Box<dyn FnOnce() -> (usize, Matrix, Matrix) + Send + '_>> = ranges
+                .into_iter()
+                .map(|(r0, r1)| {
+                    Box::new(move || kernel(r0, r1))
+                        as Box<dyn FnOnce() -> (usize, Matrix, Matrix) + Send + '_>
+                })
+                .collect();
+            let mut y = Matrix::zeros(m, l);
+            let mut parts = crate::pool::global().run_scoped(tasks).into_iter();
+            let ((r0, y0, mut bt), _) = parts.next().expect("at least one row chunk");
+            for i in 0..y0.rows() {
+                y.row_mut(r0 + i).copy_from_slice(y0.row(i));
+            }
+            for ((r0, yp, btp), _) in parts {
+                for i in 0..yp.rows() {
+                    y.row_mut(r0 + i).copy_from_slice(yp.row(i));
+                }
+                bt.add_assign(&btp);
+            }
+            (y, bt)
+        }
+        None => matmul_and_tn_range(a, w, 0, m),
+    }
+}
+
+/// Serial fused kernel over rows `[r0, r1)`: Y rows in `gemm_acc`'s
+/// k-ascending order, Bᵀ in `matmul_tn_range`'s (i, p)-ascending order.
+fn matmul_and_tn_range(a: &Matrix, w: &Matrix, r0: usize, r1: usize) -> (Matrix, Matrix) {
+    let k = a.cols();
+    let l = w.cols();
+    let mut y = Matrix::zeros(r1 - r0, l);
+    let mut bt = Matrix::zeros(k, l);
+    let adata = a.data();
+    let wdata = w.data();
+    for i in r0..r1 {
+        let arow = &adata[i * k..(i + 1) * k];
+        let yrow = y.row_mut(i - r0);
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let wrow = &wdata[p * l..(p + 1) * l];
+            for (yj, &wj) in yrow.iter_mut().zip(wrow) {
+                *yj += aip * wj;
+            }
+        }
+        // the row of Y is final: fold it into Bᵀ before the next row of
+        // A evicts it — this is the single-stream property
+        let btdata = bt.data_mut();
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut btdata[p * l..(p + 1) * l];
+            for (cj, &yj) in crow.iter_mut().zip(&*yrow) {
+                *cj += aip * yj;
+            }
+        }
+    }
+    (y, bt)
+}
+
 /// C = A · Bᵀ.
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
@@ -407,6 +498,12 @@ impl Csr {
 
     /// C = A·B (A sparse, B dense): per nonzero `a[i,p]`, one dense
     /// axpy of B's row p into C's row i.
+    ///
+    /// §Perf: the output row is sliced once per row and every axpy is an
+    /// index-free `iter_mut().zip(..)` walk, so the inner loop carries
+    /// no bounds checks (micro-pinned in `benches/micro_kernels.rs`;
+    /// the indexed form it replaced re-checked `crow[j]`/`brow[j]`
+    /// against the slice bounds every element).
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows(), "csr matmul shape mismatch");
         let n = b.cols();
@@ -419,8 +516,8 @@ impl Csr {
                 let v = self.vals[k];
                 let p = self.col_idx[k];
                 let brow = &bdata[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] += v * brow[j];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += v * bj;
                 }
             }
         }
@@ -430,6 +527,11 @@ impl Csr {
     /// C = Aᵀ·B (A sparse, B dense, both `self.rows` tall): per nonzero
     /// `a[i,p]`, one dense axpy of B's row i into C's row p — the same
     /// outer-product-of-rows order as the dense `matmul_tn`.
+    ///
+    /// §Perf: the input row is sliced once per row and the axpy is the
+    /// index-free zip form (see [`Csr::matmul`]); the output row must
+    /// still be re-sliced per nonzero because its position `p` is
+    /// data-dependent.
     pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.rows, b.rows(), "csr matmul_tn shape mismatch");
         let n = b.cols();
@@ -442,12 +544,47 @@ impl Csr {
                 let v = self.vals[k];
                 let p = self.col_idx[k];
                 let crow = &mut cdata[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] += v * brow[j];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += v * bj;
                 }
             }
         }
         c
+    }
+
+    /// Fused power-step kernel, sparse face: `(Y, Bᵀ) = (A·W, Aᵀ·(A·W))`
+    /// in one sweep over the nonzeros — each row's nonzeros are walked
+    /// twice while hot (once emitting the row of Y, once folding that
+    /// finished row into Bᵀ), so the CSR arrays stream from memory a
+    /// single time. Accumulation orders match [`Csr::matmul`] and
+    /// [`Csr::matmul_tn`] exactly, so the result is bit-identical to
+    /// the two separate calls.
+    pub fn matmul_and_tn(&self, w: &Matrix) -> (Matrix, Matrix) {
+        assert_eq!(self.cols, w.rows(), "csr matmul_and_tn shape mismatch");
+        let l = w.cols();
+        let mut y = Matrix::zeros(self.rows, l);
+        let mut bt = Matrix::zeros(self.cols, l);
+        let wdata = w.data();
+        for i in 0..self.rows {
+            let yrow = y.row_mut(i);
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.vals[k];
+                let wrow = &wdata[self.col_idx[k] * l..(self.col_idx[k] + 1) * l];
+                for (yj, &wj) in yrow.iter_mut().zip(wrow) {
+                    *yj += v * wj;
+                }
+            }
+            let btdata = bt.data_mut();
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.vals[k];
+                let p = self.col_idx[k];
+                let crow = &mut btdata[p * l..(p + 1) * l];
+                for (cj, &yj) in crow.iter_mut().zip(&*yrow) {
+                    *cj += v * yj;
+                }
+            }
+        }
+        (y, bt)
     }
 
     /// y = A·x.
@@ -712,6 +849,44 @@ mod tests {
             for (got, want) in c.gemv_t(&y).iter().zip(gemv_t(&a, &y)) {
                 assert!((got - want).abs() < 1e-13);
             }
+        }
+    }
+
+    #[test]
+    fn fused_kernel_bit_identical_to_two_calls() {
+        // small (serial path) and tall (chunked matmul_tn path) shapes,
+        // dense and with exact zeros (the kernels' skip branches)
+        let mut rng = Rng::seed(79);
+        let tall = 2 * super::PAR_CHUNK_ROWS + 201;
+        for &(m, k, l, density) in
+            &[(23usize, 11usize, 4usize, 1.0f64), (64, 17, 5, 0.3), (tall, 160, 24, 1.0)]
+        {
+            let a = randsparse(&mut rng, m, k, density);
+            let w = randmat(&mut rng, k, l);
+            let (y, bt) = matmul_and_tn(&a, &w);
+            let y_ref = matmul(&a, &w);
+            let bt_ref = matmul_tn(&a, &y_ref);
+            assert_eq!(y.data(), y_ref.data(), "({m},{k},{l}) Y must be bit-identical");
+            assert_eq!(bt.data(), bt_ref.data(), "({m},{k},{l}) Bᵀ must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn csr_fused_kernel_bit_identical_to_two_calls() {
+        let mut rng = Rng::seed(80);
+        for &(m, n, density) in &[(13usize, 7usize, 0.15f64), (40, 25, 0.05), (8, 30, 0.5)] {
+            let a = randsparse(&mut rng, m, n, density);
+            let c = Csr::from_dense(&a);
+            let w = randmat(&mut rng, n, 6);
+            let (y, bt) = c.matmul_and_tn(&w);
+            let y_ref = c.matmul(&w);
+            let bt_ref = c.matmul_tn(&y_ref);
+            assert_eq!(y.data(), y_ref.data(), "({m},{n}) Y");
+            assert_eq!(bt.data(), bt_ref.data(), "({m},{n}) Bᵀ");
+            // and the sparse fused kernel agrees with the dense one
+            let (yd, btd) = matmul_and_tn(&a, &w);
+            assert!(y.sub(&yd).max_abs() < 1e-13);
+            assert!(bt.sub(&btd).max_abs() < 1e-13);
         }
     }
 

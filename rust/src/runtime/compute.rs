@@ -18,6 +18,17 @@ pub trait Compute: Sync {
     /// Transposed product `Aᵀ·B` (both operands share their row count).
     fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix;
 
+    /// Fused power step `(A·W, Aᵀ·(A·W))`: both products of one
+    /// subspace-iteration round from a single traversal of A. Backends
+    /// without a fused kernel fall back to the two separate products;
+    /// overrides must stay bit-identical to that fallback (the dense
+    /// `DistOp` equivalence guarantees rest on it).
+    fn matmul_and_tn(&self, a: &Matrix, w: &Matrix) -> (Matrix, Matrix) {
+        let y = self.matmul(a, w);
+        let bt = self.matmul_tn(a, &y);
+        (y, bt)
+    }
+
     /// Human-readable backend name (for logs/metrics).
     fn name(&self) -> &'static str;
 }
@@ -37,6 +48,10 @@ impl Compute for NativeCompute {
 
     fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
         blas::matmul_tn(a, b)
+    }
+
+    fn matmul_and_tn(&self, a: &Matrix, w: &Matrix) -> (Matrix, Matrix) {
+        blas::matmul_and_tn(a, w)
     }
 
     fn name(&self) -> &'static str {
@@ -62,5 +77,13 @@ mod tests {
         let t = be.matmul_tn(&a, &a);
         assert!(g.sub(&t).max_abs() < 1e-12);
         assert_eq!(be.name(), "native");
+
+        // the fused override must match the trait's two-call fallback
+        // to the bit (the dense equivalence guarantees rest on this)
+        let (y, bt) = be.matmul_and_tn(&a, &b);
+        let y_ref = be.matmul(&a, &b);
+        let bt_ref = be.matmul_tn(&a, &y_ref);
+        assert_eq!(y.data(), y_ref.data());
+        assert_eq!(bt.data(), bt_ref.data());
     }
 }

@@ -10,9 +10,10 @@
 //! for instruction).
 
 use dsvd::algs::{algorithm7, algorithm8, DistSvd, LowRankOpts};
-use dsvd::dist::{BlockStorage, Context, DistBlockMatrix};
+use dsvd::dist::{BlockStorage, Context, DistBlockMatrix, UnfusedOp};
 use dsvd::gen::{SparseRandTestMatrix, SparseSpectrumTestMatrix};
 use dsvd::linalg::{blas, Matrix};
+use dsvd::rng::Rng;
 use dsvd::runtime::compute::NativeCompute;
 use dsvd::verify::{max_entry_gram_minus_identity, max_entry_gram_minus_identity_local};
 
@@ -132,6 +133,81 @@ fn dense_backend_bit_identical_across_worker_counts() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn fused_step_matches_two_call_per_backend() {
+    // the operator-level contract of the fused layer: for the dense
+    // backend `fused_power_step` is bit-identical to the
+    // `matmul_small` + `rmatmul_small` pair for every worker count;
+    // CSR and implicit agree to ≤ 1e-12 (in practice they too are
+    // bit-identical — same kernels, same fold order)
+    let g = SparseRandTestMatrix::new(96, 64, 0.25, 0xF0D);
+    let mut rng = Rng::seed(0xF0D1);
+    let w = Matrix::from_fn(64, 5, |_, _| rng.gauss());
+    let mut dense_snapshot: Option<(Vec<f64>, Vec<f64>)> = None;
+    for workers in [1usize, 2, 4] {
+        let ctx = Context::new(8).with_workers(workers);
+        let be = NativeCompute;
+        for (name, storage) in BACKENDS {
+            let a = g.generate(&ctx, 32, 32, storage);
+            let (y_f, z_f) = a.fused_power_step(&ctx, &be, &w);
+            let y_u = a.matmul_small(&ctx, &be, &w);
+            let z_u = a.rmatmul_small(&ctx, &be, &y_u);
+            let y_f = y_f.collect(&ctx);
+            let y_u = y_u.collect(&ctx);
+            if storage == BlockStorage::Dense {
+                assert_eq!(y_f.data(), y_u.data(), "dense Y, workers={workers}");
+                assert_eq!(z_f.data(), z_u.data(), "dense Z, workers={workers}");
+                match &dense_snapshot {
+                    None => dense_snapshot = Some((y_f.data().to_vec(), z_f.data().to_vec())),
+                    Some((y_ref, z_ref)) => {
+                        assert_eq!(y_f.data(), &y_ref[..], "dense Y drifted, workers={workers}");
+                        assert_eq!(z_f.data(), &z_ref[..], "dense Z drifted, workers={workers}");
+                    }
+                }
+            } else {
+                let dy = y_f.sub(&y_u).max_abs();
+                let dz = z_f.sub(&z_u).max_abs();
+                assert!(dy <= 1e-12, "{name} Y differs by {dy}, workers={workers}");
+                assert!(dz <= 1e-12, "{name} Z differs by {dz}, workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_loop_halves_implicit_passes() {
+    // the measurable heart of the fused layer: a full Algorithm 7 run
+    // reads the implicit operator q+2 times fused vs 2q+2 unfused —
+    // i.e. one generator run per cell per power round instead of two —
+    // at bit-identical results (the fused step IS the two-call pair,
+    // fused)
+    let g = SparseRandTestMatrix::new(96, 64, 0.25, 0xAB5);
+    let ctx = Context::new(8);
+    let a = g.generate(&ctx, 32, 32, BlockStorage::Implicit);
+    let (nbr, nbc) = a.num_blocks();
+    let cells = nbr * nbc;
+    let iters = 2usize;
+
+    ctx.reset_metrics();
+    let fused = algorithm7(&ctx, &NativeCompute, &a, &opts(8, iters));
+    let mf = ctx.take_metrics();
+
+    ctx.reset_metrics();
+    let unfused = algorithm7(&ctx, &NativeCompute, &UnfusedOp(&a), &opts(8, iters));
+    let mu = ctx.take_metrics();
+
+    assert_eq!(mf.a_passes, iters + 2, "fused passes");
+    assert_eq!(mu.a_passes, 2 * iters + 2, "unfused passes");
+    assert_eq!(mf.blocks_materialized, (iters + 2) * cells, "fused generator runs");
+    assert_eq!(mu.blocks_materialized, (2 * iters + 2) * cells, "unfused generator runs");
+
+    assert_eq!(fused.s, unfused.s, "Σ must not change under fusion");
+    assert_eq!(fused.v.data(), unfused.v.data(), "V must not change under fusion");
+    for (pf, pu) in fused.u.parts.iter().zip(&unfused.u.parts) {
+        assert_eq!(pf.data.data(), pu.data.data(), "U must not change under fusion");
     }
 }
 

@@ -71,18 +71,40 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_sparse.json" \
     cargo bench --bench tables_sparse
 
+# the fused-vs-unfused comparison is a GATE, not just a record: the
+# bench panics (failing this script) unless the fused implicit-backend
+# pass count is strictly lower than the unfused one, dense fused
+# results are bit-identical to the two-call plan for workers 1/2/4,
+# and a k-sketch batch costs one traversal
+echo "== scaled bench + pass gate: tables_fused (DSVD_BENCH_SCALE=${SCALE})"
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_fused.json" \
+    cargo bench --bench tables_fused
+
 # every expected perf record must exist and be non-empty
-for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json; do
+for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
+         BENCH_fused.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
     fi
 done
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json"
+# and the fused record must carry both sides of the comparison
+for mode in fused unfused; do
+    if ! grep -q "\"mode\": \"$mode\"" BENCH_fused.json; then
+        echo "!! BENCH_fused.json lacks the $mode rows of the comparison" >&2
+        exit 1
+    fi
+done
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json"
 
 if [ "${FULL:-0}" = "1" ]; then
-    echo "== worker-scaling acceptance (tsqr_r, 65536x64, 1 vs 4 workers)"
-    cargo test --release --test dist_parallel -- --ignored --nocapture tsqr_worker_scaling_speedup
+    # the worker-scaling check gates in the debug tier-1 run already
+    # (>1.3x, self-skipping below 4 cores); FULL reruns it in release
+    # where kernel time dominates scheduling noise hardest
+    echo "== worker-scaling acceptance, release build (tsqr_r, 16384x64, 1 vs 4 workers)"
+    cargo test --release --test dist_parallel -- --nocapture tsqr_worker_scaling_speedup
 fi
 
 echo "verify OK"
