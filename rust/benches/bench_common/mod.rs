@@ -51,14 +51,16 @@ pub fn ensure_sweep_comms(cfg: &mut RunConfig) {
 }
 
 /// The metrics fields shared by every bench JSON record (the pass
-/// ledger rides along so fused-vs-unfused comparisons are reproducible
-/// from the records alone).
+/// ledger and the out-of-core spill ledger ride along so
+/// fused-vs-unfused and resident-vs-spilled comparisons are
+/// reproducible from the records alone).
 #[allow(dead_code)]
 pub fn metrics_json(m: &Metrics) -> String {
     format!(
         "\"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
          \"comms_time\": {:e}, \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}, \
-         \"a_passes\": {}, \"blocks_materialized\": {}",
+         \"a_passes\": {}, \"blocks_materialized\": {}, \"spill_bytes_read\": {}, \
+         \"spill_bytes_written\": {}, \"peak_resident_bytes\": {}",
         m.cpu_time,
         m.wall_clock,
         m.driver_elapsed,
@@ -67,7 +69,10 @@ pub fn metrics_json(m: &Metrics) -> String {
         m.tasks,
         m.shuffle_bytes,
         m.a_passes,
-        m.blocks_materialized
+        m.blocks_materialized,
+        m.spill_bytes_read,
+        m.spill_bytes_written,
+        m.peak_resident_bytes
     )
 }
 

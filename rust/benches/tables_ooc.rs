@@ -1,0 +1,224 @@
+//! Out-of-core storage sweep: the same Algorithm 7 run over the same
+//! operator with the cache budget swept from "everything resident"
+//! down to "one block resident", against the fully resident dense grid
+//! as the reference. Hard gates, not just records:
+//!
+//!   * every spilled run MUST be bit-identical to the resident dense
+//!     run, whatever the budget (eviction changes which bytes are
+//!     re-read, never a number);
+//!   * `peak_resident_bytes` MUST stay within the budget on every
+//!     sub-budget run;
+//!   * spilling MUST add zero `a_passes` over the resident plan — the
+//!     out-of-core tier pays spill-file re-reads (`spill_bytes_read`,
+//!     recorded per run), never extra operator traversals;
+//!   * the one-block run MUST re-read strictly more payload bytes than
+//!     the all-resident run (the sweep really swept).
+//!
+//! Any violated gate panics, which fails `scripts/verify.sh`. Writes
+//! `BENCH_ooc.json`; each spilled record carries `budget_blocks`,
+//! `budget_bytes`, the spill ledger, and the computed
+//! `a_passes_match_resident` flag the verify gate greps.
+//!
+//!     cargo bench --bench tables_ooc
+
+mod bench_common;
+
+use bench_common::{bench_config, metrics_json, write_bench_json};
+use dsvd::algs::{algorithm7, DistSvd, LowRankOpts};
+use dsvd::dist::{BlockStorage, Context, DistOp, Metrics, SpillStore};
+use dsvd::gen::SparseRandTestMatrix;
+use dsvd::harness::sci;
+use dsvd::runtime::compute::Compute;
+use dsvd::verify::{max_entry_gram_minus_identity, spectral_norm, ResidualOp};
+
+type Snapshot = (Vec<f64>, Vec<f64>, Vec<Vec<f64>>);
+
+fn snapshot(out: &DistSvd) -> Snapshot {
+    (
+        out.s.clone(),
+        out.v.data().to_vec(),
+        out.u.parts.iter().map(|p| p.data.data().to_vec()).collect(),
+    )
+}
+
+struct RunOut {
+    out: DistSvd,
+    metrics: Metrics,
+    recon: f64,
+    u_orth: f64,
+}
+
+fn run_alg7(
+    ctx: &Context,
+    be: &dyn Compute,
+    op: &dyn DistOp,
+    opts: &LowRankOpts,
+    power_iters: usize,
+    seed: u64,
+) -> RunOut {
+    ctx.reset_metrics();
+    let out = algorithm7(ctx, be, op, opts);
+    let metrics = ctx.take_metrics();
+    let resid = ResidualOp { a: &op, u: &out.u, s: &out.s, v: &out.v };
+    let recon = spectral_norm(ctx, &resid, power_iters, seed ^ 0xE44);
+    let u_orth = max_entry_gram_minus_identity(ctx, be, &out.u);
+    RunOut { out, metrics, recon, u_orth }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    mode: &str,
+    budget_blocks: &str,
+    budget_bytes: usize,
+    m: usize,
+    n: usize,
+    l: usize,
+    iters: usize,
+    passes_match: bool,
+    r: &RunOut,
+) -> String {
+    format!(
+        "\"table\": \"OOC\", \"mode\": \"{}\", \"budget_blocks\": \"{}\", \
+         \"budget_bytes\": {}, \"m\": {}, \"n\": {}, \"l\": {}, \"iters\": {}, \
+         \"algorithm\": \"7\", \"a_passes_match_resident\": {}, {}, \
+         \"recon\": {:e}, \"u_orth\": {:e}",
+        mode,
+        budget_blocks,
+        budget_bytes,
+        m,
+        n,
+        l,
+        iters,
+        passes_match,
+        metrics_json(&r.metrics),
+        r.recon,
+        r.u_orth,
+    )
+}
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let scale = (scale / 8).max(1);
+    let n = 256usize;
+    let m = (32768 / scale).max(2 * n);
+    let (l, iters) = (10usize, 2usize);
+    let (rpb, cpb) = (256usize, 128usize);
+    let block_bytes = 8 * rpb * cpb;
+    let density = 0.05f64;
+
+    let mut cfg = cfg_base.clone();
+    cfg.executors = 18;
+    cfg.rows_per_part = rpb;
+    cfg.cols_per_part = cpb;
+    let mut opts = LowRankOpts::new(l, iters);
+    opts.rows_per_part = rpb;
+    opts.ts = cfg.ts_opts();
+
+    println!("================================================================");
+    println!(
+        "Out-of-core sweep — Algorithm 7, m={m} n={n} l={l} i={iters}, blocks {rpb}x{cpb} \
+         ({} B payload each), backend={}",
+        block_bytes,
+        be.name()
+    );
+    println!("----------------------------------------------------------------");
+
+    let g = SparseRandTestMatrix::new(m, n, density, cfg.seed ^ 0x00C);
+    let ctx = cfg.context();
+    let dense = g.generate(&ctx, rpb, cpb, BlockStorage::Dense);
+    let (nbr, nbc) = dense.num_blocks();
+
+    let resident = run_alg7(&ctx, be.as_ref(), &dense, &opts, cfg.power_iters, cfg.seed);
+    let reference = snapshot(&resident.out);
+
+    let mut records = Vec::new();
+    records.push(record(
+        "resident",
+        "inf",
+        0,
+        m,
+        n,
+        l,
+        iters,
+        true,
+        &resident,
+    ));
+
+    println!(
+        "{:>10}  {:>8}  {:>12}  {:>12}  {:>14}  {:>10}",
+        "budget", "A passes", "spill read", "peak bytes", "wall-clock", "recon"
+    );
+    println!(
+        "{:>10}  {:>8}  {:>12}  {:>12}  {:>14}  {:>10}",
+        "resident",
+        resident.metrics.a_passes,
+        "-",
+        "-",
+        sci(resident.metrics.wall_clock),
+        sci(resident.recon)
+    );
+
+    let budgets: [(&str, usize); 3] =
+        [("inf", usize::MAX), ("2", 2 * block_bytes), ("1", block_bytes)];
+    let mut read_by_label: Vec<(String, usize)> = Vec::new();
+    for (label, budget) in budgets {
+        let store = SpillStore::with_budget(budget).expect("spill store");
+        let spilled = dense.spill(&ctx, &store).expect("spill to disk");
+        let run = run_alg7(&ctx, be.as_ref(), &spilled, &opts, cfg.power_iters, cfg.seed);
+        println!(
+            "{:>10}  {:>8}  {:>12}  {:>12}  {:>14}  {:>10}",
+            label,
+            run.metrics.a_passes,
+            run.metrics.spill_bytes_read,
+            run.metrics.peak_resident_bytes,
+            sci(run.metrics.wall_clock),
+            sci(run.recon)
+        );
+
+        // ---- gates ------------------------------------------------
+        assert_eq!(
+            snapshot(&run.out),
+            reference,
+            "GATE: spilled run at budget {label} must be bit-identical to resident"
+        );
+        assert!(
+            run.metrics.peak_resident_bytes <= budget,
+            "GATE: budget {label}: resident {} exceeds budget {budget}",
+            run.metrics.peak_resident_bytes
+        );
+        let passes_match = run.metrics.a_passes == resident.metrics.a_passes;
+        assert!(
+            passes_match,
+            "GATE: budget {label}: spilling changed a_passes ({} vs {})",
+            run.metrics.a_passes, resident.metrics.a_passes
+        );
+        read_by_label.push((label.to_string(), run.metrics.spill_bytes_read));
+
+        let budget_bytes = if budget == usize::MAX { 0 } else { budget };
+        records.push(record(
+            "spilled", label, budget_bytes, m, n, l, iters, passes_match, &run,
+        ));
+    }
+
+    let read_inf = read_by_label
+        .iter()
+        .find(|(l, _)| l == "inf")
+        .map(|(_, r)| *r)
+        .expect("inf record");
+    let read_one = read_by_label
+        .iter()
+        .find(|(l, _)| l == "1")
+        .map(|(_, r)| *r)
+        .expect("1-block record");
+    assert!(
+        read_one > read_inf,
+        "GATE: the one-block budget must re-read more payload than all-resident \
+         ({read_one} vs {read_inf})"
+    );
+    println!(
+        "gate OK: {nbr}x{nbc} grid bit-identical at every budget, zero extra passes, \
+         re-reads {read_inf} B (resident cache) -> {read_one} B (one-block cache)"
+    );
+
+    write_bench_json("BENCH_ooc.json", &records);
+}

@@ -14,6 +14,6 @@ pub use lowrank::{
     algorithm5, algorithm6, algorithm7, algorithm8, LowRankOpts, TsMethod,
 };
 pub use tall_skinny::{
-    algorithm1, algorithm1_explicit_q, algorithm2, algorithm3, algorithm4, preexisting, DistSvd,
-    TallSkinnyOpts,
+    algorithm1, algorithm1_csr, algorithm1_explicit_q, algorithm2, algorithm2_csr, algorithm3,
+    algorithm3_csr, algorithm4, algorithm4_csr, preexisting, DistSvd, TallInput, TallSkinnyOpts,
 };

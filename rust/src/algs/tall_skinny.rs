@@ -13,20 +13,86 @@
 //! `A`), `Σ` and `V` on the driver, and singular values descending.
 //!
 //! These algorithms genuinely need the row data (SRFT mixing, TSQR,
-//! Gram), so they keep taking a concrete [`DistRowMatrix`] — but they
-//! sit *under* the `DistOp` operator layer: Algorithm 5's power
-//! iteration reaches any storage backend through `&dyn DistOp` and
-//! hands the resulting dense tall factors here for orthonormalization,
-//! and the power-method verification path accepts every `DistOp` via
-//! [`crate::verify::LinOp`].
+//! Gram), so they take their input through the small [`TallInput`]
+//! trait — implemented by the dense [`DistRowMatrix`] slabs (the
+//! `algorithm1`–`algorithm4` entry points, signature-compatible with
+//! every earlier PR) and by the sparse [`DistRowCsrMatrix`] slabs (the
+//! `algorithm1_csr`–`algorithm4_csr` entry points, so the pipeline
+//! runs end-to-end on sparse tall-skinny inputs). They still sit
+//! *under* the `DistOp` operator layer: Algorithm 5's power iteration
+//! reaches any storage backend through `&dyn DistOp` (including the
+//! sparse row slabs) and hands the resulting dense tall factors here
+//! for orthonormalization, and the power-method verification path
+//! accepts every `DistOp` via [`crate::verify::LinOp`].
 
-use crate::dist::{tsqr, tsqr_r, Context, DistRowMatrix, TsqrFactors};
+use crate::dist::{tsqr, tsqr_r, Context, DistRowCsrMatrix, DistRowMatrix, TsqrFactors};
 use crate::linalg::qr::{significant_diagonal, significant_prefix, tri_inverse_upper};
 use crate::linalg::svd::svd;
 use crate::linalg::{blas, Matrix};
 use crate::rng::Rng;
 use crate::runtime::compute::Compute;
 use crate::srft::Srft;
+
+/// The row-data access Algorithms 1–4 (and the MLlib baseline) need
+/// from their input — implemented by the dense row slabs and by the
+/// sparse CSR row slabs, so the tall-skinny pipeline runs end-to-end on
+/// sparse inputs: the SRFT mix (the only step of Algorithms 1–2 that
+/// touches A) densifies per slab inside the mixing tasks, and the Gram
+/// engines of Algorithms 3–4 read sparse slabs through the
+/// nnz-proportional [`crate::linalg::Csr::gram`] kernel. Everything
+/// downstream of these three products operates on dense derived
+/// factors, storage-agnostically.
+pub trait TallInput {
+    /// Global row count (m).
+    fn input_rows(&self) -> usize;
+    /// Global column count (n).
+    fn input_cols(&self) -> usize;
+    /// `Ω` applied to every row — the mixed matrix is dense whatever
+    /// the input storage.
+    fn mixed(&self, ctx: &Context, om: &Srft) -> DistRowMatrix;
+    /// `AᵀA` on the driver.
+    fn gram(&self, ctx: &Context, be: &dyn Compute) -> Matrix;
+    /// `A·W` for a driver-held `W`.
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix;
+}
+
+impl TallInput for DistRowMatrix {
+    fn input_rows(&self) -> usize {
+        self.rows()
+    }
+    fn input_cols(&self) -> usize {
+        self.cols()
+    }
+    fn mixed(&self, ctx: &Context, om: &Srft) -> DistRowMatrix {
+        let mut mixed = self.clone();
+        mixed.map_rows(ctx, |row| om.forward(row));
+        mixed
+    }
+    fn gram(&self, ctx: &Context, be: &dyn Compute) -> Matrix {
+        DistRowMatrix::gram(self, ctx, be)
+    }
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        DistRowMatrix::matmul_small(self, ctx, be, w)
+    }
+}
+
+impl TallInput for DistRowCsrMatrix {
+    fn input_rows(&self) -> usize {
+        self.rows()
+    }
+    fn input_cols(&self) -> usize {
+        self.cols()
+    }
+    fn mixed(&self, ctx: &Context, om: &Srft) -> DistRowMatrix {
+        self.map_rows_dense(ctx, |row| om.forward(row))
+    }
+    fn gram(&self, ctx: &Context, _be: &dyn Compute) -> Matrix {
+        DistRowCsrMatrix::gram(self, ctx)
+    }
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        DistRowCsrMatrix::matmul_small(self, ctx, be, w)
+    }
+}
 
 /// Thin SVD of a distributed tall-skinny matrix.
 pub struct DistSvd {
@@ -80,13 +146,33 @@ pub fn algorithm1(
     a: &DistRowMatrix,
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
-    let n = a.cols();
+    algorithm1_impl(ctx, be, a, opts)
+}
+
+/// Algorithm 1 over **sparse** CSR row slabs: the mix densifies per
+/// slab inside its task (the only step that touches A), everything
+/// after runs on the dense mixed matrix.
+pub fn algorithm1_csr(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowCsrMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    algorithm1_impl(ctx, be, a, opts)
+}
+
+fn algorithm1_impl<A: TallInput + ?Sized>(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &A,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    let n = a.input_cols();
     let mut rng = Rng::seed(opts.seed);
     let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
 
-    // step 1 — mix every row (map stage)
-    let mut mixed = a.clone();
-    mixed.map_rows(ctx, |row| om.forward(row));
+    // step 1 — mix every row (map stage; dense output, any storage in)
+    let mixed = a.mixed(ctx, &om);
 
     // steps 2–3 — R-only TSQR, rank decision, implicit Q
     let r = tsqr_r(ctx, &mixed);
@@ -122,13 +208,34 @@ pub fn algorithm2(
     a: &DistRowMatrix,
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
-    let n = a.cols();
+    algorithm2_impl(ctx, be, a, opts)
+}
+
+/// Algorithm 2 over **sparse** CSR row slabs — the headline
+/// double-orthonormalization pipeline end-to-end on a sparse input:
+/// A is read exactly once (the per-slab densifying mix), and both
+/// TSQR passes run on dense derived factors.
+pub fn algorithm2_csr(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowCsrMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    algorithm2_impl(ctx, be, a, opts)
+}
+
+fn algorithm2_impl<A: TallInput + ?Sized>(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &A,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    let n = a.input_cols();
     let mut rng = Rng::seed(opts.seed);
     let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
 
     // step 1 — mix
-    let mut mixed = a.clone();
-    mixed.map_rows(ctx, |row| om.forward(row));
+    let mixed = a.mixed(ctx, &om);
 
     // steps 2–3 — first R-only TSQR + discard + implicit Q̃
     let r1 = tsqr_r(ctx, &mixed);
@@ -193,6 +300,27 @@ pub fn algorithm3(
     a: &DistRowMatrix,
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
+    algorithm3_impl(ctx, be, a, opts)
+}
+
+/// Algorithm 3 over **sparse** CSR row slabs: the Gram accumulates
+/// through the nnz-proportional sparse kernel, `Ũ = A·V` through the
+/// sparse SpMM — A is never densified anywhere.
+pub fn algorithm3_csr(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowCsrMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    algorithm3_impl(ctx, be, a, opts)
+}
+
+fn algorithm3_impl<A: TallInput + ?Sized>(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &A,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
     // step 1 — Gram via tree aggregation
     let b = a.gram(ctx, be);
 
@@ -230,6 +358,27 @@ pub fn algorithm4(
     ctx: &Context,
     be: &dyn Compute,
     a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    algorithm4_impl(ctx, be, a, opts)
+}
+
+/// Algorithm 4 over **sparse** CSR row slabs: the first Gram round
+/// reads A through the sparse kernels; the second round (and
+/// everything after) operates on the dense normalized factor.
+pub fn algorithm4_csr(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowCsrMatrix,
+    opts: &TallSkinnyOpts,
+) -> DistSvd {
+    algorithm4_impl(ctx, be, a, opts)
+}
+
+fn algorithm4_impl<A: TallInput + ?Sized>(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &A,
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
     let cutoff = opts.working_precision.sqrt();
@@ -529,6 +678,79 @@ mod tests {
             let e = errors(&ctx, &a, &out);
             assert!(e.recon < 1e-7 * reference.s[0], "{name} recon {}", e.recon);
         }
+    }
+
+    /// Algorithms 1–4 end-to-end on sparse CSR row slabs. The
+    /// SRFT-engine pair is bit-identical to the dense run with the same
+    /// partitioning (the mix densifies the identical bits the slabs
+    /// compressed, and nothing after touches A); the Gram engines read
+    /// A through different (sparse) kernels, so they agree to roundoff.
+    #[test]
+    fn csr_entry_points_match_dense_runs() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let mut rng = crate::rng::Rng::seed(777);
+        let a_local = Matrix::from_fn(200, 16, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gauss()
+            } else {
+                0.0
+            }
+        });
+        let dense = DistRowMatrix::from_matrix(&a_local, 32);
+        let sparse = crate::dist::DistRowCsrMatrix::from_matrix(&a_local, 32);
+        let opts = TallSkinnyOpts::default();
+
+        for (name, d, s) in [
+            (
+                "alg1",
+                algorithm1(&ctx, &be, &dense, &opts),
+                algorithm1_csr(&ctx, &be, &sparse, &opts),
+            ),
+            (
+                "alg2",
+                algorithm2(&ctx, &be, &dense, &opts),
+                algorithm2_csr(&ctx, &be, &sparse, &opts),
+            ),
+        ] {
+            assert_eq!(d.s, s.s, "{name}: Σ must be bit-identical");
+            assert_eq!(d.v.data(), s.v.data(), "{name}: V must be bit-identical");
+            for (pd, ps) in d.u.parts.iter().zip(&s.u.parts) {
+                assert_eq!(pd.data.data(), ps.data.data(), "{name}: U must be bit-identical");
+            }
+        }
+
+        let reference = svd(&a_local);
+        for (name, out) in [
+            ("alg3", algorithm3_csr(&ctx, &be, &sparse, &opts)),
+            ("alg4", algorithm4_csr(&ctx, &be, &sparse, &opts)),
+        ] {
+            assert_eq!(out.s.len(), 16, "{name} rank");
+            for j in 0..16 {
+                assert!(
+                    (out.s[j] - reference.s[j]).abs() / reference.s[j] < 1e-7,
+                    "{name} σ_{j}: {} vs {}",
+                    out.s[j],
+                    reference.s[j]
+                );
+            }
+            let e = errors_sparse(&ctx, &sparse, &out);
+            assert!(e.recon < 1e-6 * reference.s[0], "{name} recon {}", e.recon);
+            assert!(e.v_orth < 1e-12, "{name} v_orth {}", e.v_orth);
+        }
+        // alg4's double orthonormalization: machine-precision U even
+        // from the sparse kernels
+        let out4 = algorithm4_csr(&ctx, &be, &sparse, &opts);
+        let e4 = errors_sparse(&ctx, &sparse, &out4);
+        assert!(e4.u_orth < 1e-12, "alg4 u_orth {}", e4.u_orth);
+    }
+
+    fn errors_sparse(
+        ctx: &Context,
+        a: &crate::dist::DistRowCsrMatrix,
+        out: &DistSvd,
+    ) -> ErrorReport {
+        error_report(ctx, &NativeCompute, a, &out.u, &out.s, &out.v)
     }
 
     #[test]

@@ -170,6 +170,13 @@ impl Context {
     pub(crate) fn add_pass(&self, blocks: usize) {
         self.metrics.lock().unwrap().add_pass(blocks);
     }
+
+    /// Record one spill-ledger delta (out-of-core reads/writes over one
+    /// bracketed product plus the cache's resident high-water mark —
+    /// see [`Metrics`]).
+    pub(crate) fn add_spill(&self, read: usize, written: usize, peak_resident: usize) {
+        self.metrics.lock().unwrap().add_spill(read, written, peak_resident);
+    }
 }
 
 /// Split a vector into owned chunks of (at most) `size` items,

@@ -8,11 +8,16 @@
 //!   [`Block`] cells for the wide / low-rank workloads (problem {2}),
 //!   where no full row set fits one executor. Each cell picks its own
 //!   storage backend — [`Block::Dense`] (the original layout),
-//!   [`Block::SparseCsr`] (per-block CSR, work and shuffle ∝ nnz), or
+//!   [`Block::SparseCsr`] (per-block CSR, work and shuffle ∝ nnz),
 //!   [`Block::Implicit`] (a seeded generator materialized only inside
-//!   the task that consumes it) — and the low-rank algorithms reach all
-//!   of them through the [`super::DistOp`] operator trait, never the
-//!   concrete storage.
+//!   the task that consumes it), or [`Block::Spilled`] (out-of-core: the
+//!   payload lives at rest on disk and pages back through a
+//!   memory-budgeted LRU cache, see [`super::spill`]) — and the
+//!   low-rank algorithms reach all of them through the
+//!   [`super::DistOp`] operator trait, never the concrete storage.
+//! * [`DistRowCsrMatrix`](super::row_csr::DistRowCsrMatrix) (in
+//!   `row_csr.rs`) is the tall **sparse** analogue of `DistRowMatrix`:
+//!   CSR row slabs for sparse tall-skinny inputs.
 //!
 //! Every operation that touches partition data runs as a
 //! [`Context::stage`] fan-out over the worker pool, with FLOP-dominant
@@ -30,6 +35,17 @@ use crate::runtime::compute::Compute;
 use std::sync::Arc;
 
 use super::context::{chunk_owned, tree_aggregate, Context};
+use super::spill::{SpillError, SpillStore, SpilledBlock};
+
+/// Unwrap a spill-tier result on the infallible API surface. Dense,
+/// CSR, and implicit cells can never fail, so this is a no-op for them;
+/// a spilled grid whose files have been tampered with panics here —
+/// callers that need the typed error use the `try_*` variants instead.
+fn expect_spill<T>(r: Result<T, SpillError>) -> T {
+    r.unwrap_or_else(|e| {
+        panic!("spilled block I/O failed (use the try_* APIs for fallible access): {e}")
+    })
+}
 
 /// One contiguous row slab of a [`DistRowMatrix`].
 #[derive(Clone, Debug)]
@@ -40,8 +56,12 @@ pub struct RowPartition {
     pub data: Matrix,
 }
 
-/// `[r0, r1)` bounds for `rows` rows cut into `per` -row slabs.
-fn row_ranges(rows: usize, per: usize) -> Vec<(usize, usize)> {
+/// `[r0, r1)` bounds for `rows` rows cut into `per`-row slabs (shared
+/// with the sparse row layout in `row_csr.rs`, so the dense and CSR
+/// slabs of the same `rows_per_part` always tile identically — the
+/// bit-identity contract between `algorithm1/2` and their `_csr`
+/// twins depends on it).
+pub(crate) fn row_ranges(rows: usize, per: usize) -> Vec<(usize, usize)> {
     let per = per.max(1);
     let mut out = Vec::with_capacity(rows.div_ceil(per));
     let mut r0 = 0;
@@ -425,14 +445,50 @@ impl DistRowMatrix {
     /// traversal of the row slabs instead of the `matvec` + `rmatvec`
     /// pair; bit-identical to the two separate calls.
     pub fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_apply(ctx, x, None)
+    }
+
+    /// Fused residual-normal apply `(y, z) = (A·x − c, Aᵀ·(A·x − c))`
+    /// from one slab traversal — the row-layout face of
+    /// [`super::DistOp::fused_normal_matvec_sub`] (the spectral-norm
+    /// verifier's per-iteration step). Bit-identical to the unfused
+    /// `matvec` → elementwise subtract → `rmatvec` plan.
+    pub fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_apply(ctx, x, Some(c))
+    }
+
+    /// Shared single-traversal plan behind the two fused normal-apply
+    /// faces: per slab, `y = A_slab·x` (minus the matching correction
+    /// chunk when given), then the slab's `Aᵀy` partial, aggregated
+    /// like [`DistRowMatrix::rmatvec`]'s.
+    fn fused_normal_apply(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        sub: Option<&[f64]>,
+    ) -> (Vec<f64>, Vec<f64>) {
         assert_eq!(x.len(), self.cols, "fused_normal_matvec length mismatch");
+        if let Some(c) = sub {
+            assert_eq!(c.len(), self.rows, "fused_normal_matvec_sub correction length");
+        }
         type FusedVecOut = (usize, Vec<f64>, Vec<f64>);
         let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
             .parts
             .iter()
             .map(|p| {
                 Box::new(move || {
-                    let y = blas::gemv(&p.data, x);
+                    let mut y = blas::gemv(&p.data, x);
+                    if let Some(c) = sub {
+                        let chunk = &c[p.row_start..p.row_start + p.data.rows()];
+                        for (yi, ci) in y.iter_mut().zip(chunk) {
+                            *yi -= ci;
+                        }
+                    }
                     let z = blas::gemv_t(&p.data, &y);
                     (p.row_start, y, z)
                 }) as Box<dyn FnOnce() -> FusedVecOut + Send + '_>
@@ -518,6 +574,77 @@ pub enum Block {
     SparseCsr(Csr),
     /// Seeded generator closure; materialized per consuming task.
     Implicit(ImplicitBlock),
+    /// Out-of-core cell: the dense payload lives at rest in a
+    /// [`SpillStore`] file and is paged back through the store's
+    /// budgeted LRU cache inside whichever task consumes it — the
+    /// spill-to-disk tier of the storage enum. I/O and integrity
+    /// faults surface as [`SpillError`] through the `try_*` methods.
+    Spilled(SpilledBlock),
+}
+
+/// A per-task view of one stored cell, obtained **once** per consuming
+/// task however many products ride on it: dense and CSR cells borrow
+/// their storage, implicit cells run their generator, spilled cells
+/// page their payload in through the store's cache. The product methods
+/// dispatch to exactly the kernels the corresponding [`Block`] methods
+/// used, so routing through a view changes no bits.
+pub(crate) enum CellView<'a> {
+    Dense(&'a Matrix),
+    Csr(&'a Csr),
+    Owned(Matrix),
+    Paged(Arc<Matrix>),
+}
+
+impl CellView<'_> {
+    /// `cell · W`.
+    pub(crate) fn matmul(&self, be: &dyn Compute, w: &Matrix) -> Matrix {
+        match self {
+            CellView::Dense(m) => be.matmul(m, w),
+            CellView::Owned(m) => be.matmul(m, w),
+            CellView::Paged(m) => be.matmul(m, w),
+            CellView::Csr(c) => c.matmul(w),
+        }
+    }
+
+    /// `cellᵀ · Q`.
+    pub(crate) fn matmul_tn(&self, be: &dyn Compute, q: &Matrix) -> Matrix {
+        match self {
+            CellView::Dense(m) => be.matmul_tn(m, q),
+            CellView::Owned(m) => be.matmul_tn(m, q),
+            CellView::Paged(m) => be.matmul_tn(m, q),
+            CellView::Csr(c) => c.matmul_tn(q),
+        }
+    }
+
+    /// Fused `(cell·W, cellᵀ·(cell·W))` — single stream over the view.
+    pub(crate) fn matmul_and_tn(&self, be: &dyn Compute, w: &Matrix) -> (Matrix, Matrix) {
+        match self {
+            CellView::Dense(m) => be.matmul_and_tn(m, w),
+            CellView::Owned(m) => be.matmul_and_tn(m, w),
+            CellView::Paged(m) => be.matmul_and_tn(m, w),
+            CellView::Csr(c) => c.matmul_and_tn(w),
+        }
+    }
+
+    /// `cell · x`.
+    pub(crate) fn gemv(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            CellView::Dense(m) => blas::gemv(m, x),
+            CellView::Owned(m) => blas::gemv(m, x),
+            CellView::Paged(m) => blas::gemv(m, x),
+            CellView::Csr(c) => c.gemv(x),
+        }
+    }
+
+    /// `cellᵀ · y`.
+    pub(crate) fn gemv_t(&self, y: &[f64]) -> Vec<f64> {
+        match self {
+            CellView::Dense(m) => blas::gemv_t(m, y),
+            CellView::Owned(m) => blas::gemv_t(m, y),
+            CellView::Paged(m) => blas::gemv_t(m, y),
+            CellView::Csr(c) => c.gemv_t(y),
+        }
+    }
 }
 
 impl Block {
@@ -526,6 +653,7 @@ impl Block {
             Block::Dense(m) => m.rows(),
             Block::SparseCsr(c) => c.rows(),
             Block::Implicit(i) => i.r1 - i.r0,
+            Block::Spilled(s) => s.rows(),
         }
     }
 
@@ -534,79 +662,109 @@ impl Block {
             Block::Dense(m) => m.cols(),
             Block::SparseCsr(c) => c.cols(),
             Block::Implicit(i) => i.c1 - i.c0,
+            Block::Spilled(s) => s.cols(),
         }
     }
 
     /// Bytes this block's stored representation actually moves when it
     /// crosses the simulated network — the [`super::DistOp`]
     /// `shuffle_bytes` hint, per cell: dense ships every entry, CSR
-    /// ships nnz-proportional arrays, implicit ships its descriptor.
+    /// ships nnz-proportional arrays, implicit ships its descriptor,
+    /// spilled ships its dense payload (the bytes at rest on disk).
     pub fn storage_bytes(&self) -> usize {
         match self {
             Block::Dense(m) => 8 * m.rows() * m.cols(),
             Block::SparseCsr(c) => c.storage_bytes(),
             Block::Implicit(_) => IMPLICIT_DESCRIPTOR_BYTES,
+            Block::Spilled(s) => 8 * s.rows() * s.cols(),
         }
+    }
+
+    /// Acquire this cell's [`CellView`] — the one storage access a
+    /// consuming task performs, shared by every product that task
+    /// computes. Only spilled cells can fail.
+    pub(crate) fn try_view(&self) -> Result<CellView<'_>, SpillError> {
+        Ok(match self {
+            Block::Dense(m) => CellView::Dense(m),
+            Block::SparseCsr(c) => CellView::Csr(c),
+            Block::Implicit(i) => CellView::Owned(i.materialize()),
+            Block::Spilled(s) => CellView::Paged(s.fetch()?),
+        })
     }
 
     /// Densify (a copy for dense blocks, decompression for CSR, one
-    /// generator run for implicit).
-    pub fn to_dense(&self) -> Matrix {
-        match self {
+    /// generator run for implicit, one page-in for spilled).
+    pub fn try_to_dense(&self) -> Result<Matrix, SpillError> {
+        Ok(match self {
             Block::Dense(m) => m.clone(),
             Block::SparseCsr(c) => c.to_dense(),
             Block::Implicit(i) => i.materialize(),
-        }
+            Block::Spilled(s) => s.fetch()?.as_ref().clone(),
+        })
+    }
+
+    /// Infallible [`Block::try_to_dense`] (panics on spill faults).
+    pub fn to_dense(&self) -> Matrix {
+        expect_spill(self.try_to_dense())
     }
 
     /// `block · W` for a dense W.
+    pub fn try_matmul(&self, be: &dyn Compute, w: &Matrix) -> Result<Matrix, SpillError> {
+        Ok(self.try_view()?.matmul(be, w))
+    }
+
+    /// Infallible [`Block::try_matmul`] (panics on spill faults).
     pub fn matmul(&self, be: &dyn Compute, w: &Matrix) -> Matrix {
-        match self {
-            Block::Dense(m) => be.matmul(m, w),
-            Block::SparseCsr(c) => c.matmul(w),
-            Block::Implicit(i) => be.matmul(&i.materialize(), w),
-        }
+        expect_spill(self.try_matmul(be, w))
     }
 
     /// `blockᵀ · Q` for a dense Q with the block's row count.
+    pub fn try_matmul_tn(&self, be: &dyn Compute, q: &Matrix) -> Result<Matrix, SpillError> {
+        Ok(self.try_view()?.matmul_tn(be, q))
+    }
+
+    /// Infallible [`Block::try_matmul_tn`] (panics on spill faults).
     pub fn matmul_tn(&self, be: &dyn Compute, q: &Matrix) -> Matrix {
-        match self {
-            Block::Dense(m) => be.matmul_tn(m, q),
-            Block::SparseCsr(c) => c.matmul_tn(q),
-            Block::Implicit(i) => be.matmul_tn(&i.materialize(), q),
-        }
+        expect_spill(self.try_matmul_tn(be, q))
     }
 
     /// Fused power step `(block·W, blockᵀ·(block·W))` touching the
     /// stored block exactly once: dense cells stream their rows a
     /// single time (`Compute::matmul_and_tn`), CSR cells sweep their
     /// nonzeros once, implicit cells run their generator **once**
-    /// instead of once per product. Bit-identical to
-    /// `(matmul, matmul_tn)` on the same block.
+    /// instead of once per product, spilled cells page in once.
+    /// Bit-identical to `(matmul, matmul_tn)` on the same block.
+    pub fn try_matmul_and_tn(
+        &self,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> Result<(Matrix, Matrix), SpillError> {
+        Ok(self.try_view()?.matmul_and_tn(be, w))
+    }
+
+    /// Infallible [`Block::try_matmul_and_tn`] (panics on spill faults).
     pub fn matmul_and_tn(&self, be: &dyn Compute, w: &Matrix) -> (Matrix, Matrix) {
-        match self {
-            Block::Dense(m) => be.matmul_and_tn(m, w),
-            Block::SparseCsr(c) => c.matmul_and_tn(w),
-            Block::Implicit(i) => be.matmul_and_tn(&i.materialize(), w),
-        }
+        expect_spill(self.try_matmul_and_tn(be, w))
     }
 
     /// `block · x`.
+    pub fn try_gemv(&self, x: &[f64]) -> Result<Vec<f64>, SpillError> {
+        Ok(self.try_view()?.gemv(x))
+    }
+
+    /// Infallible [`Block::try_gemv`] (panics on spill faults).
     pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
-        match self {
-            Block::Dense(m) => blas::gemv(m, x),
-            Block::SparseCsr(c) => c.gemv(x),
-            Block::Implicit(i) => blas::gemv(&i.materialize(), x),
-        }
+        expect_spill(self.try_gemv(x))
     }
 
     /// `blockᵀ · y`.
+    pub fn try_gemv_t(&self, y: &[f64]) -> Result<Vec<f64>, SpillError> {
+        Ok(self.try_view()?.gemv_t(y))
+    }
+
+    /// Infallible [`Block::try_gemv_t`] (panics on spill faults).
     pub fn gemv_t(&self, y: &[f64]) -> Vec<f64> {
-        match self {
-            Block::Dense(m) => blas::gemv_t(m, y),
-            Block::SparseCsr(c) => c.gemv_t(y),
-            Block::Implicit(i) => blas::gemv_t(&i.materialize(), y),
-        }
+        expect_spill(self.try_gemv_t(y))
     }
 }
 
@@ -802,26 +960,184 @@ impl DistBlockMatrix {
         DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows: a.rows(), cols: a.cols() }
     }
 
-    /// Densify every cell (one task per block) — the reference matrix
-    /// the op-equivalence suite compares every backend against.
-    pub fn densify(&self, ctx: &Context) -> DistBlockMatrix {
-        let (nbr0, nbc0) = self.num_blocks();
-        ctx.add_pass(nbr0 * nbc0);
-        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+    /// The spill store behind this grid's [`Block::Spilled`] cells, if
+    /// any (`None` for fully resident grids). A grid is expected to
+    /// spill through a single store — [`DistBlockMatrix::spill`] always
+    /// produces that shape — and the ledger meters the first store
+    /// found; cells hand-assembled across several stores would be
+    /// metered for one of them only.
+    pub fn spill_store(&self) -> Option<&Arc<SpillStore>> {
+        self.grid.iter().flat_map(|r| r.iter()).find_map(|b| match b {
+            Block::Spilled(s) => Some(s.store()),
+            _ => None,
+        })
+    }
+
+    /// Bracket one operator-wide product with the spill ledger: the
+    /// store counters' delta over the call — payload bytes paged in or
+    /// written, plus the cache's resident high-water mark **within this
+    /// product** (a fresh peak window per bracket, so an earlier
+    /// product's peak never leaks into a later metrics window) — is
+    /// charged to the metrics window
+    /// ([`super::Metrics::spill_bytes_read`] and friends). A no-op for
+    /// grids without spilled cells.
+    fn with_spill_ledger<T>(&self, ctx: &Context, f: impl FnOnce() -> T) -> T {
+        let store = self.spill_store().cloned();
+        let before = store.as_ref().map(|s| {
+            s.begin_peak_window();
+            s.stats()
+        });
+        let out = f();
+        if let (Some(s), Some(b)) = (&store, before) {
+            let a = s.stats();
+            ctx.add_spill(
+                a.bytes_read - b.bytes_read,
+                a.bytes_written - b.bytes_written,
+                s.peak_in_window(),
+            );
+        }
+        out
+    }
+
+    /// Spill every cell to `store`, returning the out-of-core grid: one
+    /// task per block densifies the source cell (a copy for dense,
+    /// decompression for CSR, a generator run for implicit, a page-in
+    /// for already-spilled) and writes its payload to a private file;
+    /// the new grid holds only descriptors, so its resident footprint
+    /// is governed by the store's cache budget from here on. Reads the
+    /// source representation once (one ledger pass) and charges the
+    /// written payload bytes to the spill ledger.
+    pub fn spill(
+        &self,
+        ctx: &Context,
+        store: &Arc<SpillStore>,
+    ) -> Result<DistBlockMatrix, SpillError> {
+        let (nbr, nbc) = self.num_blocks();
+        store.begin_peak_window();
+        let before = store.stats();
+        // re-spilling an already-spilled grid pages the payloads in
+        // from the SOURCE store — meter that store too (unless it is
+        // the same one, which the target snapshot already covers)
+        let src = self.spill_store().filter(|s| !Arc::ptr_eq(s, store)).cloned();
+        let src_before = src.as_ref().map(|s| {
+            s.begin_peak_window();
+            s.stats()
+        });
+        ctx.add_pass(nbr * nbc);
+        let tasks: Vec<Box<dyn FnOnce() -> Result<Block, SpillError> + Send + '_>> = self
             .grid
             .iter()
             .flat_map(|row_blocks| row_blocks.iter())
-            .map(|b| Box::new(move || b.to_dense()) as Box<dyn FnOnce() -> Matrix + Send + '_>)
+            .map(|b| {
+                let store = Arc::clone(store);
+                Box::new(move || Ok(Block::Spilled(store.put(&b.try_to_dense()?)?)))
+                    as Box<dyn FnOnce() -> Result<Block, SpillError> + Send + '_>
+            })
             .collect();
-        let flat = ctx.stage(tasks).into_iter().map(Block::Dense).collect();
-        let (nbr, nbc) = self.num_blocks();
-        DistBlockMatrix {
+        let flat: Result<Vec<Block>, SpillError> = ctx.stage(tasks).into_iter().collect();
+        let flat = flat?;
+        let after = store.stats();
+        ctx.add_spill(
+            after.bytes_read - before.bytes_read,
+            after.bytes_written - before.bytes_written,
+            store.peak_in_window(),
+        );
+        if let (Some(s), Some(b)) = (&src, src_before) {
+            let a = s.stats();
+            ctx.add_spill(
+                a.bytes_read - b.bytes_read,
+                a.bytes_written - b.bytes_written,
+                s.peak_in_window(),
+            );
+        }
+        Ok(DistBlockMatrix {
             grid: grid_from_flat(flat, nbr, nbc),
             row_bounds: self.row_bounds.clone(),
             col_bounds: self.col_bounds.clone(),
             rows: self.rows,
             cols: self.cols,
-        }
+        })
+    }
+
+    /// Partition a driver-held matrix straight into a spilled grid —
+    /// the convenience constructor of the out-of-core tests/benches.
+    pub fn from_matrix_spilled(
+        a: &Matrix,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        ctx: &Context,
+        store: &Arc<SpillStore>,
+    ) -> Result<DistBlockMatrix, SpillError> {
+        Self::from_matrix(a, rows_per_block, cols_per_block).spill(ctx, store)
+    }
+
+    /// Materialize the grid as dense row slabs, one per block-row —
+    /// the bridge from any block storage (including spilled) to the
+    /// row-slab layout the tall-skinny Algorithms 1–4 consume. Each
+    /// task holds only its own block-row resident (`O(slab)`), so an
+    /// out-of-core grid streams through the cache budget.
+    pub fn try_to_rows(&self, ctx: &Context) -> Result<DistRowMatrix, SpillError> {
+        self.with_spill_ledger(ctx, || {
+            let rb = &self.row_bounds;
+            let cb = &self.col_bounds;
+            ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+            type Out = Result<RowPartition, SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        let mut data = Matrix::zeros(r1 - r0, self.cols);
+                        for (bj, b) in row_blocks.iter().enumerate() {
+                            let d = b.try_to_dense()?;
+                            for i in 0..d.rows() {
+                                data.row_mut(i)[cb[bj]..cb[bj + 1]].copy_from_slice(d.row(i));
+                            }
+                        }
+                        Ok(RowPartition { row_start: r0, data })
+                    }) as Box<dyn FnOnce() -> Out + Send + '_>
+                })
+                .collect();
+            let parts: Result<Vec<RowPartition>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+            Ok(DistRowMatrix::from_parts(parts?, self.rows, self.cols))
+        })
+    }
+
+    /// Densify every cell (one task per block) — the reference matrix
+    /// the op-equivalence suite compares every backend against.
+    pub fn densify(&self, ctx: &Context) -> DistBlockMatrix {
+        expect_spill(self.try_densify(ctx))
+    }
+
+    /// Fallible [`DistBlockMatrix::densify`] — spill faults surface as
+    /// [`SpillError`] instead of panicking.
+    pub fn try_densify(&self, ctx: &Context) -> Result<DistBlockMatrix, SpillError> {
+        self.with_spill_ledger(ctx, || {
+            let (nbr, nbc) = self.num_blocks();
+            ctx.add_pass(nbr * nbc);
+            let tasks: Vec<Box<dyn FnOnce() -> Result<Matrix, SpillError> + Send + '_>> = self
+                .grid
+                .iter()
+                .flat_map(|row_blocks| row_blocks.iter())
+                .map(|b| {
+                    Box::new(move || b.try_to_dense())
+                        as Box<dyn FnOnce() -> Result<Matrix, SpillError> + Send + '_>
+                })
+                .collect();
+            let flat: Result<Vec<Matrix>, SpillError> = ctx.stage(tasks).into_iter().collect();
+            let flat = flat?.into_iter().map(Block::Dense).collect();
+            Ok(DistBlockMatrix {
+                grid: grid_from_flat(flat, nbr, nbc),
+                row_bounds: self.row_bounds.clone(),
+                col_bounds: self.col_bounds.clone(),
+                rows: self.rows,
+                cols: self.cols,
+            })
+        })
     }
 
     /// Total bytes of the stored representation across all blocks — the
@@ -850,29 +1166,39 @@ impl DistBlockMatrix {
     /// nnz-proportional for CSR, descriptors only for implicit (whose
     /// cells the driver then generates locally, on the driver clock).
     pub fn collect(&self, ctx: &Context) -> Matrix {
-        let (nbr, nbc) = self.num_blocks();
-        ctx.add_pass(nbr * nbc);
-        ctx.add_shuffle(self.storage_bytes());
-        ctx.driver(|| {
-            let mut out = Matrix::zeros(self.rows, self.cols);
-            for (bi, row_blocks) in self.grid.iter().enumerate() {
-                let r0 = self.row_bounds[bi];
-                for (bj, b) in row_blocks.iter().enumerate() {
-                    let c0 = self.col_bounds[bj];
-                    let densified;
-                    let m = match b {
-                        Block::Dense(m) => m,
-                        other => {
-                            densified = other.to_dense();
-                            &densified
+        expect_spill(self.try_collect(ctx))
+    }
+
+    /// Fallible [`DistBlockMatrix::collect`] — the entry the
+    /// fault-injection suite drives: a tampered spill file surfaces as
+    /// a typed [`SpillError`] instead of a panic or silent wrong
+    /// numbers.
+    pub fn try_collect(&self, ctx: &Context) -> Result<Matrix, SpillError> {
+        self.with_spill_ledger(ctx, || {
+            let (nbr, nbc) = self.num_blocks();
+            ctx.add_pass(nbr * nbc);
+            ctx.add_shuffle(self.storage_bytes());
+            ctx.driver(|| {
+                let mut out = Matrix::zeros(self.rows, self.cols);
+                for (bi, row_blocks) in self.grid.iter().enumerate() {
+                    let r0 = self.row_bounds[bi];
+                    for (bj, b) in row_blocks.iter().enumerate() {
+                        let c0 = self.col_bounds[bj];
+                        let densified;
+                        let m = match b {
+                            Block::Dense(m) => m,
+                            other => {
+                                densified = other.try_to_dense()?;
+                                &densified
+                            }
+                        };
+                        for i in 0..m.rows() {
+                            out.row_mut(r0 + i)[c0..c0 + m.cols()].copy_from_slice(m.row(i));
                         }
-                    };
-                    for i in 0..m.rows() {
-                        out.row_mut(r0 + i)[c0..c0 + m.cols()].copy_from_slice(m.row(i));
                     }
                 }
-            }
-            out
+                Ok(out)
+            })
         })
     }
 
@@ -882,8 +1208,19 @@ impl DistBlockMatrix {
     /// singleton case of [`DistBlockMatrix::matmul_small_batch`] — one
     /// task plan, kept in one place.
     pub fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
-        let mut out = self.matmul_small_batch(ctx, be, std::slice::from_ref(w));
-        out.pop().expect("a singleton batch yields one product")
+        expect_spill(self.try_matmul_small(ctx, be, w))
+    }
+
+    /// Fallible [`DistBlockMatrix::matmul_small`] — spill faults
+    /// surface as [`SpillError`] instead of panicking.
+    pub fn try_matmul_small(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> Result<DistRowMatrix, SpillError> {
+        let mut out = self.try_matmul_small_batch(ctx, be, std::slice::from_ref(w))?;
+        Ok(out.pop().expect("a singleton batch yields one product"))
     }
 
     /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l) — the
@@ -906,8 +1243,19 @@ impl DistBlockMatrix {
     /// singleton case of [`DistBlockMatrix::rmatmul_small_batch`] —
     /// one task plan, kept in one place.
     pub fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
-        let mut out = self.rmatmul_small_batch(ctx, be, &[q]);
-        out.pop().expect("a singleton batch yields one product")
+        expect_spill(self.try_rmatmul_small(ctx, be, q))
+    }
+
+    /// Fallible [`DistBlockMatrix::rmatmul_small`] — spill faults
+    /// surface as [`SpillError`] instead of panicking.
+    pub fn try_rmatmul_small(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        q: &DistRowMatrix,
+    ) -> Result<Matrix, SpillError> {
+        let mut out = self.try_rmatmul_small_batch(ctx, be, &[q])?;
+        Ok(out.pop().expect("a singleton batch yields one product"))
     }
 
     /// Stage 2 of `rmatmul_small` (shared with the fused paths): fold
@@ -976,76 +1324,96 @@ impl DistBlockMatrix {
 
     /// `y = A·x` (length m), one task per block-row.
     pub fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        expect_spill(self.try_matvec(ctx, x))
+    }
+
+    /// Fallible [`DistBlockMatrix::matvec`] — spill faults surface as
+    /// [`SpillError`] instead of panicking.
+    pub fn try_matvec(&self, ctx: &Context, x: &[f64]) -> Result<Vec<f64>, SpillError> {
         assert_eq!(x.len(), self.cols, "matvec length mismatch");
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
-        let tasks: Vec<Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
-                    let mut y = vec![0.0f64; r1 - r0];
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let part = b.gemv(&x[cb[bj]..cb[bj + 1]]);
-                        for (yi, pi) in y.iter_mut().zip(&part) {
-                            *yi += pi;
+        self.with_spill_ledger(ctx, || {
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+            type Out = Result<(usize, Vec<f64>), SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        let mut y = vec![0.0f64; r1 - r0];
+                        for (bj, b) in row_blocks.iter().enumerate() {
+                            let part = b.try_gemv(&x[cb[bj]..cb[bj + 1]])?;
+                            for (yi, pi) in y.iter_mut().zip(&part) {
+                                *yi += pi;
+                            }
                         }
-                    }
-                    (r0, y)
-                }) as Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>
-            })
-            .collect();
-        let chunks = ctx.stage(tasks);
-        let mut y = vec![0.0; self.rows];
-        for (r0, c) in chunks {
-            y[r0..r0 + c.len()].copy_from_slice(&c);
-        }
-        y
+                        Ok((r0, y))
+                    }) as Box<dyn FnOnce() -> Out + Send + '_>
+                })
+                .collect();
+            let chunks: Result<Vec<(usize, Vec<f64>)>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+            let mut y = vec![0.0; self.rows];
+            for (r0, c) in chunks? {
+                y[r0..r0 + c.len()].copy_from_slice(&c);
+            }
+            Ok(y)
+        })
     }
 
     /// `z = Aᵀ·y` (length n): per-block-row partials + treeAggregate.
     pub fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        expect_spill(self.try_rmatvec(ctx, y))
+    }
+
+    /// Fallible [`DistBlockMatrix::rmatvec`] — spill faults surface as
+    /// [`SpillError`] instead of panicking.
+    pub fn try_rmatvec(&self, ctx: &Context, y: &[f64]) -> Result<Vec<f64>, SpillError> {
         assert_eq!(y.len(), self.rows, "rmatvec length mismatch");
-        let n = self.cols;
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
-        let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
-                    let mut z = vec![0.0f64; n];
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let part = b.gemv_t(&y[r0..r1]);
-                        for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
-                            *zi += pi;
+        self.with_spill_ledger(ctx, || {
+            let n = self.cols;
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+            type Out = Result<Vec<f64>, SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        let mut z = vec![0.0f64; n];
+                        for (bj, b) in row_blocks.iter().enumerate() {
+                            let part = b.try_gemv_t(&y[r0..r1])?;
+                            for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
+                                *zi += pi;
+                            }
                         }
+                        Ok(z)
+                    }) as Box<dyn FnOnce() -> Out + Send + '_>
+                })
+                .collect();
+            let partials: Result<Vec<Vec<f64>>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+            Ok(tree_aggregate(
+                ctx,
+                partials?,
+                |mut a, b| {
+                    for (x, v) in a.iter_mut().zip(&b) {
+                        *x += v;
                     }
-                    z
-                }) as Box<dyn FnOnce() -> Vec<f64> + Send + '_>
-            })
-            .collect();
-        let partials = ctx.stage(tasks);
-        tree_aggregate(
-            ctx,
-            partials,
-            |mut a, b| {
-                for (x, v) in a.iter_mut().zip(&b) {
-                    *x += v;
-                }
-                a
-            },
-            |v| 8 * v.len(),
-        )
-        .unwrap_or_else(|| vec![0.0; n])
+                    a
+                },
+                |v| 8 * v.len(),
+            )
+            .unwrap_or_else(|| vec![0.0; n]))
+        })
     }
 
     /// One fused power-iteration step: `(Y, Z) = (A·W, Aᵀ·(A·W))` with
@@ -1070,71 +1438,77 @@ impl DistBlockMatrix {
         be: &dyn Compute,
         w: &Matrix,
     ) -> (DistRowMatrix, Matrix) {
+        expect_spill(self.try_fused_power_step(ctx, be, w))
+    }
+
+    /// Fallible [`DistBlockMatrix::fused_power_step`] — spill faults
+    /// surface as [`SpillError`] instead of panicking.
+    pub fn try_fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> Result<(DistRowMatrix, Matrix), SpillError> {
         assert_eq!(self.cols, w.rows(), "fused_power_step: block cols vs W rows");
-        let l = w.cols();
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        let nbc = cb.len() - 1;
-        let nbr = rb.len() - 1;
-        ctx.add_pass(nbr * nbc);
+        self.with_spill_ledger(ctx, || {
+            let l = w.cols();
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            let nbc = cb.len() - 1;
+            let nbr = rb.len() - 1;
+            ctx.add_pass(nbr * nbc);
 
-        type FusedOut = (RowPartition, Vec<Matrix>);
-        let tasks: Vec<Box<dyn FnOnce() -> FusedOut + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
-                    if row_blocks.len() == 1 {
-                        // single block column: one stream over the
-                        // stored block serves both products
-                        let ws = w.slice(cb[0], cb[1], 0, l);
-                        let (y, bt) = row_blocks[0].matmul_and_tn(be, &ws);
-                        return (RowPartition { row_start: r0, data: y }, vec![bt]);
-                    }
-                    // wider grid: the Bᵀ partials need the finished Y
-                    // panel, so sweep the row's blocks twice — implicit
-                    // cells materialize once and are reused
-                    let mut cache: Vec<Option<Matrix>> = vec![None; row_blocks.len()];
-                    let mut acc = Matrix::zeros(r1 - r0, l);
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let ws = w.slice(cb[bj], cb[bj + 1], 0, l);
-                        match b {
-                            Block::Implicit(i) => {
-                                let d = i.materialize();
-                                acc.add_assign(&be.matmul(&d, &ws));
-                                cache[bj] = Some(d);
-                            }
-                            other => acc.add_assign(&other.matmul(be, &ws)),
+            type FusedOut = Result<(RowPartition, Vec<Matrix>), SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> FusedOut + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        if row_blocks.len() == 1 {
+                            // single block column: one stream over the
+                            // stored block serves both products
+                            let ws = w.slice(cb[0], cb[1], 0, l);
+                            let (y, bt) = row_blocks[0].try_matmul_and_tn(be, &ws)?;
+                            return Ok((RowPartition { row_start: r0, data: y }, vec![bt]));
                         }
-                    }
-                    let partials = row_blocks
-                        .iter()
-                        .zip(&cache)
-                        .map(|(b, cached)| match cached {
-                            Some(d) => be.matmul_tn(d, &acc),
-                            None => b.matmul_tn(be, &acc),
-                        })
-                        .collect();
-                    (RowPartition { row_start: r0, data: acc }, partials)
-                }) as Box<dyn FnOnce() -> FusedOut + Send + '_>
-            })
-            .collect();
-        let results = ctx.stage(tasks);
+                        // wider grid: the Bᵀ partials need the finished
+                        // Y panel, so sweep the row's views twice — each
+                        // stored cell is accessed ONCE (implicit cells
+                        // run their generator once, spilled cells page
+                        // in once) and the view is reused
+                        let views: Vec<CellView> = row_blocks
+                            .iter()
+                            .map(|b| b.try_view())
+                            .collect::<Result<_, SpillError>>()?;
+                        let mut acc = Matrix::zeros(r1 - r0, l);
+                        for (bj, v) in views.iter().enumerate() {
+                            let ws = w.slice(cb[bj], cb[bj + 1], 0, l);
+                            acc.add_assign(&v.matmul(be, &ws));
+                        }
+                        let partials = views.iter().map(|v| v.matmul_tn(be, &acc)).collect();
+                        Ok((RowPartition { row_start: r0, data: acc }, partials))
+                    }) as Box<dyn FnOnce() -> FusedOut + Send + '_>
+                })
+                .collect();
+            let results: Result<Vec<(RowPartition, Vec<Matrix>)>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
 
-        let mut parts = Vec::with_capacity(nbr);
-        let mut by_col: Vec<Vec<Matrix>> = (0..nbc).map(|_| Vec::with_capacity(nbr)).collect();
-        for (part, partials) in results {
-            parts.push(part);
-            for (bj, p) in partials.into_iter().enumerate() {
-                by_col[bj].push(p);
+            let mut parts = Vec::with_capacity(nbr);
+            let mut by_col: Vec<Vec<Matrix>> =
+                (0..nbc).map(|_| Vec::with_capacity(nbr)).collect();
+            for (part, partials) in results? {
+                parts.push(part);
+                for (bj, p) in partials.into_iter().enumerate() {
+                    by_col[bj].push(p);
+                }
             }
-        }
-        let y = DistRowMatrix { parts, rows: self.rows, cols: l };
-        let z = self.reduce_column_strips(ctx, by_col, l);
-        (y, z)
+            let y = DistRowMatrix { parts, rows: self.rows, cols: l };
+            let z = self.reduce_column_strips(ctx, by_col, l);
+            Ok((y, z))
+        })
     }
 
     /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))` — one
@@ -1143,71 +1517,126 @@ impl DistBlockMatrix {
     /// materialize once and serve both products; results are
     /// bit-identical to the two separate calls.
     pub fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        expect_spill(self.try_fused_normal_matvec(ctx, x))
+    }
+
+    /// Fallible [`DistBlockMatrix::fused_normal_matvec`].
+    pub fn try_fused_normal_matvec(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>), SpillError> {
+        self.try_fused_normal_apply(ctx, x, None)
+    }
+
+    /// Fused residual-normal apply `(y, z) = (A·x − c, Aᵀ·(A·x − c))`
+    /// from ONE grid traversal — the per-iteration step of the
+    /// spectral-norm verifier on the never-formed residual
+    /// `E = A − U·diag(s)·Vᵀ`, whose correction `c = U(s ⊙ Vᵀx)` is
+    /// computed without touching A. Bit-identical to the unfused
+    /// `matvec` → elementwise subtract → `rmatvec` plan: each task
+    /// forms its y chunk exactly as `matvec` does, applies the same
+    /// `yᵢ − cᵢ` subtraction the driver would, and then emits the same
+    /// `gemv_t` partials `rmatvec` would aggregate.
+    pub fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        expect_spill(self.try_fused_normal_matvec_sub(ctx, x, c))
+    }
+
+    /// Fallible [`DistBlockMatrix::fused_normal_matvec_sub`].
+    pub fn try_fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>), SpillError> {
+        self.try_fused_normal_apply(ctx, x, Some(c))
+    }
+
+    /// Shared single-traversal plan behind the two fused normal-apply
+    /// faces: per block-row task, every stored cell is accessed once
+    /// (one [`CellView`]), the y chunk accumulates, the optional
+    /// correction chunk subtracts, and the transpose-side partials are
+    /// emitted from the same views — then the partials treeAggregate
+    /// exactly like [`DistBlockMatrix::rmatvec`]'s.
+    fn try_fused_normal_apply(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        sub: Option<&[f64]>,
+    ) -> Result<(Vec<f64>, Vec<f64>), SpillError> {
         assert_eq!(x.len(), self.cols, "fused_normal_matvec length mismatch");
-        let n = self.cols;
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
-        type FusedVecOut = (usize, Vec<f64>, Vec<f64>);
-        let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
-                    let mut cache: Vec<Option<Matrix>> = vec![None; row_blocks.len()];
-                    let mut y = vec![0.0f64; r1 - r0];
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let xs = &x[cb[bj]..cb[bj + 1]];
-                        let part = match b {
-                            Block::Implicit(i) => {
-                                let d = i.materialize();
-                                let p = blas::gemv(&d, xs);
-                                cache[bj] = Some(d);
-                                p
-                            }
-                            other => other.gemv(xs),
-                        };
-                        for (yi, pi) in y.iter_mut().zip(&part) {
-                            *yi += pi;
-                        }
-                    }
-                    let mut z = vec![0.0f64; n];
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        let part = match &cache[bj] {
-                            Some(d) => blas::gemv_t(d, &y),
-                            None => b.gemv_t(&y),
-                        };
-                        for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
-                            *zi += pi;
-                        }
-                    }
-                    (r0, y, z)
-                }) as Box<dyn FnOnce() -> FusedVecOut + Send + '_>
-            })
-            .collect();
-        let results = ctx.stage(tasks);
-        let mut y = vec![0.0; self.rows];
-        let mut partials = Vec::with_capacity(results.len());
-        for (r0, yc, z) in results {
-            y[r0..r0 + yc.len()].copy_from_slice(&yc);
-            partials.push(z);
+        if let Some(c) = sub {
+            assert_eq!(c.len(), self.rows, "fused_normal_matvec_sub correction length");
         }
-        let z = tree_aggregate(
-            ctx,
-            partials,
-            |mut a, b| {
-                for (x, v) in a.iter_mut().zip(&b) {
-                    *x += v;
-                }
-                a
-            },
-            |v| 8 * v.len(),
-        )
-        .unwrap_or_else(|| vec![0.0; n]);
-        (y, z)
+        self.with_spill_ledger(ctx, || {
+            let n = self.cols;
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+            type FusedVecOut = Result<(usize, Vec<f64>, Vec<f64>), SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        let views: Vec<CellView> = row_blocks
+                            .iter()
+                            .map(|b| b.try_view())
+                            .collect::<Result<_, SpillError>>()?;
+                        let mut y = vec![0.0f64; r1 - r0];
+                        for (bj, v) in views.iter().enumerate() {
+                            let part = v.gemv(&x[cb[bj]..cb[bj + 1]]);
+                            for (yi, pi) in y.iter_mut().zip(&part) {
+                                *yi += pi;
+                            }
+                        }
+                        if let Some(c) = sub {
+                            for (yi, ci) in y.iter_mut().zip(&c[r0..r1]) {
+                                *yi -= ci;
+                            }
+                        }
+                        let mut z = vec![0.0f64; n];
+                        for (bj, v) in views.iter().enumerate() {
+                            let part = v.gemv_t(&y);
+                            for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
+                                *zi += pi;
+                            }
+                        }
+                        Ok((r0, y, z))
+                    }) as Box<dyn FnOnce() -> FusedVecOut + Send + '_>
+                })
+                .collect();
+            let results: Result<Vec<(usize, Vec<f64>, Vec<f64>)>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+            let results = results?;
+            let mut y = vec![0.0; self.rows];
+            let mut partials = Vec::with_capacity(results.len());
+            for (r0, yc, z) in results {
+                y[r0..r0 + yc.len()].copy_from_slice(&yc);
+                partials.push(z);
+            }
+            let z = tree_aggregate(
+                ctx,
+                partials,
+                |mut a, b| {
+                    for (x, v) in a.iter_mut().zip(&b) {
+                        *x += v;
+                    }
+                    a
+                },
+                |v| 8 * v.len(),
+            )
+            .unwrap_or_else(|| vec![0.0; n]);
+            Ok((y, z))
+        })
     }
 
     /// Batched `A · Wₖ` for several driver-held factors: every grid
@@ -1222,65 +1651,70 @@ impl DistBlockMatrix {
         be: &dyn Compute,
         ws: &[Matrix],
     ) -> Vec<DistRowMatrix> {
+        expect_spill(self.try_matmul_small_batch(ctx, be, ws))
+    }
+
+    /// Fallible [`DistBlockMatrix::matmul_small_batch`] — spill faults
+    /// surface as [`SpillError`] instead of panicking.
+    pub fn try_matmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        ws: &[Matrix],
+    ) -> Result<Vec<DistRowMatrix>, SpillError> {
         if ws.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         for w in ws {
             assert_eq!(self.cols, w.rows(), "matmul_small_batch: block cols vs W rows");
         }
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
-        let tasks: Vec<Box<dyn FnOnce() -> Vec<RowPartition> + Send + '_>> = self
-            .grid
-            .iter()
-            .enumerate()
-            .map(|(bi, row_blocks)| {
-                let r0 = rb[bi];
-                let r1 = rb[bi + 1];
-                Box::new(move || {
-                    let mut accs: Vec<Matrix> =
-                        ws.iter().map(|w| Matrix::zeros(r1 - r0, w.cols())).collect();
-                    for (bj, b) in row_blocks.iter().enumerate() {
-                        // one access to the stored block for all sketches
-                        let materialized;
-                        let dense_view: Option<&Matrix> = match b {
-                            Block::Implicit(i) => {
-                                materialized = i.materialize();
-                                Some(&materialized)
-                            }
-                            Block::Dense(m) => Some(m),
-                            Block::SparseCsr(_) => None,
-                        };
-                        for (acc, w) in accs.iter_mut().zip(ws) {
-                            let ws_blk = w.slice(cb[bj], cb[bj + 1], 0, w.cols());
-                            match (dense_view, b) {
-                                (Some(m), _) => acc.add_assign(&be.matmul(m, &ws_blk)),
-                                (None, Block::SparseCsr(c)) => {
-                                    acc.add_assign(&c.matmul(&ws_blk))
-                                }
-                                _ => unreachable!("dense view covers non-CSR blocks"),
+        self.with_spill_ledger(ctx, || {
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
+            type Out = Result<Vec<RowPartition>, SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        let mut accs: Vec<Matrix> =
+                            ws.iter().map(|w| Matrix::zeros(r1 - r0, w.cols())).collect();
+                        for (bj, b) in row_blocks.iter().enumerate() {
+                            // one access to the stored block serves
+                            // every sketch in the batch
+                            let view = b.try_view()?;
+                            for (acc, w) in accs.iter_mut().zip(ws) {
+                                let ws_blk = w.slice(cb[bj], cb[bj + 1], 0, w.cols());
+                                acc.add_assign(&view.matmul(be, &ws_blk));
                             }
                         }
-                    }
-                    accs.into_iter()
-                        .map(|data| RowPartition { row_start: r0, data })
-                        .collect()
-                }) as Box<dyn FnOnce() -> Vec<RowPartition> + Send + '_>
-            })
-            .collect();
-        let results = ctx.stage(tasks);
-        let mut out: Vec<Vec<RowPartition>> =
-            (0..ws.len()).map(|_| Vec::with_capacity(results.len())).collect();
-        for per_task in results {
-            for (k, part) in per_task.into_iter().enumerate() {
-                out[k].push(part);
+                        Ok(accs
+                            .into_iter()
+                            .map(|data| RowPartition { row_start: r0, data })
+                            .collect())
+                    }) as Box<dyn FnOnce() -> Out + Send + '_>
+                })
+                .collect();
+            let results: Result<Vec<Vec<RowPartition>>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+            let results = results?;
+            let mut out: Vec<Vec<RowPartition>> =
+                (0..ws.len()).map(|_| Vec::with_capacity(results.len())).collect();
+            for per_task in results {
+                for (k, part) in per_task.into_iter().enumerate() {
+                    out[k].push(part);
+                }
             }
-        }
-        out.into_iter()
-            .zip(ws)
-            .map(|(parts, w)| DistRowMatrix { parts, rows: self.rows, cols: w.cols() })
-            .collect()
+            Ok(out
+                .into_iter()
+                .zip(ws)
+                .map(|(parts, w)| DistRowMatrix { parts, rows: self.rows, cols: w.cols() })
+                .collect())
+        })
     }
 
     /// Batched `Aᵀ · Qₖ` for several distributed tall factors: stage 1
@@ -1295,67 +1729,71 @@ impl DistBlockMatrix {
         be: &dyn Compute,
         qs: &[&DistRowMatrix],
     ) -> Vec<Matrix> {
+        expect_spill(self.try_rmatmul_small_batch(ctx, be, qs))
+    }
+
+    /// Fallible [`DistBlockMatrix::rmatmul_small_batch`] — spill faults
+    /// surface as [`SpillError`] instead of panicking.
+    pub fn try_rmatmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        qs: &[&DistRowMatrix],
+    ) -> Result<Vec<Matrix>, SpillError> {
         if qs.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         for q in qs {
             assert_eq!(self.rows, q.rows(), "rmatmul_small_batch: row count mismatch");
         }
-        let cb = &self.col_bounds;
-        let rb = &self.row_bounds;
-        let nbc = cb.len() - 1;
-        let nbr = rb.len() - 1;
-        ctx.add_pass(nbr * nbc);
+        self.with_spill_ledger(ctx, || {
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            let nbc = cb.len() - 1;
+            let nbr = rb.len() - 1;
+            ctx.add_pass(nbr * nbc);
 
-        let mut tasks: Vec<Box<dyn FnOnce() -> Vec<Matrix> + Send + '_>> =
-            Vec::with_capacity(nbr * nbc);
-        for (bi, row_blocks) in self.grid.iter().enumerate() {
-            let r0 = rb[bi];
-            let r1 = rb[bi + 1];
-            for b in row_blocks.iter() {
-                tasks.push(Box::new(move || {
-                    let materialized;
-                    let dense_view: Option<&Matrix> = match b {
-                        Block::Implicit(i) => {
-                            materialized = i.materialize();
-                            Some(&materialized)
-                        }
-                        Block::Dense(m) => Some(m),
-                        Block::SparseCsr(_) => None,
-                    };
-                    qs.iter()
-                        .map(|q| {
-                            let qsl = q.rows_slice(r0, r1);
-                            match (dense_view, b) {
-                                (Some(m), _) => be.matmul_tn(m, &qsl),
-                                (None, Block::SparseCsr(c)) => c.matmul_tn(&qsl),
-                                _ => unreachable!("dense view covers non-CSR blocks"),
-                            }
-                        })
-                        .collect()
-                }) as Box<dyn FnOnce() -> Vec<Matrix> + Send + '_>);
-            }
-        }
-        let flat = ctx.stage(tasks);
-
-        // regroup: flat[bi·nbc + bj][k] ↦ per_k[k][bj][bi]
-        let mut per_k: Vec<Vec<Vec<Matrix>>> = (0..qs.len())
-            .map(|_| (0..nbc).map(|_| Vec::with_capacity(nbr)).collect())
-            .collect();
-        let mut it = flat.into_iter();
-        for _bi in 0..nbr {
-            for bj in 0..nbc {
-                let per_factor = it.next().expect("one partial set per grid block");
-                for (k, m) in per_factor.into_iter().enumerate() {
-                    per_k[k][bj].push(m);
+            type Out = Result<Vec<Matrix>, SpillError>;
+            let mut tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> =
+                Vec::with_capacity(nbr * nbc);
+            for (bi, row_blocks) in self.grid.iter().enumerate() {
+                let r0 = rb[bi];
+                let r1 = rb[bi + 1];
+                for b in row_blocks.iter() {
+                    tasks.push(Box::new(move || {
+                        // one access to the stored block serves every
+                        // factor in the batch
+                        let view = b.try_view()?;
+                        Ok(qs
+                            .iter()
+                            .map(|q| view.matmul_tn(be, &q.rows_slice(r0, r1)))
+                            .collect())
+                    }) as Box<dyn FnOnce() -> Out + Send + '_>);
                 }
             }
-        }
-        per_k
-            .into_iter()
-            .zip(qs)
-            .map(|(by_col, q)| self.reduce_column_strips(ctx, by_col, q.cols()))
-            .collect()
+            let flat: Result<Vec<Vec<Matrix>>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+            let flat = flat?;
+
+            // regroup: flat[bi·nbc + bj][k] ↦ per_k[k][bj][bi]
+            let mut per_k: Vec<Vec<Vec<Matrix>>> = (0..qs.len())
+                .map(|_| (0..nbc).map(|_| Vec::with_capacity(nbr)).collect())
+                .collect();
+            let mut it = flat.into_iter();
+            for _bi in 0..nbr {
+                for bj in 0..nbc {
+                    let per_factor = it.next().expect("one partial set per grid block");
+                    for (k, m) in per_factor.into_iter().enumerate() {
+                        per_k[k][bj].push(m);
+                    }
+                }
+            }
+            Ok(per_k
+                .into_iter()
+                .zip(qs)
+                .map(|(by_col, q)| self.reduce_column_strips(ctx, by_col, q.cols()))
+                .collect())
+        })
     }
 }
 
@@ -1708,6 +2146,90 @@ mod tests {
         let _ = y.gram(&ctx, &be);
         let _ = y.matmul_small(&ctx, &be, &randmat(65, 4, 2));
         assert_eq!(ctx.take_metrics().a_passes, 0);
+    }
+
+    /// The PR-4 batch paths at their untested corners: k = 0, k = 1,
+    /// single-block grids, blocks wider/taller than the matrix, and
+    /// ragged last slabs — every one must agree with the singleton
+    /// products to the bit and charge the right number of passes.
+    #[test]
+    fn batch_edge_cases_cover_degenerate_shapes() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(90, 35, 23);
+        // (35, 23): single-block grid; (16, 9): ragged last slabs
+        // (3 rows, 5 cols); (40, 30): blocks larger than the matrix
+        for (rpb, cpb) in [(35usize, 23usize), (16, 9), (40, 30)] {
+            let d = DistBlockMatrix::from_matrix(&a, rpb, cpb);
+            // k = 0: a no-op that charges no pass
+            ctx.reset_metrics();
+            assert!(d.matmul_small_batch(&ctx, &be, &[]).is_empty(), "rpb={rpb}");
+            assert!(d.rmatmul_small_batch(&ctx, &be, &[]).is_empty(), "rpb={rpb}");
+            assert_eq!(ctx.take_metrics().a_passes, 0, "rpb={rpb}: empty batch charged");
+            // k = 1: bit-identical to the singleton product
+            let w = randmat(91, 23, 4);
+            let batch = d.matmul_small_batch(&ctx, &be, std::slice::from_ref(&w));
+            assert_eq!(batch.len(), 1);
+            assert_eq!(
+                batch[0].collect(&ctx).data(),
+                d.matmul_small(&ctx, &be, &w).collect(&ctx).data(),
+                "rpb={rpb} cpb={cpb}: k=1 matmul batch"
+            );
+            assert!(
+                batch[0].collect(&ctx).sub(&blas::matmul(&a, &w)).max_abs() < 1e-12,
+                "rpb={rpb} cpb={cpb}: k=1 batch vs dense reference"
+            );
+            // ragged Q slabs (35 rows in 8-row partitions: last is 3)
+            let q = DistRowMatrix::from_matrix(&randmat(92, 35, 3), 8);
+            let rbatch = d.rmatmul_small_batch(&ctx, &be, &[&q]);
+            assert_eq!(rbatch.len(), 1);
+            assert_eq!(
+                rbatch[0].data(),
+                d.rmatmul_small(&ctx, &be, &q).data(),
+                "rpb={rpb} cpb={cpb}: k=1 rmatmul batch"
+            );
+        }
+    }
+
+    #[test]
+    fn spilled_backend_matches_dense_bitwise() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(95, 33, 21);
+        let dense = DistBlockMatrix::from_matrix(&a, 10, 8); // 4x3 grid
+        // a one-block budget: the whole grid streams through one
+        // resident cell, results must not notice
+        let store = crate::dist::SpillStore::with_budget(8 * 10 * 8).unwrap();
+        let spilled = dense.spill(&ctx, &store).unwrap();
+        assert!(spilled.spill_store().is_some());
+        assert!(dense.spill_store().is_none());
+        assert_eq!(spilled.storage_bytes(), 8 * 33 * 21);
+        assert_eq!(spilled.collect(&ctx), a);
+
+        let w = randmat(96, 21, 4);
+        let yd = dense.matmul_small(&ctx, &be, &w);
+        let ys = spilled.matmul_small(&ctx, &be, &w);
+        assert_eq!(ys.collect(&ctx).data(), yd.collect(&ctx).data());
+        assert_eq!(
+            spilled.rmatmul_small(&ctx, &be, &yd).data(),
+            dense.rmatmul_small(&ctx, &be, &yd).data()
+        );
+        let (yf, zf) = spilled.fused_power_step(&ctx, &be, &w);
+        let (ydf, zdf) = dense.fused_power_step(&ctx, &be, &w);
+        assert_eq!(yf.collect(&ctx).data(), ydf.collect(&ctx).data());
+        assert_eq!(zf.data(), zdf.data());
+        let x: Vec<f64> = (0..21).map(|i| (i as f64).sin()).collect();
+        assert_eq!(spilled.matvec(&ctx, &x), dense.matvec(&ctx, &x));
+        let yy: Vec<f64> = (0..33).map(|i| (i as f64).cos()).collect();
+        assert_eq!(spilled.rmatvec(&ctx, &yy), dense.rmatvec(&ctx, &yy));
+
+        // the ledger: products charge reads, peak stays under budget
+        ctx.reset_metrics();
+        let _ = spilled.matmul_small(&ctx, &be, &w);
+        let m = ctx.take_metrics();
+        assert_eq!(m.a_passes, 1);
+        assert!(m.spill_bytes_read > 0, "spilled product must page blocks in");
+        assert!(m.peak_resident_bytes <= store.budget(), "resident over budget");
     }
 
     #[test]

@@ -118,6 +118,23 @@ pub struct Metrics {
     /// over all passes. On the implicit backend this is exactly the
     /// number of generator runs, so a fused power step halves it.
     pub blocks_materialized: usize,
+    /// Payload bytes the spill tier fetched from disk during this
+    /// window (out-of-core cache misses; hits charge nothing). Charged
+    /// by the [`crate::dist::SpillStore`] cache, bracketed around every
+    /// operator-wide product of a spilled grid.
+    pub spill_bytes_read: usize,
+    /// Payload bytes the spill tier wrote to disk during this window
+    /// (block spills).
+    pub spill_bytes_written: usize,
+    /// High-water mark of the spill cache's resident payload bytes
+    /// **during this window** (each bracketed product opens a fresh
+    /// peak window on the store, and the charges max-fold here) — by
+    /// construction never above the store's budget (the out-of-core
+    /// invariant `tests/out_of_core.rs` asserts on every run). This
+    /// counts the *cache's* residency: payloads a consuming task has
+    /// pinned via `Arc` for its own lifetime ride on top, bounded by
+    /// one block-row per in-flight task (see `dist/spill.rs`).
+    pub peak_resident_bytes: usize,
 }
 
 impl Metrics {
@@ -165,6 +182,16 @@ impl Metrics {
     pub(crate) fn add_pass(&mut self, blocks: usize) {
         self.a_passes += 1;
         self.blocks_materialized += blocks;
+    }
+
+    /// Fold one spill-ledger delta (reads/writes over one bracketed
+    /// operator-wide product, plus the cache's high-water mark) into
+    /// the window — see `spill_bytes_read` / `spill_bytes_written` /
+    /// `peak_resident_bytes`.
+    pub(crate) fn add_spill(&mut self, read: usize, written: usize, peak_resident: usize) {
+        self.spill_bytes_read += read;
+        self.spill_bytes_written += written;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(peak_resident);
     }
 
     /// Record a driver-bound gather (e.g. `collect`): the whole cluster
@@ -300,6 +327,20 @@ mod tests {
         assert_eq!(m.a_passes, 3);
         assert_eq!(m.blocks_materialized, 25);
         // the ledger is storage bookkeeping, not time or bytes
+        assert_eq!(m.cpu_time, 0.0);
+        assert_eq!(m.shuffle_bytes, 0);
+    }
+
+    #[test]
+    fn spill_ledger_accumulates_and_tracks_peak() {
+        let mut m = Metrics::default();
+        m.add_spill(100, 200, 50);
+        m.add_spill(10, 0, 40); // lower peak must not shrink the mark
+        m.add_spill(0, 0, 75);
+        assert_eq!(m.spill_bytes_read, 110);
+        assert_eq!(m.spill_bytes_written, 200);
+        assert_eq!(m.peak_resident_bytes, 75);
+        // the spill ledger is storage bookkeeping, not time or shuffle
         assert_eq!(m.cpu_time, 0.0);
         assert_eq!(m.shuffle_bytes, 0);
     }

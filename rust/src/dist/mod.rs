@@ -10,7 +10,9 @@
 //! | [`Context`] | `SparkContext` | stage/driver split + metrics |
 //! | [`pool::WorkerPool`] | executor JVMs | OS threads (`DSVD_WORKERS`) |
 //! | [`DistRowMatrix`] | `IndexedRowMatrix` | contiguous row slabs |
-//! | [`DistBlockMatrix`] | `BlockMatrix` | grid of pluggable [`Block`] cells (dense / CSR / implicit) |
+//! | [`DistRowCsrMatrix`] | sparse `IndexedRowMatrix` | CSR row slabs (tall sparse inputs) |
+//! | [`DistBlockMatrix`] | `BlockMatrix` | grid of pluggable [`Block`] cells (dense / CSR / implicit / spilled) |
+//! | [`SpillStore`] | disk-persisted RDD blocks | out-of-core tier: per-block files + budgeted LRU page cache |
 //! | [`DistOp`] | the `A·Ω` / `Aᵀ·Q` access pattern | operator trait Algorithms 5–8 are written against |
 //! | [`tree_aggregate`] | `treeAggregate` | fan-in-wide parallel merges |
 //! | [`tsqr`] / [`tsqr_r`] | modified `computeSVD` QR | reduction-tree TSQR |
@@ -27,6 +29,8 @@ pub mod context;
 pub mod matrix;
 pub mod metrics;
 pub mod op;
+pub mod row_csr;
+pub mod spill;
 pub mod tsqr;
 
 // The worker pool lives at the crate root (`crate::pool`) so the local
@@ -40,4 +44,8 @@ pub use matrix::{
 };
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
 pub use op::{DistOp, UnfusedOp};
-pub use tsqr::{tsqr, tsqr_lineage, tsqr_r, tsqr_with_stats, TsqrFactors, TsqrMemStats};
+pub use row_csr::{CsrRowPartition, DistRowCsrMatrix};
+pub use spill::{SpillError, SpillStats, SpillStore, SpilledBlock};
+pub use tsqr::{
+    tsqr, tsqr_lineage, tsqr_r, tsqr_r_csr, tsqr_with_stats, TsqrFactors, TsqrMemStats,
+};

@@ -27,6 +27,7 @@ use crate::runtime::compute::Compute;
 
 use super::context::Context;
 use super::matrix::{DistBlockMatrix, DistRowMatrix};
+use super::row_csr::DistRowCsrMatrix;
 
 /// A distributed matrix seen purely through its products — the whole
 /// interface the randomized low-rank algorithms need.
@@ -95,6 +96,30 @@ pub trait DistOp {
         (y, z)
     }
 
+    /// Fused **residual**-normal apply:
+    /// `(y, z) = (A·x − c, Aᵀ·(A·x − c))` from one traversal — the
+    /// per-iteration step of the spectral-norm verifier on the
+    /// never-formed residual `E = A − U·diag(s)·Vᵀ`, whose correction
+    /// `c = U(s ⊙ Vᵀx)` is computable before A is touched
+    /// (`y = E·x = A·x − c`, and the A-side of `Eᵀ·y` is `Aᵀ·y`). The
+    /// default is the unfused plan — `matvec`, elementwise subtract,
+    /// `rmatvec` — costing two passes; both layouts override it with a
+    /// single-traversal plan that must stay bit-identical (pinned by
+    /// `tests/op_equivalence.rs`), so one verification iteration reads
+    /// A once instead of twice.
+    fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(c.len(), self.rows(), "fused_normal_matvec_sub correction length");
+        let ax = self.matvec(ctx, x);
+        let y: Vec<f64> = ax.iter().zip(c).map(|(a, b)| a - b).collect();
+        let z = self.rmatvec(ctx, &y);
+        (y, z)
+    }
+
     /// Batched `A · Wₖ` over several driver-held factors, serving every
     /// sketch from one traversal of the stored operator (one generator
     /// run per implicit cell however many factors ride along). Default:
@@ -159,9 +184,9 @@ impl<'a> DistOp for UnfusedOp<'a> {
     fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
         self.0.rmatvec(ctx, y)
     }
-    // fused_power_step / fused_normal_matvec / *_batch deliberately NOT
-    // forwarded: the trait defaults decompose them into the unfused
-    // per-product traversals above.
+    // fused_power_step / fused_normal_matvec / fused_normal_matvec_sub /
+    // *_batch deliberately NOT forwarded: the trait defaults decompose
+    // them into the unfused per-product traversals above.
 }
 
 impl DistOp for DistBlockMatrix {
@@ -204,6 +229,15 @@ impl DistOp for DistBlockMatrix {
 
     fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
         DistBlockMatrix::fused_normal_matvec(self, ctx, x)
+    }
+
+    fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        DistBlockMatrix::fused_normal_matvec_sub(self, ctx, x, c)
     }
 
     fn matmul_small_batch(
@@ -267,9 +301,74 @@ impl DistOp for DistRowMatrix {
     fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
         DistRowMatrix::fused_normal_matvec(self, ctx, x)
     }
+
+    fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        DistRowMatrix::fused_normal_matvec_sub(self, ctx, x, c)
+    }
     // the batched defaults are already optimal for resident row slabs:
     // every partition is dense in memory, so k traversals read the same
     // bytes k times whether or not they share a stage
+}
+
+impl DistOp for DistRowCsrMatrix {
+    fn rows(&self) -> usize {
+        DistRowCsrMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        DistRowCsrMatrix::cols(self)
+    }
+
+    fn shuffle_bytes(&self) -> usize {
+        self.storage_bytes()
+    }
+
+    fn matmul_small(&self, ctx: &Context, be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        DistRowCsrMatrix::matmul_small(self, ctx, be, w)
+    }
+
+    fn rmatmul_small(&self, ctx: &Context, be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        DistRowCsrMatrix::rmatmul_small(self, ctx, be, q)
+    }
+
+    fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        DistRowCsrMatrix::matvec(self, ctx, x)
+    }
+
+    fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        DistRowCsrMatrix::rmatvec(self, ctx, y)
+    }
+
+    fn fused_power_step(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        DistRowCsrMatrix::fused_power_step(self, ctx, be, w)
+    }
+
+    fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        DistRowCsrMatrix::fused_normal_matvec(self, ctx, x)
+    }
+
+    fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        DistRowCsrMatrix::fused_normal_matvec_sub(self, ctx, x, c)
+    }
+    // the batched products use the trait defaults (one pass per
+    // factor) — the slabs are resident CSR arrays, so a batch override
+    // would save nnz re-reads but no generator runs or page-ins; the
+    // ledger honestly reports k passes for k sketches
 }
 
 #[cfg(test)]

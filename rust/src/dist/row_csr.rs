@@ -1,0 +1,569 @@
+//! `DistRowCsrMatrix` — tall **sparse** row slabs, the CSR analogue of
+//! [`DistRowMatrix`](super::DistRowMatrix).
+//!
+//! The tall-skinny workloads (problem {1} of the paper) assume dense
+//! row slabs, but real tall inputs — term-document counts, genomics
+//! genotype matrices — are overwhelmingly sparse. This layout keeps
+//! each contiguous row slab as one [`Csr`] block, so storage and every
+//! kernel are ∝ nnz, and plugs into both algorithm families:
+//!
+//! * **Algorithms 1–4** reach it through the `TallInput` trait in
+//!   `algs::tall_skinny` (the `algorithm*_csr` entry points): the SRFT
+//!   mix — the only step of Algorithms 1–2 that touches A — densifies
+//!   per slab inside the mixing tasks ([`DistRowCsrMatrix::map_rows_dense`]),
+//!   and the Gram engines of Algorithms 3–4 read the slabs through the
+//!   nnz-proportional [`Csr::gram`] kernel.
+//! * **Algorithms 5–8** reach it through [`super::DistOp`]: the layout
+//!   implements the full operator contract, including a genuinely
+//!   single-pass [`DistRowCsrMatrix::fused_power_step`] built on the
+//!   one-sweep [`Csr::matmul_and_tn`] kernel.
+//! * **TSQR** enters through [`super::tsqr::tsqr_r_csr`], which
+//!   densifies each slab transiently inside its leaf task and reuses
+//!   the shared dense R merge tree.
+//!
+//! Unlike [`DistRowMatrix`] — whose slabs hold *derived* data
+//! (sketches, factors) and therefore never charge the pass ledger —
+//! this layout always holds the data at rest, so every operator-wide
+//! product charges [`super::Metrics::a_passes`] (one pass, one
+//! materialized "cell" per slab), making sparse tall runs comparable to
+//! the block-matrix backends in every BENCH record.
+
+use crate::linalg::{Csr, Matrix};
+use crate::runtime::compute::Compute;
+
+use super::context::{tree_aggregate, Context};
+use super::matrix::{row_ranges, DistRowMatrix, RowPartition};
+
+/// One contiguous sparse row slab of a [`DistRowCsrMatrix`].
+#[derive(Clone)]
+pub struct CsrRowPartition {
+    /// Global index of this slab's first row.
+    pub row_start: usize,
+    /// The slab in compressed sparse row form (`r × n`).
+    pub data: Csr,
+}
+
+/// Row-partitioned distributed sparse matrix (see module docs).
+#[derive(Clone)]
+pub struct DistRowCsrMatrix {
+    /// The CSR slabs, ascending by `row_start`, tiling `[0, rows)`.
+    pub parts: Vec<CsrRowPartition>,
+    rows: usize,
+    cols: usize,
+}
+
+impl DistRowCsrMatrix {
+    /// Assemble from slabs produced by a generation stage. The slabs
+    /// must tile `[0, rows)` contiguously (any order).
+    pub fn from_parts(mut parts: Vec<CsrRowPartition>, rows: usize, cols: usize) -> Self {
+        parts.sort_by_key(|p| p.row_start);
+        let mut covered = 0;
+        for p in &parts {
+            assert_eq!(p.row_start, covered, "slabs must tile [0, rows) contiguously");
+            assert_eq!(p.data.cols(), cols, "slab column-count mismatch");
+            covered += p.data.rows();
+        }
+        assert_eq!(covered, rows, "slabs cover {covered} of {rows} rows");
+        DistRowCsrMatrix { parts, rows, cols }
+    }
+
+    /// Partition a driver-held matrix into `rows_per_part`-row CSR
+    /// slabs (exact zeros dropped per slab).
+    pub fn from_matrix(a: &Matrix, rows_per_part: usize) -> Self {
+        let parts = row_ranges(a.rows(), rows_per_part)
+            .into_iter()
+            .map(|(r0, r1)| CsrRowPartition {
+                row_start: r0,
+                data: Csr::from_dense(&a.slice(r0, r1, 0, a.cols())),
+            })
+            .collect();
+        DistRowCsrMatrix { parts, rows: a.rows(), cols: a.cols() }
+    }
+
+    /// Build distributedly: one task per slab, `slab(r0, r1)` returning
+    /// rows `[r0, r1)` in compressed form.
+    pub fn generate_csr(
+        ctx: &Context,
+        rows: usize,
+        cols: usize,
+        rows_per_part: usize,
+        slab: impl Fn(usize, usize) -> Csr + Sync,
+    ) -> Self {
+        let slab = &slab;
+        let tasks: Vec<Box<dyn FnOnce() -> CsrRowPartition + Send + '_>> =
+            row_ranges(rows, rows_per_part)
+                .into_iter()
+                .map(|(r0, r1)| {
+                    Box::new(move || {
+                        let data = slab(r0, r1);
+                        assert_eq!(
+                            (data.rows(), data.cols()),
+                            (r1 - r0, cols),
+                            "CSR slab generator returned a wrong-shape slab"
+                        );
+                        CsrRowPartition { row_start: r0, data }
+                    }) as Box<dyn FnOnce() -> CsrRowPartition + Send + '_>
+                })
+                .collect();
+        let parts = ctx.stage(tasks);
+        DistRowCsrMatrix { parts, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.parts.iter().map(|p| p.data.nnz()).sum()
+    }
+
+    /// Bytes of the stored representation — the [`super::DistOp`]
+    /// `shuffle_bytes` hint (∝ nnz, like the per-block CSR backend).
+    pub fn storage_bytes(&self) -> usize {
+        self.parts.iter().map(|p| p.data.storage_bytes()).sum()
+    }
+
+    /// Decompress every slab into a dense [`DistRowMatrix`] (one task
+    /// per slab; charges one pass of the data at rest).
+    pub fn densify(&self, ctx: &Context) -> DistRowMatrix {
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || RowPartition { row_start: p.row_start, data: p.data.to_dense() })
+                    as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix::from_parts(parts, self.rows, self.cols)
+    }
+
+    /// Apply `f` to every (transiently densified) row, producing a
+    /// dense [`DistRowMatrix`] — the SRFT-mix entry of Algorithms 1–2
+    /// on sparse inputs: the output of the mix is dense whatever the
+    /// storage, so each slab densifies inside its own task (`O(slab)`
+    /// resident) and A itself is read exactly once.
+    pub fn map_rows_dense(&self, ctx: &Context, f: impl Fn(&mut [f64]) + Sync) -> DistRowMatrix {
+        ctx.add_pass(self.parts.len());
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let mut data = p.data.to_dense();
+                    for i in 0..data.rows() {
+                        f(data.row_mut(i));
+                    }
+                    RowPartition { row_start: p.row_start, data }
+                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix::from_parts(parts, self.rows, self.cols)
+    }
+
+    /// Gather every slab to the driver as one dense matrix.
+    pub fn collect(&self, ctx: &Context) -> Matrix {
+        ctx.add_pass(self.parts.len());
+        ctx.add_shuffle(self.storage_bytes());
+        ctx.driver(|| {
+            let mut out = Matrix::zeros(self.rows, self.cols);
+            for p in &self.parts {
+                let d = p.data.to_dense();
+                for i in 0..d.rows() {
+                    out.row_mut(p.row_start + i).copy_from_slice(d.row(i));
+                }
+            }
+            out
+        })
+    }
+
+    /// `A · W` for a small driver-held `W` (n×l): one nnz-proportional
+    /// SpMM task per slab; the result is a dense [`DistRowMatrix`] in
+    /// `A`'s partitioning.
+    pub fn matmul_small(&self, ctx: &Context, _be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        assert_eq!(self.cols, w.rows(), "matmul_small: {} cols vs {} W rows", self.cols, w.rows());
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || RowPartition { row_start: p.row_start, data: p.data.matmul(w) })
+                    as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix::from_parts(parts, self.rows, w.cols())
+    }
+
+    /// `Aᵀ · Q` for a distributed tall factor `Q` (m×l): one
+    /// `Csr::matmul_tn` task per slab pairing the matching rows of `Q`,
+    /// then a treeAggregate of the n×l partials — mirroring
+    /// [`DistRowMatrix::rmatmul_small`].
+    pub fn rmatmul_small(&self, ctx: &Context, _be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let qs = q.rows_slice(p.row_start, p.row_start + p.data.rows());
+                    p.data.matmul_tn(&qs)
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, q.cols()))
+    }
+
+    /// `AᵀA` (n×n, driver-held) by per-slab sparse Gram + treeAggregate
+    /// — the Algorithm 3/4 entry, `O(Σ row_nnz²)` work and no
+    /// densification anywhere.
+    pub fn gram(&self, ctx: &Context) -> Matrix {
+        let n = self.cols;
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| Box::new(move || p.data.gram()) as Box<dyn FnOnce() -> Matrix + Send + '_>)
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |g| 8 * g.rows() * g.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(n, n))
+    }
+
+    /// `y = A·x` (length m), one task per slab.
+    pub fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec length mismatch");
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || (p.row_start, p.data.gemv(x)))
+                    as Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>
+            })
+            .collect();
+        let chunks = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        for (r0, c) in chunks {
+            y[r0..r0 + c.len()].copy_from_slice(&c);
+        }
+        y
+    }
+
+    /// `z = Aᵀ·y` (length n): per-slab `gemv_t` + treeAggregate.
+    pub fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows, "rmatvec length mismatch");
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    p.data.gemv_t(&y[p.row_start..p.row_start + p.data.rows()])
+                }) as Box<dyn FnOnce() -> Vec<f64> + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; self.cols])
+    }
+
+    /// One fused power-iteration step `(Y, Z) = (A·W, Aᵀ·(A·W))` — the
+    /// sparse row-slab face of [`super::DistOp::fused_power_step`].
+    /// Each slab task sweeps its nonzeros **once** through
+    /// [`Csr::matmul_and_tn`], emitting its Y slab and its n×l
+    /// Z-partial together; bit-identical to the unfused two-call pair
+    /// (the one-sweep kernel is pinned against the two separate calls),
+    /// and charges a single ledger pass where the pair charges two.
+    pub fn fused_power_step(
+        &self,
+        ctx: &Context,
+        _be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        assert_eq!(self.cols, w.rows(), "fused_power_step: cols vs W rows");
+        ctx.add_pass(self.parts.len());
+        type FusedOut = (RowPartition, Matrix);
+        let tasks: Vec<Box<dyn FnOnce() -> FusedOut + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let (y, bt) = p.data.matmul_and_tn(w);
+                    (RowPartition { row_start: p.row_start, data: y }, bt)
+                }) as Box<dyn FnOnce() -> FusedOut + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut parts = Vec::with_capacity(results.len());
+        let mut partials = Vec::with_capacity(results.len());
+        for (part, bt) in results {
+            parts.push(part);
+            partials.push(bt);
+        }
+        let y = DistRowMatrix::from_parts(parts, self.rows, w.cols());
+        let z = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, w.cols()));
+        (y, z)
+    }
+
+    /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))`: one
+    /// nnz sweep per slab instead of the `matvec` + `rmatvec` pair;
+    /// bit-identical to the two separate calls.
+    pub fn fused_normal_matvec(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_apply(ctx, x, None)
+    }
+
+    /// Fused residual-normal apply `(y, z) = (A·x − c, Aᵀ·(A·x − c))` —
+    /// the sparse face of [`super::DistOp::fused_normal_matvec_sub`].
+    pub fn fused_normal_matvec_sub(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        c: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_apply(ctx, x, Some(c))
+    }
+
+    fn fused_normal_apply(
+        &self,
+        ctx: &Context,
+        x: &[f64],
+        sub: Option<&[f64]>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(x.len(), self.cols, "fused_normal_matvec length mismatch");
+        if let Some(c) = sub {
+            assert_eq!(c.len(), self.rows, "fused_normal_matvec_sub correction length");
+        }
+        ctx.add_pass(self.parts.len());
+        type FusedVecOut = (usize, Vec<f64>, Vec<f64>);
+        let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let mut y = p.data.gemv(x);
+                    if let Some(c) = sub {
+                        let chunk = &c[p.row_start..p.row_start + p.data.rows()];
+                        for (yi, ci) in y.iter_mut().zip(chunk) {
+                            *yi -= ci;
+                        }
+                    }
+                    let z = p.data.gemv_t(&y);
+                    (p.row_start, y, z)
+                }) as Box<dyn FnOnce() -> FusedVecOut + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        let mut partials = Vec::with_capacity(results.len());
+        for (r0, yc, z) in results {
+            y[r0..r0 + yc.len()].copy_from_slice(&yc);
+            partials.push(z);
+        }
+        let z = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; self.cols]);
+        (y, z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::rng::Rng;
+    use crate::runtime::compute::NativeCompute;
+
+    fn sparseish(seed: u64, m: usize, n: usize) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        Matrix::from_fn(m, n, |_, _| if rng.uniform() < 0.2 { rng.gauss() } else { 0.0 })
+    }
+
+    fn randmat(seed: u64, m: usize, n: usize) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn roundtrip_shapes_and_storage() {
+        let ctx = Context::new(4);
+        let a = sparseish(1, 37, 9);
+        let d = DistRowCsrMatrix::from_matrix(&a, 8);
+        assert_eq!(d.rows(), 37);
+        assert_eq!(d.cols(), 9);
+        assert_eq!(d.num_partitions(), 5);
+        assert_eq!(d.collect(&ctx), a);
+        assert_eq!(d.densify(&ctx).collect(&ctx), a);
+        assert!(d.storage_bytes() < 8 * 37 * 9, "CSR slabs must beat dense storage");
+        assert_eq!(d.nnz(), a.data().iter().filter(|&&x| x != 0.0).count());
+    }
+
+    #[test]
+    fn generate_matches_from_matrix() {
+        let ctx = Context::new(3);
+        let a = sparseish(2, 25, 7);
+        let by_gen = DistRowCsrMatrix::generate_csr(&ctx, 25, 7, 6, |r0, r1| {
+            Csr::from_dense(&a.slice(r0, r1, 0, 7))
+        });
+        assert_eq!(by_gen.collect(&ctx), a);
+    }
+
+    #[test]
+    fn products_match_dense_reference() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = sparseish(3, 60, 11);
+        let d = DistRowCsrMatrix::from_matrix(&a, 9);
+
+        let w = randmat(4, 11, 3);
+        let y = d.matmul_small(&ctx, &be, &w).collect(&ctx);
+        assert!(y.sub(&blas::matmul(&a, &w)).max_abs() < 1e-12);
+
+        let q_local = randmat(5, 60, 4);
+        let q = DistRowMatrix::from_matrix(&q_local, 13);
+        let z = d.rmatmul_small(&ctx, &be, &q);
+        assert!(z.sub(&blas::matmul_tn(&a, &q_local)).max_abs() < 1e-12);
+
+        let g = d.gram(&ctx);
+        assert!(g.sub(&blas::gram(&a)).max_abs() < 1e-11);
+
+        let x: Vec<f64> = (0..11).map(|i| (i as f64).sin()).collect();
+        for (got, want) in d.matvec(&ctx, &x).iter().zip(blas::gemv(&a, &x)) {
+            assert!((got - want).abs() < 1e-12);
+        }
+        let yv: Vec<f64> = (0..60).map(|i| (i as f64).cos()).collect();
+        for (got, want) in d.rmatvec(&ctx, &yv).iter().zip(blas::gemv_t(&a, &yv)) {
+            assert!((got - want).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn fused_paths_bit_identical_to_two_calls() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = sparseish(6, 50, 13);
+        let d = DistRowCsrMatrix::from_matrix(&a, 8);
+        let w = randmat(7, 13, 3);
+        let (y_f, z_f) = d.fused_power_step(&ctx, &be, &w);
+        let y_u = d.matmul_small(&ctx, &be, &w);
+        let z_u = d.rmatmul_small(&ctx, &be, &y_u);
+        assert_eq!(y_f.collect(&ctx).data(), y_u.collect(&ctx).data());
+        assert_eq!(z_f.data(), z_u.data());
+
+        let x: Vec<f64> = (0..13).map(|i| (i as f64).sin()).collect();
+        let (yv_f, zv_f) = d.fused_normal_matvec(&ctx, &x);
+        let yv_u = d.matvec(&ctx, &x);
+        let zv_u = d.rmatvec(&ctx, &yv_u);
+        assert_eq!(yv_f, yv_u);
+        assert_eq!(zv_f, zv_u);
+
+        // the sub variant: bit-identical to matvec -> subtract -> rmatvec
+        let c: Vec<f64> = (0..50).map(|i| (i as f64) * 0.01).collect();
+        let (ys_f, zs_f) = d.fused_normal_matvec_sub(&ctx, &x, &c);
+        let ys_u: Vec<f64> = yv_u.iter().zip(&c).map(|(a, b)| a - b).collect();
+        let zs_u = d.rmatvec(&ctx, &ys_u);
+        assert_eq!(ys_f, ys_u);
+        assert_eq!(zs_f, zs_u);
+    }
+
+    #[test]
+    fn pass_ledger_charges_sparse_slab_traversals() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = sparseish(8, 40, 10);
+        let d = DistRowCsrMatrix::from_matrix(&a, 8); // 5 slabs
+        let w = randmat(9, 10, 3);
+
+        ctx.reset_metrics();
+        let y = d.matmul_small(&ctx, &be, &w);
+        let _ = d.rmatmul_small(&ctx, &be, &y);
+        let two_call = ctx.take_metrics();
+        assert_eq!(two_call.a_passes, 2);
+        assert_eq!(two_call.blocks_materialized, 2 * 5);
+
+        ctx.reset_metrics();
+        let _ = d.fused_power_step(&ctx, &be, &w);
+        let fused = ctx.take_metrics();
+        assert_eq!(fused.a_passes, 1);
+        assert_eq!(fused.blocks_materialized, 5);
+
+        // derived dense intermediates still never charge
+        ctx.reset_metrics();
+        let _ = y.gram(&ctx, &be);
+        assert_eq!(ctx.take_metrics().a_passes, 0);
+    }
+
+    #[test]
+    fn map_rows_dense_reads_a_once() {
+        let ctx = Context::new(2);
+        let a = sparseish(10, 20, 6);
+        let d = DistRowCsrMatrix::from_matrix(&a, 7);
+        ctx.reset_metrics();
+        let doubled = d.map_rows_dense(&ctx, |row| {
+            for v in row.iter_mut() {
+                *v *= 2.0;
+            }
+        });
+        assert_eq!(ctx.take_metrics().a_passes, 1);
+        assert!(doubled.collect(&ctx).sub(&a.scale(2.0)).max_abs() == 0.0);
+    }
+}

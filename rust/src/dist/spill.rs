@@ -1,0 +1,588 @@
+//! Out-of-core block storage — the spill-to-disk tier behind
+//! [`super::matrix::Block::Spilled`].
+//!
+//! The paper's premise is that highly rectangular matrices are
+//! distributed precisely because they do not fit in one node's memory,
+//! and the HMT-style randomized schemes it builds on are pass-efficient
+//! exactly so that A can live *at rest* on disk (HMT §6.3: passes over
+//! the data are the currency). This module supplies that tier for the
+//! simulated cluster: a [`SpillStore`] writes each block's dense payload
+//! to its own file under a private temp directory and pages payloads
+//! back through an LRU cache capped by a byte budget
+//! (`DSVD_MEMORY_BUDGET`, or [`SpillStore::with_budget`]).
+//!
+//! Design points:
+//!
+//! * **Write-once, immutable payloads.** A block is written when it is
+//!   spilled and never mutated afterwards, so eviction is just dropping
+//!   the cached `Arc<Matrix>` — re-reads reproduce the identical bits,
+//!   which is why results are independent of eviction order and of how
+//!   concurrent tasks interleave their fetches (pinned by
+//!   `tests/out_of_core.rs`).
+//! * **Budgeted LRU.** A fetch that misses reads the file and inserts
+//!   the payload, evicting least-recently-used entries first until the
+//!   cache fits the budget. The cache's resident high-water mark is the
+//!   `peak_resident_bytes` ledger the metrics report; with a budget of
+//!   one block the whole matrix streams through a single resident cell.
+//!   A payload that alone exceeds the budget is served **without
+//!   entering the cache**, so the resident set never exceeds the budget
+//!   — `peak_resident_bytes ≤ budget` holds by construction, and a zero
+//!   budget simply caches nothing.
+//! * **Typed failures.** Every fault — a missing file, a truncated
+//!   file, a corrupted payload (checksum), a shape mismatch — surfaces
+//!   as a [`SpillError`] through the `try_*` APIs of
+//!   [`super::DistBlockMatrix`]; nothing panics and nothing returns
+//!   wrong numbers silently. Each payload carries a 32-byte header
+//!   (magic, shape, FNV-1a checksum) that the read path verifies.
+//! * **Self-cleaning.** The temp directory is removed when the last
+//!   reference to the store drops — blocks hold `Arc<SpillStore>`, so
+//!   cleanup happens exactly when the spilled matrix and the store are
+//!   both gone, on the success and the error path alike.
+//!
+//! Ledger semantics: `bytes_read` counts payload bytes fetched from
+//! disk (cache hits are free), `bytes_written` counts payload bytes
+//! spilled, and `peak_resident_bytes` is the cache's lifetime
+//! high-water mark. The cache lock is held across file I/O so each miss
+//! reads its file exactly once, keeping the counters meaningful under
+//! concurrent tasks. Task-transient views (a fetched `Arc` held for one
+//! task's lifetime) share the cached allocation and are not counted
+//! twice; they are bounded by one block row per in-flight task.
+
+use crate::linalg::Matrix;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Magic number leading every spill file (version 1 of the format).
+const SPILL_MAGIC: u64 = 0xD5BD_5B10_C0DE_0001;
+/// Header: magic, rows, cols, checksum — four u64 little-endian words.
+const HEADER_BYTES: usize = 32;
+
+/// A typed out-of-core failure: the spill tier's I/O and integrity
+/// errors, surfaced by the `try_*` APIs instead of panicking.
+#[derive(Clone, Debug)]
+pub enum SpillError {
+    /// The spill file could not be created, read, or written (includes
+    /// deleted-file faults: opening a missing payload lands here).
+    Io {
+        /// What was being attempted ("read", "write", "create dir").
+        op: &'static str,
+        /// The file (or directory) involved.
+        path: PathBuf,
+        /// The underlying OS error, stringified.
+        detail: String,
+    },
+    /// The spill file exists but fails validation: wrong magic, wrong
+    /// length (truncation), wrong shape, or a checksum mismatch.
+    Corrupt {
+        /// The offending file.
+        path: PathBuf,
+        /// What failed to validate.
+        detail: String,
+    },
+}
+
+impl fmt::Display for SpillError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpillError::Io { op, path, detail } => {
+                write!(f, "spill {op} failed for {}: {detail}", path.display())
+            }
+            SpillError::Corrupt { path, detail } => {
+                write!(f, "spill file {} is corrupt: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+/// Snapshot of a store's cumulative ledger (see module docs for the
+/// exact semantics of each counter).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Payload bytes fetched from disk (cache hits charge nothing).
+    pub bytes_read: usize,
+    /// Payload bytes written by [`SpillStore::put`].
+    pub bytes_written: usize,
+    /// Payload bytes currently resident in the cache.
+    pub resident_bytes: usize,
+    /// Lifetime high-water mark of `resident_bytes`.
+    pub peak_resident_bytes: usize,
+}
+
+struct CacheInner {
+    next_id: u64,
+    /// Cached payloads by block id.
+    resident: HashMap<u64, Arc<Matrix>>,
+    /// Ids from least- to most-recently used.
+    lru: Vec<u64>,
+    resident_bytes: usize,
+    peak_resident_bytes: usize,
+    /// High-water mark since the last [`SpillStore::begin_peak_window`]
+    /// — what the metrics layer charges per bracketed product, so a
+    /// window's `peak_resident_bytes` reports that window's own peak
+    /// rather than an earlier product's.
+    window_peak: usize,
+    bytes_read: usize,
+    bytes_written: usize,
+}
+
+/// The out-of-core tier: a private temp directory of write-once block
+/// payload files plus a byte-budgeted LRU page cache (see module docs).
+///
+/// Create one per run with [`SpillStore::with_budget`] (or
+/// [`SpillStore::from_env`], which reads `DSVD_MEMORY_BUDGET`), hand it
+/// to [`super::DistBlockMatrix::spill`], and drop it — together with
+/// the spilled matrix — to remove the directory.
+pub struct SpillStore {
+    dir: PathBuf,
+    budget: usize,
+    inner: Mutex<CacheInner>,
+}
+
+/// Process-wide counter making concurrent stores' directories unique.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl SpillStore {
+    /// Store with an explicit cache budget in bytes (`usize::MAX` =
+    /// everything stays resident once read; `0` = nothing stays cached
+    /// between fetches). The temp directory is created here and removed
+    /// when the store drops.
+    pub fn with_budget(budget: usize) -> Result<Arc<SpillStore>, SpillError> {
+        let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("dsvd-spill-{}-{seq}", std::process::id()));
+        std::fs::create_dir_all(&dir).map_err(|e| SpillError::Io {
+            op: "create dir",
+            path: dir.clone(),
+            detail: e.to_string(),
+        })?;
+        Ok(Arc::new(SpillStore {
+            dir,
+            budget,
+            inner: Mutex::new(CacheInner {
+                next_id: 0,
+                resident: HashMap::new(),
+                lru: Vec::new(),
+                resident_bytes: 0,
+                peak_resident_bytes: 0,
+                window_peak: 0,
+                bytes_read: 0,
+                bytes_written: 0,
+            }),
+        }))
+    }
+
+    /// Store budgeted by the `DSVD_MEMORY_BUDGET` environment variable
+    /// (bytes). Unset or unparsable means unbounded; an explicit `0`
+    /// means what [`SpillStore::with_budget`] says it means — nothing
+    /// stays cached between fetches.
+    pub fn from_env() -> Result<Arc<SpillStore>, SpillError> {
+        let budget = std::env::var("DSVD_MEMORY_BUDGET")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(usize::MAX);
+        Self::with_budget(budget)
+    }
+
+    /// The configured cache budget in bytes.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// The directory holding the per-block payload files (exposed so
+    /// the fault-injection tests can tamper with them).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot of the cumulative ledger.
+    pub fn stats(&self) -> SpillStats {
+        let g = self.inner.lock().unwrap();
+        SpillStats {
+            bytes_read: g.bytes_read,
+            bytes_written: g.bytes_written,
+            resident_bytes: g.resident_bytes,
+            peak_resident_bytes: g.peak_resident_bytes,
+        }
+    }
+
+    /// Start a metering window: the windowed high-water mark restarts
+    /// from the current resident set. The metrics layer brackets each
+    /// operator-wide product with this, so per-product
+    /// `peak_resident_bytes` charges never leak an earlier product's
+    /// peak across a `reset_metrics` boundary.
+    pub(crate) fn begin_peak_window(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.window_peak = g.resident_bytes;
+    }
+
+    /// Highest `resident_bytes` seen since the last
+    /// [`SpillStore::begin_peak_window`] (or store creation).
+    pub(crate) fn peak_in_window(&self) -> usize {
+        self.inner.lock().unwrap().window_peak
+    }
+
+    fn file_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("block-{id}.bin"))
+    }
+
+    /// Spill one dense payload: write it to its own file (header +
+    /// checksummed f64 bytes) and return the descriptor that pages it
+    /// back. The payload is NOT retained in the cache — spilled data
+    /// lives at rest on disk until something reads it.
+    pub fn put(self: &Arc<Self>, m: &Matrix) -> Result<SpilledBlock, SpillError> {
+        let id = {
+            let mut g = self.inner.lock().unwrap();
+            let id = g.next_id;
+            g.next_id += 1;
+            id
+        };
+        let path = self.file_path(id);
+        let payload_bytes = 8 * m.rows() * m.cols();
+        let mut buf = Vec::with_capacity(HEADER_BYTES + payload_bytes);
+        buf.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+        buf.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+        // checksum placeholder, patched once the payload is streamed —
+        // the payload bytes are produced, checksummed, and appended in
+        // one pass so the spill path never holds a second payload copy
+        buf.extend_from_slice(&[0u8; 8]);
+        let mut h = FNV_OFFSET;
+        for &v in m.data() {
+            let bytes = v.to_le_bytes();
+            h = fnv1a_update(h, &bytes);
+            buf.extend_from_slice(&bytes);
+        }
+        buf[24..32].copy_from_slice(&h.to_le_bytes());
+        std::fs::write(&path, &buf).map_err(|e| SpillError::Io {
+            op: "write",
+            path: path.clone(),
+            detail: e.to_string(),
+        })?;
+        self.inner.lock().unwrap().bytes_written += payload_bytes;
+        Ok(SpilledBlock { id, rows: m.rows(), cols: m.cols(), store: Arc::clone(self) })
+    }
+
+    /// Page one block back: a cache hit returns the resident `Arc`
+    /// (free); a miss reads and validates the file, charges
+    /// `bytes_read`, and inserts the payload after evicting LRU entries
+    /// down to the budget. The lock is deliberately held across the
+    /// read: every miss reads its file exactly once and the ledger
+    /// counters stay exact under any task interleaving, at the cost of
+    /// serializing concurrent page-ins — acceptable for the simulated
+    /// cluster, where the comms model (not real disk bandwidth) is the
+    /// quantity under study.
+    fn get(&self, b: &SpilledBlock) -> Result<Arc<Matrix>, SpillError> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(m) = g.resident.get(&b.id).cloned() {
+            // touch: move to most-recently-used
+            if let Some(pos) = g.lru.iter().position(|&x| x == b.id) {
+                g.lru.remove(pos);
+            }
+            g.lru.push(b.id);
+            return Ok(m);
+        }
+        let path = self.file_path(b.id);
+        let m = Arc::new(read_payload(&path, b.rows, b.cols)?);
+        let bytes = 8 * b.rows * b.cols;
+        g.bytes_read += bytes;
+        // a payload that alone exceeds the budget is served uncached
+        // (and must not flush what smaller blocks have cached), so the
+        // resident set never exceeds the budget; otherwise evict
+        // LRU-first until the new payload fits
+        if bytes <= self.budget {
+            while g.resident_bytes.saturating_add(bytes) > self.budget && !g.lru.is_empty() {
+                let victim = g.lru.remove(0);
+                if let Some(v) = g.resident.remove(&victim) {
+                    g.resident_bytes -= 8 * v.rows() * v.cols();
+                }
+            }
+            g.resident.insert(b.id, Arc::clone(&m));
+            g.lru.push(b.id);
+            g.resident_bytes += bytes;
+            g.peak_resident_bytes = g.peak_resident_bytes.max(g.resident_bytes);
+            g.window_peak = g.window_peak.max(g.resident_bytes);
+        }
+        Ok(m)
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        // best-effort: the error path (tests delete files mid-run) must
+        // still end with the directory gone
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Descriptor of one spilled cell: its shape plus a handle to the store
+/// that pages its payload back ([`SpilledBlock::fetch`]). Cloning the
+/// descriptor shares the store; payloads are immutable once written.
+#[derive(Clone)]
+pub struct SpilledBlock {
+    id: u64,
+    rows: usize,
+    cols: usize,
+    store: Arc<SpillStore>,
+}
+
+impl SpilledBlock {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Page the payload in through the store's LRU cache (see
+    /// [`SpillStore`] for the charging rules and failure modes).
+    pub fn fetch(&self) -> Result<Arc<Matrix>, SpillError> {
+        self.store.get(self)
+    }
+
+    /// The store backing this block (the metrics layer brackets
+    /// operator-wide products with its ledger deltas).
+    pub(crate) fn store(&self) -> &Arc<SpillStore> {
+        &self.store
+    }
+}
+
+/// FNV-1a offset basis (the checksum's initial state; the write path
+/// streams [`fnv1a_update`] from here so it never buffers the payload
+/// twice, and the read path folds the whole payload in one call).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a state.
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over the payload bytes — cheap, dependency-free integrity
+/// check; catches the fault-injection suite's bit flips.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&bytes[at..at + 8]);
+    u64::from_le_bytes(w)
+}
+
+/// Read and validate one payload file against the shape the descriptor
+/// promises.
+fn read_payload(path: &Path, rows: usize, cols: usize) -> Result<Matrix, SpillError> {
+    let bytes = std::fs::read(path).map_err(|e| SpillError::Io {
+        op: "read",
+        path: path.to_path_buf(),
+        detail: e.to_string(),
+    })?;
+    let corrupt = |detail: String| SpillError::Corrupt { path: path.to_path_buf(), detail };
+    if bytes.len() < HEADER_BYTES {
+        return Err(corrupt(format!("only {} bytes, header needs {HEADER_BYTES}", bytes.len())));
+    }
+    if read_u64(&bytes, 0) != SPILL_MAGIC {
+        return Err(corrupt("bad magic".to_string()));
+    }
+    let (fr, fc) = (read_u64(&bytes, 8) as usize, read_u64(&bytes, 16) as usize);
+    if (fr, fc) != (rows, cols) {
+        return Err(corrupt(format!("shape {fr}x{fc}, descriptor says {rows}x{cols}")));
+    }
+    let want = HEADER_BYTES + 8 * rows * cols;
+    if bytes.len() != want {
+        return Err(corrupt(format!("{} bytes, expected {want} (truncated?)", bytes.len())));
+    }
+    let payload = &bytes[HEADER_BYTES..];
+    if fnv1a(payload) != read_u64(&bytes, 24) {
+        return Err(corrupt("checksum mismatch".to_string()));
+    }
+    let mut data = Vec::with_capacity(rows * cols);
+    for chunk in payload.chunks_exact(8) {
+        let mut w = [0u8; 8];
+        w.copy_from_slice(chunk);
+        data.push(f64::from_le_bytes(w));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(seed: u64, m: usize, n: usize) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let store = SpillStore::with_budget(usize::MAX).unwrap();
+        let a = randmat(1, 13, 7);
+        let b = store.put(&a).unwrap();
+        assert_eq!((b.rows(), b.cols()), (13, 7));
+        let back = b.fetch().unwrap();
+        assert_eq!(back.data(), a.data());
+        let s = store.stats();
+        assert_eq!(s.bytes_written, 8 * 13 * 7);
+        assert_eq!(s.bytes_read, 8 * 13 * 7);
+        // second fetch is a cache hit: no further read charge
+        let _ = b.fetch().unwrap();
+        assert_eq!(store.stats().bytes_read, 8 * 13 * 7);
+    }
+
+    #[test]
+    fn lru_respects_the_budget() {
+        let bytes = 8 * 4 * 4;
+        // room for exactly two 4x4 payloads
+        let store = SpillStore::with_budget(2 * bytes).unwrap();
+        let blocks: Vec<SpilledBlock> =
+            (0..3).map(|i| store.put(&randmat(10 + i, 4, 4)).unwrap()).collect();
+        let _ = blocks[0].fetch().unwrap();
+        let _ = blocks[1].fetch().unwrap();
+        assert_eq!(store.stats().resident_bytes, 2 * bytes);
+        // third insert evicts block 0 (least recently used)
+        let _ = blocks[2].fetch().unwrap();
+        let s = store.stats();
+        assert_eq!(s.resident_bytes, 2 * bytes);
+        assert_eq!(s.peak_resident_bytes, 2 * bytes);
+        assert_eq!(s.bytes_read, 3 * bytes);
+        // block 0 must re-read (it was evicted), block 2 must not
+        let _ = blocks[2].fetch().unwrap();
+        assert_eq!(store.stats().bytes_read, 3 * bytes);
+        let _ = blocks[0].fetch().unwrap();
+        assert_eq!(store.stats().bytes_read, 4 * bytes);
+    }
+
+    #[test]
+    fn over_budget_payload_served_uncached_without_flushing() {
+        let small = 8 * 2 * 2;
+        let store = SpillStore::with_budget(2 * small).unwrap();
+        let s1 = store.put(&randmat(20, 2, 2)).unwrap();
+        let s2 = store.put(&randmat(21, 2, 2)).unwrap();
+        let big = store.put(&randmat(22, 8, 8)).unwrap(); // 512 B > 64 B budget
+        let _ = s1.fetch().unwrap();
+        let _ = s2.fetch().unwrap();
+        assert_eq!(store.stats().resident_bytes, 2 * small);
+        // an over-budget payload is served but must neither enter the
+        // cache nor flush what the small blocks have cached
+        let _ = big.fetch().unwrap();
+        let s = store.stats();
+        assert_eq!(s.resident_bytes, 2 * small, "over-budget fetch flushed the cache");
+        assert!(s.peak_resident_bytes <= store.budget());
+        let before = s.bytes_read;
+        let _ = s1.fetch().unwrap();
+        let _ = s2.fetch().unwrap();
+        assert_eq!(store.stats().bytes_read, before, "small blocks must still be hits");
+    }
+
+    #[test]
+    fn peak_window_reports_the_windows_own_residency() {
+        let small = 8 * 2 * 2; // 32 B
+        let big = 8 * 8 * 8; // 512 B
+        // room for the big payload OR a small one + slack, never both
+        let store = SpillStore::with_budget(big + small / 2).unwrap();
+        let s1 = store.put(&randmat(40, 2, 2)).unwrap();
+        let b1 = store.put(&randmat(41, 8, 8)).unwrap();
+
+        store.begin_peak_window();
+        let _ = b1.fetch().unwrap();
+        assert_eq!(store.peak_in_window(), big);
+
+        // the big payload is still resident when this window begins, so
+        // its bytes honestly count toward the window's peak...
+        store.begin_peak_window();
+        let _ = s1.fetch().unwrap(); // evicts the big payload
+        assert_eq!(store.peak_in_window(), big);
+
+        // ...but once evicted, a later window no longer inherits the
+        // lifetime mark — it reports its own residency only
+        store.begin_peak_window();
+        let _ = s1.fetch().unwrap(); // cache hit
+        assert_eq!(store.peak_in_window(), small);
+        assert_eq!(store.stats().peak_resident_bytes, big, "lifetime mark unchanged");
+    }
+
+    #[test]
+    fn eviction_changes_no_bits() {
+        let a = randmat(2, 6, 5);
+        // a one-payload budget forces every other fetch to re-read
+        let store = SpillStore::with_budget(8 * 6 * 5).unwrap();
+        let b = store.put(&a).unwrap();
+        let other = store.put(&randmat(3, 6, 5)).unwrap();
+        let first = b.fetch().unwrap().data().to_vec();
+        let _ = other.fetch().unwrap(); // evicts b
+        let again = b.fetch().unwrap().data().to_vec();
+        assert_eq!(first, again);
+        assert_eq!(first, a.data());
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_typed_errors() {
+        let store = SpillStore::with_budget(0).unwrap(); // nothing cached
+        let a = randmat(4, 5, 5);
+        let b = store.put(&a).unwrap();
+        assert!(b.fetch().is_ok());
+        let path = store.dir().join("block-0.bin");
+
+        // truncate
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..HEADER_BYTES + 8]).unwrap();
+        assert!(matches!(b.fetch().unwrap_err(), SpillError::Corrupt { .. }));
+
+        // corrupt one payload byte (length intact)
+        let mut bytes = full.clone();
+        bytes[HEADER_BYTES + 3] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = b.fetch().unwrap_err();
+        assert!(matches!(err, SpillError::Corrupt { .. }), "{err}");
+        assert!(err.to_string().contains("checksum"));
+
+        // delete
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(b.fetch().unwrap_err(), SpillError::Io { .. }));
+
+        // restore: the payload reads cleanly again
+        std::fs::write(&path, &full).unwrap();
+        assert_eq!(b.fetch().unwrap().data(), a.data());
+    }
+
+    #[test]
+    fn temp_dir_removed_on_drop() {
+        let store = SpillStore::with_budget(usize::MAX).unwrap();
+        let dir = store.dir().to_path_buf();
+        let b = store.put(&randmat(5, 3, 3)).unwrap();
+        assert!(dir.exists());
+        drop(store);
+        // the block still holds the store alive
+        assert!(dir.exists());
+        drop(b);
+        assert!(!dir.exists());
+    }
+
+    #[test]
+    fn env_budget_parsing() {
+        // hermetic: drive the variable explicitly (no other test in
+        // this binary reads it)
+        std::env::remove_var("DSVD_MEMORY_BUDGET");
+        assert_eq!(SpillStore::from_env().unwrap().budget(), usize::MAX);
+        std::env::set_var("DSVD_MEMORY_BUDGET", "4096");
+        assert_eq!(SpillStore::from_env().unwrap().budget(), 4096);
+        // an explicit 0 caches nothing — NOT unbounded
+        std::env::set_var("DSVD_MEMORY_BUDGET", "0");
+        assert_eq!(SpillStore::from_env().unwrap().budget(), 0);
+        std::env::set_var("DSVD_MEMORY_BUDGET", "not-a-number");
+        assert_eq!(SpillStore::from_env().unwrap().budget(), usize::MAX);
+        std::env::remove_var("DSVD_MEMORY_BUDGET");
+    }
+}

@@ -11,7 +11,9 @@
 //! to show. Only R factors move between executors (n×n each), never
 //! row data: that is the communication-avoiding part.
 //!
-//! Three entry points:
+//! Entry points (plus [`tsqr_r_csr`], the R-only path for sparse
+//! [`DistRowCsrMatrix`] row slabs — leaf tasks densify their slab
+//! transiently and the merges reuse the same dense R tree):
 //!
 //! * [`tsqr_r`] — R only. The paper's Spark implementation stops here
 //!   and reconstitutes Q implicitly as `A·R₁₁⁻¹` (see
@@ -51,6 +53,7 @@ use std::sync::Arc;
 
 use super::context::{chunk_owned, Context};
 use super::matrix::{DistRowMatrix, RowPartition};
+use super::row_csr::DistRowCsrMatrix;
 
 /// Result of an explicit-Q TSQR: `a = q · r` with `q` distributed in
 /// `a`'s partitioning and `r` (k×n, k = min(m, n)) on the driver.
@@ -94,8 +97,37 @@ pub fn tsqr_r(ctx: &Context, a: &DistRowMatrix) -> Matrix {
         .iter()
         .map(|p| Box::new(move || thin_qr(&p.data).r) as Box<dyn FnOnce() -> Matrix + Send + '_>)
         .collect();
-    let mut level = ctx.stage(tasks);
+    let level = ctx.stage(tasks);
+    reduce_r_tree(ctx, level)
+}
 
+/// R-only TSQR of a **sparse** row matrix — the TSQR entry point of
+/// [`DistRowCsrMatrix`]: each leaf task densifies its CSR slab
+/// transiently inside the task (`O(slab)` resident, exactly the bits
+/// the slab compressed) and factors it, then the merges run the shared
+/// dense R tree. Bit-identical to [`tsqr_r`] over the densified matrix
+/// with the same partitioning; charges one ledger pass of the sparse
+/// data at rest.
+pub fn tsqr_r_csr(ctx: &Context, a: &DistRowCsrMatrix) -> Matrix {
+    assert!(!a.parts.is_empty(), "tsqr_r_csr of an empty matrix");
+    ctx.add_pass(a.num_partitions());
+    let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = a
+        .parts
+        .iter()
+        .map(|p| {
+            Box::new(move || thin_qr(&p.data.to_dense()).r)
+                as Box<dyn FnOnce() -> Matrix + Send + '_>
+        })
+        .collect();
+    let level = ctx.stage(tasks);
+    reduce_r_tree(ctx, level)
+}
+
+/// The fan-in-wide R-factor merge tree shared by every R-only TSQR
+/// entry point: each level stacks every group's Rs and re-factors the
+/// stack, one parallel stage per level, each merge task charged the
+/// bytes of the Rs it receives.
+fn reduce_r_tree(ctx: &Context, mut level: Vec<Matrix>) -> Matrix {
     let fan = ctx.fan_in();
     while level.len() > 1 {
         let bytes = group_r_bytes(&level, fan);
@@ -544,6 +576,33 @@ mod tests {
         let r = tsqr_r(&ctx, &d);
         let kept = crate::linalg::qr::significant_diagonal(&r, 1e-11);
         assert_eq!(kept.len(), 3, "kept {kept:?}");
+    }
+
+    #[test]
+    fn csr_tsqr_r_bit_identical_to_dense() {
+        // the leaf tasks factor the identical bits the slabs compressed,
+        // and the merge tree is shared code — R must match to the bit
+        let mut rng = Rng::seed(13);
+        let a = crate::linalg::Matrix::from_fn(90, 10, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.gauss()
+            } else {
+                0.0
+            }
+        });
+        for fan in [2usize, 4] {
+            let ctx = Context::new(4).with_fan_in(fan);
+            let dense = DistRowMatrix::from_matrix(&a, 13);
+            let sparse = DistRowCsrMatrix::from_matrix(&a, 13);
+            let r_dense = tsqr_r(&ctx, &dense);
+            ctx.reset_metrics();
+            let r_sparse = tsqr_r_csr(&ctx, &sparse);
+            let m = ctx.take_metrics();
+            assert_eq!(r_dense.data(), r_sparse.data(), "fan={fan}");
+            // the sparse entry charges exactly one pass of the data at rest
+            assert_eq!(m.a_passes, 1);
+            assert_eq!(m.blocks_materialized, sparse.num_partitions());
+        }
     }
 
     #[test]

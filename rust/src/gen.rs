@@ -23,7 +23,7 @@
 //! [`DctBlockTestMatrix::generate_implicit`] (the paper's own test
 //! matrices with `O(block)` resident memory).
 
-use crate::dist::{BlockStorage, Context, DistBlockMatrix, DistRowMatrix};
+use crate::dist::{BlockStorage, Context, DistBlockMatrix, DistRowCsrMatrix, DistRowMatrix};
 use crate::linalg::dct::{dct_entry, dct_matrix};
 use crate::linalg::{Csr, Matrix};
 use crate::runtime::compute::{Compute, NativeCompute};
@@ -279,6 +279,18 @@ impl SparseRandTestMatrix {
             ),
         }
     }
+
+    /// Generate as tall **sparse** CSR row slabs — the
+    /// [`DistRowCsrMatrix`] input of the sparse tall-skinny pipeline
+    /// (`algs::algorithm1_csr`–`algorithm4_csr`, `dist::tsqr_r_csr`).
+    /// Entries are the same per-entry hash as every other storage, so
+    /// the slabs represent the identical operator.
+    pub fn generate_csr_rows(&self, ctx: &Context, rows_per_part: usize) -> DistRowCsrMatrix {
+        let g = *self;
+        DistRowCsrMatrix::generate_csr(ctx, self.m, self.n, rows_per_part, move |r0, r1| {
+            g.block_csr(r0, r1, 0, g.n)
+        })
+    }
 }
 
 /// Sparse test matrix with an **exactly prescribed spectrum**:
@@ -345,6 +357,16 @@ impl SparseSpectrumTestMatrix {
     /// Dense block at (r0..r1) × (c0..c1).
     pub fn block_dense(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
         self.block_csr(r0, r1, c0, c1).to_dense()
+    }
+
+    /// Generate as tall **sparse** CSR row slabs with the exactly
+    /// prescribed spectrum — the accuracy workload of the sparse
+    /// tall-skinny pipeline (requires m ≥ n only for the algorithms
+    /// that assume tall inputs, not here).
+    pub fn generate_csr_rows(&self, ctx: &Context, rows_per_part: usize) -> DistRowCsrMatrix {
+        DistRowCsrMatrix::generate_csr(ctx, self.m, self.n, rows_per_part, |r0, r1| {
+            self.block_csr(r0, r1, 0, self.n)
+        })
     }
 
     /// Generate as a distributed block matrix in the requested storage.
@@ -645,6 +667,21 @@ mod tests {
         ] {
             assert_eq!(g.generate(&ctx, 7, 5, storage).collect(&ctx), dense);
         }
+    }
+
+    #[test]
+    fn csr_row_generators_match_dense() {
+        let ctx = Context::new(3);
+        let g = SparseRandTestMatrix::new(33, 21, 0.2, 7);
+        let rows = g.generate_csr_rows(&ctx, 10);
+        assert_eq!(rows.rows(), 33);
+        assert_eq!(rows.cols(), 21);
+        assert_eq!(rows.collect(&ctx), g.block_dense(0, 33, 0, 21));
+        assert!(rows.storage_bytes() < 8 * 33 * 21, "CSR slabs must beat dense storage");
+
+        let sigma: Vec<f64> = (0..5).map(|j| 0.5f64.powi(j as i32)).collect();
+        let gs = SparseSpectrumTestMatrix::new(24, 18, &sigma, 99);
+        assert_eq!(gs.generate_csr_rows(&ctx, 7).collect(&ctx), gs.block_dense(0, 24, 0, 18));
     }
 
     #[test]

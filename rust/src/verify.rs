@@ -11,7 +11,7 @@
 //! Verification time is kept OUT of the algorithm metrics: callers run it
 //! after `Context::take_metrics()`, matching the paper's protocol.
 
-use crate::dist::{Context, DistBlockMatrix, DistOp, DistRowMatrix};
+use crate::dist::{Context, DistBlockMatrix, DistOp, DistRowCsrMatrix, DistRowMatrix};
 use crate::linalg::blas::{matmul, nrm2};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -19,17 +19,48 @@ use crate::runtime::compute::Compute;
 
 /// Anything that can act as a linear operator `R^n → R^m` distributedly
 /// — the mat-vec-only face of [`DistOp`] that the power method needs
-/// (implemented for both distributed layouts, for `&dyn DistOp` trait
+/// (implemented for the distributed layouts, for `&dyn DistOp` trait
 /// objects, and for the never-formed [`ResidualOp`]).
+///
+/// The two `op_normal_step*` methods are what [`spectral_norm`] drives:
+/// one power iteration on the normal operator is exactly the pair
+/// `(y, z) = (op·x, opᵀ·(op·x))`, so operators with a fused
+/// single-traversal plan override them (forwarding to
+/// [`DistOp::fused_normal_matvec`] / [`DistOp::fused_normal_matvec_sub`])
+/// and a verification iteration reads the data at rest **once** instead
+/// of twice. Defaults are the two-call fallback; overrides must stay
+/// bit-identical to it.
 pub trait LinOp {
     fn op_rows(&self) -> usize;
     fn op_cols(&self) -> usize;
     fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64>;
     fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64>;
+
+    /// One power-method step on the normal operator:
+    /// `(y, z) = (op·x, opᵀ·(op·x))`.
+    fn op_normal_step(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let y = self.op_matvec(ctx, x);
+        let z = self.op_rmatvec(ctx, &y);
+        (y, z)
+    }
+
+    /// Corrected power-method step:
+    /// `(y, z) = (op·x − c, opᵀ·(op·x − c))` — what [`ResidualOp`]
+    /// needs from its inner operator, since the `U·diag(s)·Vᵀ` part of
+    /// the residual is computable before A is touched.
+    fn op_normal_step_sub(&self, ctx: &Context, x: &[f64], c: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let ax = self.op_matvec(ctx, x);
+        let y: Vec<f64> = ax.iter().zip(c).map(|(a, b)| a - b).collect();
+        let z = self.op_rmatvec(ctx, &y);
+        (y, z)
+    }
 }
 
 /// Every distributed operator verifies through the same power-iteration
-/// path, whatever its storage backend.
+/// path, whatever its storage backend — and inherits its fused
+/// single-traversal normal step, so verification costs one A pass per
+/// iteration on every backend that overrides the `DistOp` fused
+/// methods (the `UnfusedOp` ablation wrapper keeps the two-pass plan).
 impl<'a> LinOp for &'a dyn DistOp {
     fn op_rows(&self) -> usize {
         (**self).rows()
@@ -42,6 +73,12 @@ impl<'a> LinOp for &'a dyn DistOp {
     }
     fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
         (**self).rmatvec(ctx, y)
+    }
+    fn op_normal_step(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        (**self).fused_normal_matvec(ctx, x)
+    }
+    fn op_normal_step_sub(&self, ctx: &Context, x: &[f64], c: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        (**self).fused_normal_matvec_sub(ctx, x, c)
     }
 }
 
@@ -58,6 +95,12 @@ impl LinOp for DistRowMatrix {
     fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
         self.rmatvec(ctx, y)
     }
+    fn op_normal_step(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_matvec(ctx, x)
+    }
+    fn op_normal_step_sub(&self, ctx: &Context, x: &[f64], c: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_matvec_sub(ctx, x, c)
+    }
 }
 
 impl LinOp for DistBlockMatrix {
@@ -72,6 +115,33 @@ impl LinOp for DistBlockMatrix {
     }
     fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
         self.rmatvec(ctx, y)
+    }
+    fn op_normal_step(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_matvec(ctx, x)
+    }
+    fn op_normal_step_sub(&self, ctx: &Context, x: &[f64], c: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_matvec_sub(ctx, x, c)
+    }
+}
+
+impl LinOp for DistRowCsrMatrix {
+    fn op_rows(&self) -> usize {
+        self.rows()
+    }
+    fn op_cols(&self) -> usize {
+        self.cols()
+    }
+    fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        self.matvec(ctx, x)
+    }
+    fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        self.rmatvec(ctx, y)
+    }
+    fn op_normal_step(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_matvec(ctx, x)
+    }
+    fn op_normal_step_sub(&self, ctx: &Context, x: &[f64], c: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.fused_normal_matvec_sub(ctx, x, c)
     }
 }
 
@@ -106,10 +176,36 @@ impl<'a> LinOp for ResidualOp<'a> {
         let vs = crate::linalg::blas::gemv(self.v, &suty);
         aty.iter().zip(&vs).map(|(a, b)| a - b).collect()
     }
+
+    /// One verification iteration with ONE traversal of A (the ROADMAP
+    /// fused-verifier item): the correction `c = U(s ⊙ Vᵀx)` only
+    /// touches the small factors, so the inner operator serves
+    /// `y = A·x − c` and `Aᵀ·y` from a single fused pass
+    /// ([`LinOp::op_normal_step_sub`]); the factor-side terms of
+    /// `Eᵀ·y` subtract on the driver. Bit-identical to the
+    /// `op_matvec` → `op_rmatvec` pair by the fused-sub contract
+    /// (pinned in `tests/op_equivalence.rs`, together with the pass
+    /// drop: `iters` passes fused vs `2·iters` unfused).
+    fn op_normal_step(&self, ctx: &Context, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let vtx = crate::linalg::blas::gemv_t(self.v, x);
+        let svtx: Vec<f64> = vtx.iter().zip(self.s).map(|(a, b)| a * b).collect();
+        let c = self.u.matvec(ctx, &svtx); // U is a row-slab factor: no A pass
+        let (y, aty) = self.a.op_normal_step_sub(ctx, x, &c);
+        let uty = self.u.rmatvec(ctx, &y);
+        let suty: Vec<f64> = uty.iter().zip(self.s).map(|(a, b)| a * b).collect();
+        let vs = crate::linalg::blas::gemv(self.v, &suty);
+        let z = aty.iter().zip(&vs).map(|(a, b)| a - b).collect();
+        (y, z)
+    }
 }
 
 /// Spectral norm of an operator by the power method on `EᵀE`, run for a
-/// fixed (large) number of iterations as the paper does.
+/// fixed (large) number of iterations as the paper does. Each iteration
+/// issues ONE [`LinOp::op_normal_step`] — a single traversal of the
+/// data at rest on every fused operator (and on [`ResidualOp`], whose
+/// factor corrections ride the same pass) — where the pre-fusion loop
+/// issued the matvec/rmatvec pair; the numbers are bit-identical by the
+/// fused contract.
 pub fn spectral_norm(ctx: &Context, op: &dyn LinOp, iters: usize, seed: u64) -> f64 {
     let n = op.op_cols();
     if n == 0 || op.op_rows() == 0 {
@@ -123,12 +219,11 @@ pub fn spectral_norm(ctx: &Context, op: &dyn LinOp, iters: usize, seed: u64) -> 
     }
     let mut est = 0.0f64;
     for _ in 0..iters {
-        let y = op.op_matvec(ctx, &x);
+        let (y, z) = op.op_normal_step(ctx, &x);
         let ny = nrm2(&y);
         if ny == 0.0 {
             return 0.0;
         }
-        let z = op.op_rmatvec(ctx, &y);
         let nz = nrm2(&z);
         // Two convergent lower bounds on σ₁ for unit x:
         //   ‖Ex‖, and the Rayleigh-style ‖Eᵀŷ‖ = ‖EᵀEx‖ / ‖Ex‖.
@@ -246,6 +341,48 @@ mod tests {
         let via_trait = spectral_norm(&ctx, &op, 40, 9);
         let via_concrete = spectral_norm(&ctx, &d, 40, 9);
         assert_eq!(via_trait.to_bits(), via_concrete.to_bits());
+    }
+
+    /// A wrapper that hides every fused override, so `spectral_norm`
+    /// runs on the trait's two-call defaults — the pre-fusion plan.
+    struct PlainLinOp<'a>(&'a DistBlockMatrix);
+    impl<'a> LinOp for PlainLinOp<'a> {
+        fn op_rows(&self) -> usize {
+            self.0.rows()
+        }
+        fn op_cols(&self) -> usize {
+            self.0.cols()
+        }
+        fn op_matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+            self.0.matvec(ctx, x)
+        }
+        fn op_rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+            self.0.rmatvec(ctx, y)
+        }
+    }
+
+    #[test]
+    fn fused_normal_step_changes_no_bits() {
+        // the fused per-iteration step (one A traversal) must produce
+        // the identical estimate to the two-call default plan — for the
+        // bare operator and for the residual around a factorization
+        let ctx = Context::new(4);
+        let mut rng = Rng::seed(104);
+        let a = Matrix::from_fn(30, 9, |_, _| rng.gauss());
+        let d = DistBlockMatrix::from_matrix(&a, 8, 4);
+        let fused = spectral_norm(&ctx, &d, 25, 11);
+        let plain = spectral_norm(&ctx, &PlainLinOp(&d), 25, 11);
+        assert_eq!(fused.to_bits(), plain.to_bits());
+
+        let r = crate::linalg::svd::svd(&a);
+        let u = DistRowMatrix::from_matrix(&r.u, 7);
+        let resid = ResidualOp { a: &d, u: &u, s: &r.s, v: &r.v };
+        // reference: the residual around the two-call inner operator
+        let plain_op = PlainLinOp(&d);
+        let resid_plain = ResidualOp { a: &plain_op, u: &u, s: &r.s, v: &r.v };
+        let got = spectral_norm(&ctx, &resid, 25, 12);
+        let want = spectral_norm(&ctx, &resid_plain, 25, 12);
+        assert_eq!(got.to_bits(), want.to_bits());
     }
 
     #[test]

@@ -10,12 +10,14 @@
 //! for instruction).
 
 use dsvd::algs::{algorithm7, algorithm8, DistSvd, LowRankOpts};
-use dsvd::dist::{BlockStorage, Context, DistBlockMatrix, UnfusedOp};
+use dsvd::dist::{BlockStorage, Context, DistBlockMatrix, DistOp, UnfusedOp};
 use dsvd::gen::{SparseRandTestMatrix, SparseSpectrumTestMatrix};
 use dsvd::linalg::{blas, Matrix};
 use dsvd::rng::Rng;
 use dsvd::runtime::compute::NativeCompute;
-use dsvd::verify::{max_entry_gram_minus_identity, max_entry_gram_minus_identity_local};
+use dsvd::verify::{
+    max_entry_gram_minus_identity, max_entry_gram_minus_identity_local, spectral_norm, ResidualOp,
+};
 
 const BACKENDS: [(&str, BlockStorage); 3] = [
     ("dense", BlockStorage::Dense),
@@ -209,6 +211,43 @@ fn fused_loop_halves_implicit_passes() {
     for (pf, pu) in fused.u.parts.iter().zip(&unfused.u.parts) {
         assert_eq!(pf.data.data(), pu.data.data(), "U must not change under fusion");
     }
+}
+
+#[test]
+fn residual_verification_reads_a_once_per_iteration() {
+    // the fused-verifier item: spectral-norm verification of a
+    // factorization drives the residual through ONE A traversal per
+    // power iteration (`fused_normal_matvec_sub` carries the factor
+    // correction inside the pass), where the pre-fusion plan issued the
+    // matvec/rmatvec pair — at a bit-identical estimate. The UnfusedOp
+    // wrapper restores the two-pass plan for the comparison.
+    let g = SparseRandTestMatrix::new(96, 64, 0.25, 0x0E1);
+    let ctx = Context::new(8);
+    let be = NativeCompute;
+    let a = g.generate(&ctx, 32, 32, BlockStorage::Dense);
+    let out = algorithm7(&ctx, &be, &a, &opts(8, 2));
+    let iters = 6usize;
+
+    let op: &dyn DistOp = &a;
+    ctx.reset_metrics();
+    let resid = ResidualOp { a: &op, u: &out.u, s: &out.s, v: &out.v };
+    let fused_est = spectral_norm(&ctx, &resid, iters, 9);
+    let mf = ctx.take_metrics();
+    assert_eq!(mf.a_passes, iters, "fused verification: one A pass per iteration");
+
+    let unfused = UnfusedOp(&a);
+    let uop: &dyn DistOp = &unfused;
+    ctx.reset_metrics();
+    let resid_u = ResidualOp { a: &uop, u: &out.u, s: &out.s, v: &out.v };
+    let unfused_est = spectral_norm(&ctx, &resid_u, iters, 9);
+    let mu = ctx.take_metrics();
+    assert_eq!(mu.a_passes, 2 * iters, "unfused verification: two A passes per iteration");
+
+    assert_eq!(
+        fused_est.to_bits(),
+        unfused_est.to_bits(),
+        "fusing the verifier must not change the estimate: {fused_est} vs {unfused_est}"
+    );
 }
 
 #[test]

@@ -5,8 +5,10 @@
 #                                warnings), tier-1 (build + tests), and
 #                                the scaled benches ->
 #                                BENCH_tall_skinny.json, BENCH_lowrank.json,
-#                                BENCH_gen.json, BENCH_sparse.json
-#                                (fails if any record was not written)
+#                                BENCH_gen.json, BENCH_sparse.json,
+#                                BENCH_fused.json, BENCH_ooc.json
+#                                (fails if any record was not written; the
+#                                fused and out-of-core benches also gate)
 #   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
 #                                scaling acceptance test (>=4 cores)
 #
@@ -82,9 +84,18 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_fused.json" \
     cargo bench --bench tables_fused
 
+# the out-of-core sweep is likewise a GATE: the bench panics unless the
+# spilled runs are bit-identical to the resident plan at every budget,
+# stay within the memory budget, and add zero A passes
+echo "== scaled bench + out-of-core gates: tables_ooc (DSVD_BENCH_SCALE=${SCALE})"
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_ooc.json" \
+    cargo bench --bench tables_ooc
+
 # every expected perf record must exist and be non-empty
 for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
-         BENCH_fused.json; do
+         BENCH_fused.json BENCH_ooc.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
@@ -97,7 +108,21 @@ for mode in fused unfused; do
         exit 1
     fi
 done
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json"
+# the out-of-core record must include a genuinely sub-budget run (one
+# block resident) whose pass count matched the all-resident plan
+if ! grep -q '"budget_blocks": "1"' BENCH_ooc.json; then
+    echo "!! BENCH_ooc.json lacks the one-block-budget record" >&2
+    exit 1
+fi
+if grep -q '"a_passes_match_resident": false' BENCH_ooc.json; then
+    echo "!! an out-of-core run added A passes over the all-resident plan" >&2
+    exit 1
+fi
+if ! grep -q '"a_passes_match_resident": true' BENCH_ooc.json; then
+    echo "!! BENCH_ooc.json lacks the pass-equality gate field" >&2
+    exit 1
+fi
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json"
 
 if [ "${FULL:-0}" = "1" ]; then
     # the worker-scaling check gates in the debug tier-1 run already
