@@ -51,16 +51,19 @@ pub fn ensure_sweep_comms(cfg: &mut RunConfig) {
 }
 
 /// The metrics fields shared by every bench JSON record (the pass
-/// ledger and the out-of-core spill ledger ride along so
-/// fused-vs-unfused and resident-vs-spilled comparisons are
-/// reproducible from the records alone).
+/// ledger, the out-of-core spill ledger, and the fault-tolerance
+/// counters ride along so fused-vs-unfused, resident-vs-spilled, and
+/// faulted-vs-fault-free comparisons are reproducible from the records
+/// alone).
 #[allow(dead_code)]
 pub fn metrics_json(m: &Metrics) -> String {
     format!(
         "\"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
          \"comms_time\": {:e}, \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}, \
          \"a_passes\": {}, \"blocks_materialized\": {}, \"spill_bytes_read\": {}, \
-         \"spill_bytes_written\": {}, \"peak_resident_bytes\": {}",
+         \"spill_bytes_written\": {}, \"peak_resident_bytes\": {}, \
+         \"faults_injected\": {}, \"tasks_retried\": {}, \"speculative_launches\": {}, \
+         \"recoveries\": {}, \"health_checks_run\": {}",
         m.cpu_time,
         m.wall_clock,
         m.driver_elapsed,
@@ -72,7 +75,12 @@ pub fn metrics_json(m: &Metrics) -> String {
         m.blocks_materialized,
         m.spill_bytes_read,
         m.spill_bytes_written,
-        m.peak_resident_bytes
+        m.peak_resident_bytes,
+        m.faults_injected,
+        m.tasks_retried,
+        m.speculative_launches,
+        m.recoveries,
+        m.health_checks_run
     )
 }
 

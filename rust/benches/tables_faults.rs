@@ -1,0 +1,161 @@
+//! Fault-injection sweep: the same Algorithm 7 run under seeded fault
+//! rates 0 / 0.1 / 0.3 (panics, transient I/O and corruption errors,
+//! stragglers), against the fault-free run as the reference. Hard
+//! gates, not just records:
+//!
+//!   * every recovered run MUST be bit-identical to the fault-free run
+//!     (tasks are pure over their partition inputs, so retry and
+//!     speculation change scheduling, never a number);
+//!   * every nonzero rate MUST actually inject faults (the sweep really
+//!     swept), and the retry budget must never exhaust.
+//!
+//! Any violated gate panics, which fails `scripts/verify.sh`. Writes
+//! `BENCH_faults.json`; each record carries the fault `rate`, the
+//! computed `recovered_bit_identical` flag the verify gate greps, the
+//! retry counters (inside the shared metrics fields), and
+//! `wall_overhead_vs_fault_free` — the simulated wall-clock cost of
+//! the injected faults (backoff + straggle charges, never slept).
+//!
+//!     cargo bench --bench tables_faults
+
+mod bench_common;
+
+use bench_common::{bench_config, metrics_json, write_bench_json};
+use dsvd::algs::{algorithm7, DistSvd, LowRankOpts};
+use dsvd::dist::{BlockStorage, Context, FaultKind, FaultPlan, Metrics};
+use dsvd::gen::SparseRandTestMatrix;
+use dsvd::harness::sci;
+use dsvd::runtime::compute::Compute;
+
+type Snapshot = (Vec<f64>, Vec<f64>, Vec<Vec<f64>>);
+
+fn snapshot(out: &DistSvd) -> Snapshot {
+    (
+        out.s.clone(),
+        out.v.data().to_vec(),
+        out.u.parts.iter().map(|p| p.data.data().to_vec()).collect(),
+    )
+}
+
+fn run_alg7(
+    ctx: &Context,
+    be: &dyn Compute,
+    g: &SparseRandTestMatrix,
+    rpb: usize,
+    cpb: usize,
+    opts: &LowRankOpts,
+) -> (Snapshot, Metrics) {
+    // meter generation + factorization end-to-end: the fault schedule
+    // covers every stage of the pipeline, so the record should too
+    ctx.reset_metrics();
+    let a = g.generate(ctx, rpb, cpb, BlockStorage::Dense);
+    let out = algorithm7(ctx, be, &a, opts);
+    (snapshot(&out), ctx.take_metrics())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    rate: f64,
+    m: usize,
+    n: usize,
+    l: usize,
+    iters: usize,
+    recovered: bool,
+    overhead: f64,
+    metrics: &Metrics,
+) -> String {
+    format!(
+        "\"table\": \"FAULTS\", \"rate\": {rate}, \"m\": {m}, \"n\": {n}, \"l\": {l}, \
+         \"iters\": {iters}, \"algorithm\": \"7\", \"recovered_bit_identical\": {recovered}, \
+         \"wall_overhead_vs_fault_free\": {overhead:e}, {}",
+        metrics_json(metrics),
+    )
+}
+
+fn main() {
+    let (mut cfg, be, scale) = bench_config();
+    let n = 256usize;
+    let m = (16384 / scale).max(2 * n);
+    let (l, iters) = (10usize, 2usize);
+    let (rpb, cpb) = (256usize, 128usize);
+    let density = 0.05f64;
+
+    cfg.executors = 18;
+    cfg.rows_per_part = rpb;
+    cfg.cols_per_part = cpb;
+    let mut opts = LowRankOpts::new(l, iters);
+    opts.rows_per_part = rpb;
+    opts.ts = cfg.ts_opts();
+
+    println!("================================================================");
+    println!(
+        "Fault-injection sweep — Algorithm 7, m={m} n={n} l={l} i={iters}, \
+         blocks {rpb}x{cpb}, backend={}",
+        be.name()
+    );
+    println!("----------------------------------------------------------------");
+
+    let g = SparseRandTestMatrix::new(m, n, density, cfg.seed ^ 0x0FA);
+
+    let ctx = cfg.context();
+    let (reference, m_free) = run_alg7(&ctx, be.as_ref(), &g, rpb, cpb, &opts);
+
+    println!(
+        "{:>6}  {:>8}  {:>8}  {:>10}  {:>6}  {:>14}  {:>10}",
+        "rate", "injected", "retried", "recovered", "spec", "wall-clock", "overhead"
+    );
+    println!(
+        "{:>6}  {:>8}  {:>8}  {:>10}  {:>6}  {:>14}  {:>10}",
+        "0",
+        0,
+        0,
+        0,
+        0,
+        sci(m_free.wall_clock),
+        "1.0"
+    );
+    let mut records =
+        vec![record(0.0, m, n, l, iters, true, 1.0, &m_free)];
+
+    for rate in [0.1f64, 0.3] {
+        // the seeded random schedule, plus one pinned recoverable fault
+        // at stage 1 so the injected-something gate cannot depend on how
+        // many draws a scaled-down run happens to make
+        let plan = FaultPlan::seeded(cfg.seed ^ 0xFA17, rate)
+            .with_straggle_delay(0.5)
+            .with_target(1, 0, FaultKind::TransientIo);
+        let ctx = cfg.context().with_fault_plan(plan);
+        let (snap, mm) = run_alg7(&ctx, be.as_ref(), &g, rpb, cpb, &opts);
+
+        // ---- gates ------------------------------------------------
+        let recovered = snap == reference;
+        assert!(
+            recovered,
+            "GATE: rate {rate}: recovered run is not bit-identical to fault-free"
+        );
+        assert!(
+            mm.faults_injected > 0,
+            "GATE: rate {rate}: the sweep injected nothing"
+        );
+
+        let overhead = mm.wall_clock / m_free.wall_clock;
+        println!(
+            "{:>6}  {:>8}  {:>8}  {:>10}  {:>6}  {:>14}  {:>10}",
+            rate,
+            mm.faults_injected,
+            mm.tasks_retried,
+            mm.recoveries,
+            mm.speculative_launches,
+            sci(mm.wall_clock),
+            sci(overhead)
+        );
+        records.push(record(rate, m, n, l, iters, recovered, overhead, &mm));
+    }
+
+    println!(
+        "gate OK: every recovered run bit-identical to fault-free, every nonzero \
+         rate injected faults"
+    );
+
+    write_bench_json("BENCH_faults.json", &records);
+}

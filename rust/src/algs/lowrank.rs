@@ -31,10 +31,10 @@
 //! `scripts/verify.sh` / `benches/tables_fused.rs`.
 
 use super::tall_skinny::{
-    algorithm1, algorithm2, algorithm3, algorithm4, keep_indices, unmix_columns, DistSvd,
-    TallSkinnyOpts,
+    algorithm1, algorithm2, algorithm3, algorithm4, check_svd_health, keep_indices,
+    unmix_columns, DistSvd, TallSkinnyOpts,
 };
-use crate::dist::{tsqr_r, Context, DistOp, DistRowMatrix};
+use crate::dist::{catch_dsvd, tsqr_r, Context, DistOp, DistRowMatrix, DsvdError, HealthCheck};
 use crate::linalg::qr::{significant_prefix, tri_inverse_upper};
 use crate::linalg::svd::svd;
 use crate::linalg::{blas, Matrix};
@@ -254,6 +254,60 @@ pub fn algorithm8(
 ) -> DistSvd {
     let q = algorithm5(ctx, be, a, TsMethod::Gram, opts);
     algorithm6(ctx, be, a, &q)
+}
+
+// ---------------------------------------------------------------------------
+// fault-tolerant surfaces: typed errors + stage-boundary health guards
+// ---------------------------------------------------------------------------
+
+/// Fault-tolerant [`algorithm5`]: an unrecovered stage failure returns
+/// a typed [`DsvdError`] instead of panicking, and the subspace factor
+/// Q is screened (finite scan + `MaxEntry(|QᵀQ − I|)` drift) before it
+/// is handed out. Under a fault plan within the retry budget, the `Ok`
+/// factor is bit-identical to a fault-free run.
+pub fn try_algorithm5(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &dyn DistOp,
+    method: TsMethod,
+    opts: &LowRankOpts,
+    health: &HealthCheck,
+) -> Result<DistRowMatrix, DsvdError> {
+    let q = catch_dsvd(|| algorithm5(ctx, be, a, method, opts))?;
+    health.check_finite_dist(ctx, "Q", &q)?;
+    if health.orthonormal_tol.is_some() {
+        let drift = crate::verify::max_entry_gram_minus_identity(ctx, be, &q);
+        health.check_orthonormal(ctx, "Q", drift)?;
+    }
+    Ok(q)
+}
+
+/// Fault-tolerant [`algorithm7`] — see [`try_algorithm5`]; the finished
+/// factors additionally pass the full SVD health screen (finite U/Σ/V +
+/// U orthonormality drift).
+pub fn try_algorithm7(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &dyn DistOp,
+    opts: &LowRankOpts,
+    health: &HealthCheck,
+) -> Result<DistSvd, DsvdError> {
+    let out = catch_dsvd(|| algorithm7(ctx, be, a, opts))?;
+    check_svd_health(ctx, be, &out, health)?;
+    Ok(out)
+}
+
+/// Fault-tolerant [`algorithm8`] — see [`try_algorithm7`].
+pub fn try_algorithm8(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &dyn DistOp,
+    opts: &LowRankOpts,
+    health: &HealthCheck,
+) -> Result<DistSvd, DsvdError> {
+    let out = catch_dsvd(|| algorithm8(ctx, be, a, opts))?;
+    check_svd_health(ctx, be, &out, health)?;
+    Ok(out)
 }
 
 #[cfg(test)]

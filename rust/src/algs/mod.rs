@@ -11,9 +11,11 @@ pub mod tall_skinny;
 
 pub use arnoldi::{preexisting_lowrank, ArnoldiOpts};
 pub use lowrank::{
-    algorithm5, algorithm6, algorithm7, algorithm8, LowRankOpts, TsMethod,
+    algorithm5, algorithm6, algorithm7, algorithm8, try_algorithm5, try_algorithm7,
+    try_algorithm8, LowRankOpts, TsMethod,
 };
 pub use tall_skinny::{
     algorithm1, algorithm1_csr, algorithm1_explicit_q, algorithm2, algorithm2_csr, algorithm3,
-    algorithm3_csr, algorithm4, algorithm4_csr, preexisting, DistSvd, TallInput, TallSkinnyOpts,
+    algorithm3_csr, algorithm4, algorithm4_csr, preexisting, try_algorithm2, try_preexisting,
+    DistSvd, TallInput, TallSkinnyOpts,
 };

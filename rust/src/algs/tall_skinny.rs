@@ -25,7 +25,10 @@
 //! for orthonormalization, and the power-method verification path
 //! accepts every `DistOp` via [`crate::verify::LinOp`].
 
-use crate::dist::{tsqr, tsqr_r, Context, DistRowCsrMatrix, DistRowMatrix, TsqrFactors};
+use crate::dist::{
+    catch_dsvd, tsqr, tsqr_r, Context, DistRowCsrMatrix, DistRowMatrix, DsvdError, HealthCheck,
+    TsqrFactors,
+};
 use crate::linalg::qr::{significant_diagonal, significant_prefix, tri_inverse_upper};
 use crate::linalg::svd::svd;
 use crate::linalg::{blas, Matrix};
@@ -429,6 +432,65 @@ fn algorithm4_impl<A: TallInput + ?Sized>(
     let u = q.matmul_small(ctx, be, &rsvd.u);
 
     DistSvd { u, s: rsvd.s, v: rsvd.v }
+}
+
+// ---------------------------------------------------------------------------
+// fault-tolerant surfaces: typed errors + stage-boundary health guards
+// ---------------------------------------------------------------------------
+
+/// Run the stage-boundary health guards over a finished factorization:
+/// NaN/Inf scans on Σ, V, and the distributed U, plus the
+/// `MaxEntry(|UᵀU − I|)` orthonormality drift bound — the guard that
+/// turns the paper's silent-wrong-answer U into a typed error.
+pub(crate) fn check_svd_health(
+    ctx: &Context,
+    be: &dyn Compute,
+    out: &DistSvd,
+    health: &HealthCheck,
+) -> Result<(), DsvdError> {
+    health.check_finite(ctx, "s", &out.s)?;
+    health.check_finite(ctx, "V", out.v.data())?;
+    health.check_finite_dist(ctx, "U", &out.u)?;
+    if health.orthonormal_tol.is_some() {
+        let drift = crate::verify::max_entry_gram_minus_identity(ctx, be, &out.u);
+        health.check_orthonormal(ctx, "U", drift)?;
+    }
+    Ok(())
+}
+
+/// Fault-tolerant [`algorithm2`]: any unrecovered stage failure (retry
+/// budget exhausted, or a genuinely panicking task) comes back as a
+/// typed [`DsvdError`] instead of a panic, and the finished factors are
+/// screened by `health` before they are handed out. Under a fault plan
+/// whose schedule stays within the retry budget, the `Ok` factors are
+/// bit-identical to a fault-free run (see `tests/fault_tolerance.rs`).
+pub fn try_algorithm2(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+    health: &HealthCheck,
+) -> Result<DistSvd, DsvdError> {
+    let out = catch_dsvd(|| algorithm2(ctx, be, a, opts))?;
+    check_svd_health(ctx, be, &out, health)?;
+    Ok(out)
+}
+
+/// Fault-tolerant wrapper over the MLlib baseline. With the default
+/// [`HealthCheck`] this is the demonstration the paper calls for: on an
+/// ill-conditioned input [`preexisting`] returns U far from orthonormal
+/// *without warning*, and the orthonormality guard converts exactly
+/// that into [`DsvdError::NumericalHealth`] instead of silent garbage.
+pub fn try_preexisting(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &DistRowMatrix,
+    opts: &TallSkinnyOpts,
+    health: &HealthCheck,
+) -> Result<DistSvd, DsvdError> {
+    let out = catch_dsvd(|| preexisting(ctx, be, a, opts))?;
+    check_svd_health(ctx, be, &out, health)?;
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------

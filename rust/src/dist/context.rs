@@ -23,11 +23,28 @@
 //! the scheduler prices the communication each task waits on), while
 //! [`Context::driver`] runs a serialized closure on the driver and
 //! charges it to both clocks (driver work stalls the whole cluster).
+//!
+//! **Fault tolerance.** A context additionally carries a [`FaultPlan`]
+//! (inert by default; seeded from `DSVD_FAULT_SEED` / `DSVD_FAULT_RATE`
+//! or installed with [`Context::with_fault_plan`]) and a
+//! [`RetryPolicy`]. With a live plan, every stage runs its tasks under
+//! `catch_unwind`, retries failed tasks with capped exponential backoff
+//! (delays charged to the *simulated* scheduler clock, never slept),
+//! and speculatively re-launches stragglers past a multiple of the
+//! stage median. Because task closures are pure over their partition
+//! inputs, a recovered run is bit-identical to a fault-free run. The
+//! [`Context::try_stage`] / [`Context::try_stage_shuffled`] variants
+//! expose the same machinery with a typed [`DsvdError`] result instead
+//! of a panic, and accept re-invocable tasks so even genuine failures
+//! can be retried.
 
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
-use super::metrics::{CommsModel, Metrics};
+use super::fault::{error_from_panic, DsvdError, FaultKind, FaultPlan, RetryPolicy};
+use super::metrics::{CommsModel, Metrics, StageFaultCounters};
 use crate::pool::{self, WorkerPool};
 
 /// Simulated-cluster driver context. Cheap to create; every experiment
@@ -38,13 +55,28 @@ pub struct Context {
     comms: CommsModel,
     pool: Arc<WorkerPool>,
     metrics: Mutex<Metrics>,
+    fault: FaultPlan,
+    retry: RetryPolicy,
+    /// Stage sequence number — the `stage` coordinate of the fault
+    /// plan's deterministic schedule.
+    stage_seq: AtomicUsize,
+}
+
+/// One re-runnable stage task inside the fault-tolerant loop: how to
+/// run it, and whether a *genuine* failure (a panic from the closure
+/// itself, or a returned error) may be retried. Injected faults never
+/// consume the closure, so they are always retryable.
+struct StageRunner<'a, T> {
+    run: Box<dyn FnMut() -> Result<T, DsvdError> + Send + 'a>,
+    retryable: bool,
 }
 
 impl Context {
     /// Context for `executors` logical executors, the shared worker
-    /// pool (`DSVD_WORKERS` / all cores), fan-in 2, and the
-    /// env-configured comms model (free unless `DSVD_SHUFFLE_LATENCY` /
-    /// `DSVD_TASK_OVERHEAD` are set).
+    /// pool (`DSVD_WORKERS` / all cores), fan-in 2, the env-configured
+    /// comms model (free unless `DSVD_SHUFFLE_LATENCY` /
+    /// `DSVD_TASK_OVERHEAD` are set), and the env-configured fault plan
+    /// (inert unless `DSVD_FAULT_RATE` is set).
     pub fn new(executors: usize) -> Context {
         Context {
             executors: executors.max(1),
@@ -52,6 +84,9 @@ impl Context {
             comms: CommsModel::from_env(),
             pool: Arc::clone(pool::global()),
             metrics: Mutex::new(Metrics::default()),
+            fault: FaultPlan::from_env().unwrap_or_default(),
+            retry: RetryPolicy::default(),
+            stage_seq: AtomicUsize::new(0),
         }
     }
 
@@ -73,6 +108,20 @@ impl Context {
         self
     }
 
+    /// Install a fault-injection plan (see [`FaultPlan`]); stages start
+    /// running under the retry/speculation machinery once the plan can
+    /// inject anything.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Context {
+        self.fault = plan;
+        self
+    }
+
+    /// Override the retry/backoff/speculation policy.
+    pub fn with_retry_policy(mut self, policy: RetryPolicy) -> Context {
+        self.retry = policy;
+        self
+    }
+
     pub fn executors(&self) -> usize {
         self.executors
     }
@@ -89,6 +138,25 @@ impl Context {
     /// OS worker threads actually executing tasks.
     pub fn workers(&self) -> usize {
         self.pool.size()
+    }
+
+    /// The installed fault-injection plan (inert by default).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.fault
+    }
+
+    /// The installed retry/backoff/speculation policy.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    /// Poison-tolerant metrics access: a panicking task (injected or
+    /// genuine) unwinds through stage bookkeeping, and the metrics must
+    /// keep recording afterwards — the window's counters are plain
+    /// accumulators, valid whether or not the poisoning writer died
+    /// mid-update.
+    fn metrics_guard(&self) -> MutexGuard<'_, Metrics> {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Execute one stage of partition tasks in parallel. Results come
@@ -111,6 +179,11 @@ impl Context {
     /// with duration `measured + comms.task_cost(bytes[i])`, so fan-in
     /// and shuffle-volume choices move the simulated wall clock the way
     /// they move a real cluster's.
+    ///
+    /// With a live [`FaultPlan`] the stage runs under the fault-
+    /// tolerant loop; an unrecoverable failure propagates as a panic
+    /// whose payload is the typed [`DsvdError`] (the algorithm `try_*`
+    /// surfaces catch and return it).
     pub fn stage_shuffled<'a, T: Send + 'a>(
         &self,
         tasks: Vec<Box<dyn FnOnce() -> T + Send + 'a>>,
@@ -122,15 +195,255 @@ impl Context {
             bytes.len(),
             tasks.len()
         );
+        if self.fault.is_inert() {
+            // the zero-overhead fast path: no fault machinery in the way
+            let t0 = Instant::now();
+            let results = self.pool.run_scoped(tasks);
+            let real = t0.elapsed().as_secs_f64();
+            let durations: Vec<f64> = results.iter().map(|r| r.1).collect();
+            self.metrics_guard().record_stage(
+                &durations,
+                bytes,
+                self.executors,
+                &self.comms,
+                real,
+            );
+            return results.into_iter().map(|r| r.0).collect();
+        }
+        let runners = tasks
+            .into_iter()
+            .map(|t| {
+                let mut slot = Some(t);
+                StageRunner {
+                    run: Box::new(move || {
+                        Ok(slot.take().expect("FnOnce stage task re-invoked")())
+                    }) as Box<dyn FnMut() -> Result<T, DsvdError> + Send + 'a>,
+                    retryable: false,
+                }
+            })
+            .collect();
+        match self.run_stage_with_faults(runners, bytes) {
+            Ok(out) => out,
+            // infallible callers see a panic; `fault::catch_dsvd` (the
+            // algorithm try_* surfaces) downcasts it back to the typed
+            // error
+            Err(e) => std::panic::panic_any(e),
+        }
+    }
+
+    /// Fault-tolerant [`Context::stage`]: tasks are **re-invocable**
+    /// (`Fn`, not `FnOnce`) and fallible, so genuine panics and
+    /// returned transient errors are retried under the
+    /// [`RetryPolicy`] exactly like injected faults; budget exhaustion
+    /// returns a typed [`DsvdError`] instead of panicking.
+    pub fn try_stage<'a, T: Send + 'a>(
+        &self,
+        tasks: Vec<Box<dyn Fn() -> Result<T, DsvdError> + Send + 'a>>,
+    ) -> Result<Vec<T>, DsvdError> {
+        self.try_stage_shuffled(tasks, &[])
+    }
+
+    /// Fault-tolerant [`Context::stage_shuffled`] — see
+    /// [`Context::try_stage`].
+    pub fn try_stage_shuffled<'a, T: Send + 'a>(
+        &self,
+        tasks: Vec<Box<dyn Fn() -> Result<T, DsvdError> + Send + 'a>>,
+        bytes: &[usize],
+    ) -> Result<Vec<T>, DsvdError> {
+        assert!(
+            bytes.is_empty() || bytes.len() == tasks.len(),
+            "try_stage_shuffled: {} byte counts for {} tasks",
+            bytes.len(),
+            tasks.len()
+        );
+        let runners = tasks
+            .into_iter()
+            .map(|t| StageRunner {
+                run: Box::new(move || t()) as Box<dyn FnMut() -> Result<T, DsvdError> + Send + 'a>,
+                retryable: true,
+            })
+            .collect();
+        self.run_stage_with_faults(runners, bytes)
+    }
+
+    /// The fault-tolerant stage loop: run every task under
+    /// `catch_unwind`, inject the plan's faults, retry failures with
+    /// capped exponential backoff (charged as simulated scheduler time),
+    /// speculatively re-launch stragglers, and record the whole story
+    /// in the metrics. Deterministic: the fault schedule is a pure
+    /// function of `(seed, stage, task, attempt)`, tasks are pure over
+    /// their inputs, and results return in task order.
+    fn run_stage_with_faults<'a, T: Send + 'a>(
+        &self,
+        mut runners: Vec<StageRunner<'a, T>>,
+        bytes: &[usize],
+    ) -> Result<Vec<T>, DsvdError> {
+        let stage = self.stage_seq.fetch_add(1, Ordering::Relaxed);
+        let n = runners.len();
         let t0 = Instant::now();
-        let results = self.pool.run_scoped(tasks);
+        let retryable: Vec<bool> = runners.iter().map(|r| r.retryable).collect();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        // measured compute seconds per task, summed over attempts
+        let mut compute = vec![0.0f64; n];
+        // simulated non-compute charges: injected straggle + backoff
+        let mut penalty = vec![0.0f64; n];
+        let mut fail_count = vec![0usize; n];
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut counters = StageFaultCounters::default();
+        let mut attempt = 0usize;
+        let mut failure: Option<DsvdError> = None;
+
+        while !pending.is_empty() {
+            if attempt > 0 {
+                // this round is all retries: charge the capped
+                // exponential backoff as scheduler (not compute) time
+                let delay = self.retry.backoff(attempt);
+                for &i in &pending {
+                    penalty[i] += delay;
+                    counters.tasks_retried += 1;
+                }
+            }
+            // injected faults are decided on the driver (deterministic
+            // and countable), executed inside the tasks
+            let faults: Vec<Option<FaultKind>> =
+                pending.iter().map(|&i| self.fault.fault_for(stage, i, attempt)).collect();
+            counters.faults_injected += faults.iter().filter(|f| f.is_some()).count();
+
+            let mut round: Vec<Box<dyn FnOnce() -> (Result<T, DsvdError>, f64) + Send + '_>> =
+                Vec::with_capacity(pending.len());
+            {
+                let mut it = runners.iter_mut().enumerate();
+                for (j, &i) in pending.iter().enumerate() {
+                    let r = loop {
+                        let (k, r) = it.next().expect("pending indices are in range");
+                        if k == i {
+                            break r;
+                        }
+                    };
+                    let fault = faults[j];
+                    round.push(Box::new(move || match fault {
+                        Some(FaultKind::Panic) => {
+                            // a real unwind, caught right here — the
+                            // closure under test survives for the retry
+                            let e = match catch_unwind(AssertUnwindSafe(|| -> () {
+                                panic!("injected fault: panic in stage {stage} task {i}")
+                            })) {
+                                Ok(()) => unreachable!("injected panic always unwinds"),
+                                Err(payload) => place(error_from_panic(payload), stage, i),
+                            };
+                            (Err(e), 0.0)
+                        }
+                        Some(k @ (FaultKind::TransientIo | FaultKind::TransientCorrupt)) => {
+                            (Err(FaultPlan::transient_error(k, stage, i)), 0.0)
+                        }
+                        other => {
+                            let straggle = match other {
+                                Some(FaultKind::Straggle(d)) => d,
+                                _ => 0.0,
+                            };
+                            match catch_unwind(AssertUnwindSafe(|| (r.run)())) {
+                                Ok(res) => (res, straggle),
+                                Err(payload) => {
+                                    (Err(place(error_from_panic(payload), stage, i)), straggle)
+                                }
+                            }
+                        }
+                    }));
+                }
+            }
+
+            let results = self.pool.run_scoped(round);
+            let mut still = Vec::new();
+            for (j, ((res, straggle), dt)) in results.into_iter().enumerate() {
+                let i = pending[j];
+                compute[i] += dt;
+                penalty[i] += straggle;
+                match res {
+                    Ok(v) => {
+                        if fail_count[i] > 0 {
+                            counters.recoveries += 1;
+                        }
+                        out[i] = Some(v);
+                    }
+                    Err(e) => {
+                        fail_count[i] += 1;
+                        // an injected Panic/Io/Corrupt never invoked the
+                        // closure, so even a FnOnce task can retry it
+                        let skipped_run = matches!(
+                            faults[j],
+                            Some(
+                                FaultKind::Panic
+                                    | FaultKind::TransientIo
+                                    | FaultKind::TransientCorrupt
+                            )
+                        );
+                        let may_retry = (retryable[i] || skipped_run)
+                            && attempt + 1 < self.retry.max_attempts;
+                        if may_retry {
+                            still.push(i);
+                        } else if failure.is_none() {
+                            failure = Some(if attempt + 1 >= self.retry.max_attempts {
+                                DsvdError::RetriesExhausted {
+                                    stage,
+                                    task: i,
+                                    attempts: attempt + 1,
+                                    last: e.to_string(),
+                                }
+                            } else {
+                                e
+                            });
+                        }
+                    }
+                }
+            }
+            if failure.is_some() {
+                break;
+            }
+            pending = still;
+            attempt += 1;
+        }
+
+        // straggler speculation: a task whose simulated duration
+        // exceeds `speculation_factor ×` the stage median (above a 1 ms
+        // noise floor) gets a speculative copy launched at the
+        // threshold; purity makes the copy's value bit-identical, so
+        // the only effects are the extra launch's compute charge and
+        // the straggler's clipped finish time
+        let mut spec_extra: Vec<f64> = Vec::new();
+        if failure.is_none() && n >= 2 {
+            let mut sims: Vec<f64> = (0..n).map(|i| compute[i] + penalty[i]).collect();
+            sims.sort_by(f64::total_cmp);
+            let median = sims[n / 2];
+            let threshold = self.retry.speculation_factor * median;
+            for i in 0..n {
+                let sim = compute[i] + penalty[i];
+                if sim > threshold && sim > 1e-3 {
+                    counters.speculative_launches += 1;
+                    spec_extra.push(compute[i]);
+                    let clipped = (threshold + compute[i]).min(sim);
+                    penalty[i] = clipped - compute[i];
+                }
+            }
+        }
+
         let real = t0.elapsed().as_secs_f64();
-        let durations: Vec<f64> = results.iter().map(|r| r.1).collect();
-        self.metrics
-            .lock()
-            .unwrap()
-            .record_stage(&durations, bytes, self.executors, &self.comms, real);
-        results.into_iter().map(|r| r.0).collect()
+        self.metrics_guard().record_faulted_stage(
+            &compute,
+            &penalty,
+            &spec_extra,
+            bytes,
+            self.executors,
+            &self.comms,
+            real,
+            counters,
+        );
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(out
+                .into_iter()
+                .map(|v| v.expect("every task succeeded when failure is None"))
+                .collect()),
+        }
     }
 
     /// Execute serialized driver-side work; charged to both clocks.
@@ -138,45 +451,61 @@ impl Context {
         let t0 = Instant::now();
         let out = f();
         // lock taken only after `f` returns, so driver() may nest
-        self.metrics.lock().unwrap().record_driver(t0.elapsed().as_secs_f64());
+        self.metrics_guard().record_driver(t0.elapsed().as_secs_f64());
         out
     }
 
     /// Snapshot of the current metrics window.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.metrics_guard().clone()
     }
 
     /// Zero the metrics window.
     pub fn reset_metrics(&self) {
-        *self.metrics.lock().unwrap() = Metrics::default();
+        *self.metrics_guard() = Metrics::default();
     }
 
     /// Snapshot and zero in one step.
     pub fn take_metrics(&self) -> Metrics {
-        std::mem::take(&mut *self.metrics.lock().unwrap())
+        std::mem::take(&mut *self.metrics_guard())
     }
 
     /// Record a driver-bound gather of `bytes` (e.g. `collect`): the
     /// bytes count toward `shuffle_bytes` and, under a nonzero comms
     /// model, stall the simulated wall clock at the per-byte latency.
     pub(crate) fn add_shuffle(&self, bytes: usize) {
-        self.metrics.lock().unwrap().add_shuffle(bytes, &self.comms);
+        self.metrics_guard().add_shuffle(bytes, &self.comms);
     }
 
     /// Record one traversal of a block-stored operator touching
     /// `blocks` grid cells (the `a_passes` / `blocks_materialized`
     /// ledger — see [`Metrics`]).
     pub(crate) fn add_pass(&self, blocks: usize) {
-        self.metrics.lock().unwrap().add_pass(blocks);
+        self.metrics_guard().add_pass(blocks);
     }
 
     /// Record one spill-ledger delta (out-of-core reads/writes over one
     /// bracketed product plus the cache's resident high-water mark —
     /// see [`Metrics`]).
     pub(crate) fn add_spill(&self, read: usize, written: usize, peak_resident: usize) {
-        self.metrics.lock().unwrap().add_spill(read, written, peak_resident);
+        self.metrics_guard().add_spill(read, written, peak_resident);
     }
+
+    /// Record one numerical-health guard evaluation (see
+    /// [`super::fault::HealthCheck`]).
+    pub(crate) fn add_health_check(&self) {
+        self.metrics_guard().health_checks_run += 1;
+    }
+}
+
+/// Stamp a [`DsvdError::TaskPanicked`] with its stage/task coordinates
+/// (panic payloads do not know where they were caught).
+fn place(mut e: DsvdError, stage: usize, task: usize) -> DsvdError {
+    if let DsvdError::TaskPanicked { stage: s, task: t, .. } = &mut e {
+        *s = stage;
+        *t = task;
+    }
+    e
 }
 
 /// Split a vector into owned chunks of (at most) `size` items,
@@ -245,6 +574,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::fault::catch_dsvd;
 
     #[test]
     fn builders_and_accessors() {
@@ -256,6 +586,8 @@ mod tests {
         let ctx = Context::new(0).with_fan_in(0);
         assert_eq!(ctx.executors(), 1);
         assert_eq!(ctx.fan_in(), 2);
+        assert!(ctx.fault_plan().is_inert());
+        assert_eq!(ctx.retry_policy(), RetryPolicy::default());
     }
 
     #[test]
@@ -364,5 +696,207 @@ mod tests {
             shallow < deep,
             "fan-8 should beat fan-2 under task overhead: {shallow} vs {deep}"
         );
+    }
+
+    // --- fault-tolerant stage machinery -----------------------------
+
+    /// Every injected-fault kind recovers on retry, the results are
+    /// identical to a fault-free stage, and the counters tell the story.
+    #[test]
+    fn injected_faults_recover_bit_identically() {
+        let faultless: Vec<u64> = (0..8u64).map(|i| i * i).collect();
+        for kind in
+            [FaultKind::Panic, FaultKind::TransientIo, FaultKind::TransientCorrupt]
+        {
+            for workers in [1usize, 2, 4] {
+                let plan = FaultPlan::default().with_target(0, 3, kind);
+                let ctx = Context::new(4).with_workers(workers).with_fault_plan(plan);
+                let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..8u64)
+                    .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> u64 + Send>)
+                    .collect();
+                let out = ctx.stage(tasks);
+                assert_eq!(out, faultless, "kind {kind:?} workers {workers}");
+                let m = ctx.take_metrics();
+                assert_eq!(m.faults_injected, 1);
+                assert_eq!(m.tasks_retried, 1);
+                assert_eq!(m.recoveries, 1);
+            }
+        }
+    }
+
+    /// A straggle fault completes the task but charges the simulated
+    /// delay; speculation clips it back toward the stage median.
+    #[test]
+    fn straggler_is_speculated_and_clipped() {
+        let plan = FaultPlan::default().with_target(0, 2, FaultKind::Straggle(50.0));
+        let ctx = Context::new(4)
+            .with_workers(2)
+            .with_comms(CommsModel::default())
+            .with_fault_plan(plan)
+            .with_retry_policy(RetryPolicy { speculation_factor: 4.0, ..Default::default() });
+        let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..6u64)
+            .map(|i| Box::new(move || i + 1) as Box<dyn FnOnce() -> u64 + Send>)
+            .collect();
+        let out = ctx.stage(tasks);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6]);
+        let m = ctx.take_metrics();
+        assert_eq!(m.faults_injected, 1);
+        assert!(m.speculative_launches >= 1, "the 50 s straggler must be speculated");
+        assert_eq!(m.tasks_retried, 0, "a straggler completes; it is not retried");
+        // the 50 simulated seconds were clipped by the speculative
+        // copy launched at 4x the (micro-task) median
+        assert!(m.wall_clock < 50.0, "speculation failed to clip: wall {}", m.wall_clock);
+        assert!(m.comms_time < 50.0, "straggle charge not clipped: comms {}", m.comms_time);
+    }
+
+    /// A persistent fault exhausts the retry budget and surfaces the
+    /// typed error through `catch_dsvd` — never a raw panic payload.
+    #[test]
+    fn budget_exhaustion_is_a_typed_error() {
+        let plan =
+            FaultPlan::default().with_persistent_target(0, 1, FaultKind::TransientIo);
+        let ctx = Context::new(2)
+            .with_workers(2)
+            .with_fault_plan(plan)
+            .with_retry_policy(RetryPolicy::new(3, 0.01));
+        let err = catch_dsvd(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..4u64)
+                .map(|i| Box::new(move || i) as Box<dyn FnOnce() -> u64 + Send>)
+                .collect();
+            ctx.stage(tasks)
+        })
+        .unwrap_err();
+        match err {
+            DsvdError::RetriesExhausted { stage: 0, task: 1, attempts: 3, ref last } => {
+                assert!(last.contains("injected"), "last: {last}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+        // the pool and the metrics survive the failed stage
+        let m = ctx.take_metrics();
+        assert_eq!(m.faults_injected, 3);
+        assert_eq!(m.tasks_retried, 2);
+        assert_eq!(m.recoveries, 0);
+        let ok = ctx.stage(
+            (0..3u64)
+                .map(|i| Box::new(move || i) as Box<dyn FnOnce() -> u64 + Send>)
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(ok, vec![0, 1, 2]);
+    }
+
+    /// try_stage retries genuine (non-injected) failures because its
+    /// tasks are re-invocable, and returns Ok once they pass.
+    #[test]
+    fn try_stage_retries_genuine_transient_failures() {
+        use std::sync::atomic::AtomicUsize;
+        let ctx = Context::new(2).with_workers(2).with_retry_policy(RetryPolicy::new(3, 0.0));
+        let flaky = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn Fn() -> Result<u64, DsvdError> + Send>> = (0..4u64)
+            .map(|i| {
+                let flaky = &flaky;
+                Box::new(move || {
+                    if i == 2 && flaky.fetch_add(1, Ordering::Relaxed) == 0 {
+                        return Err(DsvdError::TaskPanicked {
+                            stage: 0,
+                            task: 2,
+                            detail: "transient".to_string(),
+                        });
+                    }
+                    Ok(i * 10)
+                }) as Box<dyn Fn() -> Result<u64, DsvdError> + Send>
+            })
+            .collect();
+        let out = ctx.try_stage(tasks).expect("second attempt passes");
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        let m = ctx.take_metrics();
+        assert_eq!(m.tasks_retried, 1);
+        assert_eq!(m.recoveries, 1);
+        assert_eq!(m.faults_injected, 0);
+
+        // a genuinely panicking re-invocable task is also retried
+        let flaky2 = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn Fn() -> Result<u64, DsvdError> + Send>> = (0..2u64)
+            .map(|i| {
+                let flaky2 = &flaky2;
+                Box::new(move || {
+                    if i == 0 && flaky2.fetch_add(1, Ordering::Relaxed) == 0 {
+                        panic!("flaky once");
+                    }
+                    Ok(i)
+                }) as Box<dyn Fn() -> Result<u64, DsvdError> + Send>
+            })
+            .collect();
+        assert_eq!(ctx.try_stage(tasks).expect("retry recovers the panic"), vec![0, 1]);
+    }
+
+    /// try_stage surfaces exhaustion as the typed error (no panic).
+    #[test]
+    fn try_stage_exhaustion_returns_err() {
+        let ctx = Context::new(2).with_workers(1).with_retry_policy(RetryPolicy::new(2, 0.0));
+        let tasks: Vec<Box<dyn Fn() -> Result<u64, DsvdError> + Send>> = vec![
+            Box::new(|| Ok(1)),
+            Box::new(|| {
+                Err(DsvdError::TaskPanicked {
+                    stage: 0,
+                    task: 1,
+                    detail: "always fails".to_string(),
+                })
+            }),
+        ];
+        match ctx.try_stage(tasks) {
+            Err(DsvdError::RetriesExhausted { task: 1, attempts: 2, .. }) => {}
+            other => panic!("wrong outcome: {other:?}"),
+        }
+    }
+
+    /// Backoff is charged to the simulated clocks, not slept: a large
+    /// simulated delay must not take real time.
+    #[test]
+    fn backoff_is_simulated_not_slept() {
+        let plan = FaultPlan::default().with_target(0, 0, FaultKind::TransientIo);
+        let ctx = Context::new(2)
+            .with_workers(1)
+            .with_fault_plan(plan)
+            .with_retry_policy(RetryPolicy::new(3, 1000.0));
+        let t0 = Instant::now();
+        let out = ctx.stage(vec![
+            Box::new(|| 5u64) as Box<dyn FnOnce() -> u64 + Send>,
+            Box::new(|| 6u64),
+        ]);
+        assert_eq!(out, vec![5, 6]);
+        assert!(t0.elapsed().as_secs_f64() < 100.0, "backoff must never sleep");
+        let m = ctx.take_metrics();
+        assert!(m.wall_clock >= 1000.0, "backoff charged to wall: {}", m.wall_clock);
+        assert!(m.comms_time >= 1000.0, "backoff charged as scheduler time");
+        assert!(m.cpu_time < 100.0, "backoff is not compute");
+    }
+
+    /// A seeded random schedule over many stages recovers everywhere
+    /// and is bit-identical across worker counts.
+    #[test]
+    fn seeded_schedule_is_deterministic_across_workers() {
+        let run = |workers: usize| -> (Vec<u64>, usize, usize) {
+            let ctx = Context::new(4)
+                .with_workers(workers)
+                .with_fault_plan(FaultPlan::seeded(0xFA117, 0.3).with_straggle_delay(0.5));
+            let mut all = Vec::new();
+            for s in 0..6u64 {
+                let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = (0..7u64)
+                    .map(|i| Box::new(move || s * 100 + i) as Box<dyn FnOnce() -> u64 + Send>)
+                    .collect();
+                all.extend(ctx.stage(tasks));
+            }
+            let m = ctx.take_metrics();
+            (all, m.faults_injected, m.recoveries)
+        };
+        let (r1, f1, rec1) = run(1);
+        let (r2, f2, rec2) = run(2);
+        let (r4, f4, rec4) = run(4);
+        assert_eq!(r1, r2);
+        assert_eq!(r1, r4);
+        assert_eq!((f1, rec1), (f2, rec2));
+        assert_eq!((f1, rec1), (f4, rec4));
+        assert!(f1 > 0, "rate 0.3 over 42 tasks should inject something");
     }
 }

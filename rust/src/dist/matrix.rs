@@ -251,6 +251,23 @@ impl DistRowMatrix {
         .unwrap_or_else(|| Matrix::zeros(n, n))
     }
 
+    /// The first non-finite entry (NaN or ±Inf) anywhere in the matrix,
+    /// scanned one parallel stage over the slabs — the distributed half
+    /// of the [`crate::dist::HealthCheck`] finite guard. "First" means
+    /// the lowest-partition, lowest-offset hit, so the report is
+    /// deterministic regardless of worker count.
+    pub fn first_nonfinite(&self, ctx: &Context) -> Option<f64> {
+        let tasks: Vec<Box<dyn FnOnce() -> Option<f64> + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || p.data.data().iter().copied().find(|x| !x.is_finite()))
+                    as Box<dyn FnOnce() -> Option<f64> + Send + '_>
+            })
+            .collect();
+        ctx.stage(tasks).into_iter().flatten().next()
+    }
+
     /// Euclidean norm of each column (distributed reduce).
     pub fn col_norms(&self, ctx: &Context) -> Vec<f64> {
         let n = self.cols;

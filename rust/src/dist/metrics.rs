@@ -135,6 +135,33 @@ pub struct Metrics {
     /// pinned via `Arc` for its own lifetime ride on top, bounded by
     /// one block-row per in-flight task (see `dist/spill.rs`).
     pub peak_resident_bytes: usize,
+    /// Faults the installed [`crate::dist::FaultPlan`] injected into
+    /// stage tasks this window (panics, transient Io/Corrupt errors,
+    /// stragglers).
+    pub faults_injected: usize,
+    /// Task re-attempts launched by the retry loop (one per task per
+    /// retry round; the first attempt is not a retry).
+    pub tasks_retried: usize,
+    /// Speculative copies launched for tasks exceeding the straggler
+    /// threshold (`speculation_factor ×` the stage median).
+    pub speculative_launches: usize,
+    /// Tasks that ultimately succeeded after at least one failed
+    /// attempt.
+    pub recoveries: usize,
+    /// Numerical-health guard evaluations
+    /// ([`crate::dist::HealthCheck`] finite scans and orthonormality
+    /// drift checks) run at stage boundaries.
+    pub health_checks_run: usize,
+}
+
+/// Per-stage tallies the fault-tolerant stage loop hands to
+/// [`Metrics::record_faulted_stage`].
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct StageFaultCounters {
+    pub faults_injected: usize,
+    pub tasks_retried: usize,
+    pub speculative_launches: usize,
+    pub recoveries: usize,
 }
 
 impl Metrics {
@@ -167,6 +194,57 @@ impl Metrics {
             self.comms_time += effective.iter().sum::<f64>() - durations.iter().sum::<f64>();
             self.wall_clock += simulate_makespan(&effective, executors);
         }
+    }
+
+    /// Fold one fault-tolerant stage into the totals. `compute[i]` is
+    /// task `i`'s measured compute seconds summed over all attempts
+    /// (CPU really burned, so it feeds `cpu_time`); `penalty[i]` is the
+    /// *simulated* non-compute time the task waited — injected straggle
+    /// delay plus retry backoff — charged like communication: to
+    /// `comms_time` and to the task's scheduled duration, never to
+    /// `cpu_time`. `spec_extra` holds the compute seconds of launched
+    /// speculative copies, each scheduled as an additional task. The
+    /// honest invariant `cpu_time + comms_time >= wall_clock` is
+    /// preserved: every scheduled duration is compute + charged
+    /// penalty, and a makespan never exceeds the serial sum.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn record_faulted_stage(
+        &mut self,
+        compute: &[f64],
+        penalty: &[f64],
+        spec_extra: &[f64],
+        bytes: &[usize],
+        executors: usize,
+        model: &CommsModel,
+        real_elapsed: f64,
+        counters: StageFaultCounters,
+    ) {
+        debug_assert_eq!(compute.len(), penalty.len());
+        debug_assert!(bytes.is_empty() || bytes.len() == compute.len());
+        self.stages += 1;
+        self.tasks += compute.len() + spec_extra.len();
+        self.cpu_time += compute.iter().sum::<f64>() + spec_extra.iter().sum::<f64>();
+        self.driver_elapsed += real_elapsed;
+        self.shuffle_bytes += bytes.iter().sum::<usize>();
+        let mut effective: Vec<f64> = compute
+            .iter()
+            .zip(penalty)
+            .enumerate()
+            .map(|(i, (&c, &p))| c + p + model.task_cost(bytes.get(i).copied().unwrap_or(0)))
+            .collect();
+        // a speculative copy re-runs the task's compute and pays the
+        // launch overhead, but receives no shuffle bytes of its own
+        effective.extend(spec_extra.iter().map(|&c| c + model.task_overhead));
+        self.comms_time += penalty.iter().sum::<f64>()
+            + (0..compute.len())
+                .map(|i| model.task_cost(bytes.get(i).copied().unwrap_or(0)))
+                .sum::<f64>()
+            + spec_extra.len() as f64 * model.task_overhead;
+        self.wall_clock += simulate_makespan(&effective, executors);
+        self.faults_injected += counters.faults_injected;
+        self.tasks_retried += counters.tasks_retried;
+        self.speculative_launches += counters.speculative_launches;
+        self.recoveries += counters.recoveries;
     }
 
     /// Fold one serialized driver-side section into the totals.
@@ -343,6 +421,39 @@ mod tests {
         // the spill ledger is storage bookkeeping, not time or shuffle
         assert_eq!(m.cpu_time, 0.0);
         assert_eq!(m.shuffle_bytes, 0);
+    }
+
+    #[test]
+    fn faulted_stage_splits_compute_from_penalty() {
+        let mut m = Metrics::default();
+        let counters = StageFaultCounters {
+            faults_injected: 2,
+            tasks_retried: 1,
+            speculative_launches: 1,
+            recoveries: 1,
+        };
+        // 2 tasks on 1 executor, one with 3.0s of simulated penalty,
+        // plus one speculative copy re-running 1.0s of compute
+        m.record_faulted_stage(
+            &[1.0, 2.0],
+            &[3.0, 0.0],
+            &[1.0],
+            &[],
+            1,
+            &FREE_COMMS,
+            0.01,
+            counters,
+        );
+        assert!((m.cpu_time - 4.0).abs() < 1e-12, "cpu {}", m.cpu_time);
+        assert!((m.comms_time - 3.0).abs() < 1e-12, "comms {}", m.comms_time);
+        // serial: (1+3) + 2 + 1
+        assert!((m.wall_clock - 7.0).abs() < 1e-12, "wall {}", m.wall_clock);
+        assert!(m.cpu_time + m.comms_time >= m.wall_clock - 1e-12);
+        assert_eq!(m.tasks, 3);
+        assert_eq!(m.faults_injected, 2);
+        assert_eq!(m.tasks_retried, 1);
+        assert_eq!(m.speculative_launches, 1);
+        assert_eq!(m.recoveries, 1);
     }
 
     #[test]

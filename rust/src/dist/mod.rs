@@ -17,6 +17,7 @@
 //! | [`tree_aggregate`] | `treeAggregate` | fan-in-wide parallel merges |
 //! | [`tsqr`] / [`tsqr_r`] | modified `computeSVD` QR | reduction-tree TSQR |
 //! | [`Metrics`] / [`CommsModel`] | Spark UI stage metrics | CPU/wall/shuffle accounting + priced communication |
+//! | [`FaultPlan`] / [`RetryPolicy`] / [`HealthCheck`] | task failures, speculative execution, the silent-wrong-answer SVD | seeded deterministic fault injection, `catch_unwind` retry with simulated backoff, stage-boundary factor-health guards |
 //!
 //! Determinism is a hard guarantee: stage results return in task order
 //! and every reduction folds groups by index, so the factorizations are
@@ -26,6 +27,7 @@
 //! See `src/dist/README.md` for the design rationale and knobs.
 
 pub mod context;
+pub mod fault;
 pub mod matrix;
 pub mod metrics;
 pub mod op;
@@ -39,13 +41,15 @@ pub mod tsqr;
 pub use crate::pool;
 
 pub use context::{tree_aggregate, Context};
+pub use fault::{catch_dsvd, DsvdError, FaultKind, FaultPlan, HealthCheck, RetryPolicy};
 pub use matrix::{
     Block, BlockStorage, DistBlockMatrix, DistRowMatrix, ImplicitBlock, RowPartition,
 };
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
 pub use op::{DistOp, UnfusedOp};
 pub use row_csr::{CsrRowPartition, DistRowCsrMatrix};
-pub use spill::{SpillError, SpillStats, SpillStore, SpilledBlock};
+pub use spill::{EvictPolicy, SpillError, SpillStats, SpillStore, SpilledBlock};
 pub use tsqr::{
-    tsqr, tsqr_lineage, tsqr_r, tsqr_r_csr, tsqr_with_stats, TsqrFactors, TsqrMemStats,
+    tsqr, tsqr_lineage, tsqr_r, tsqr_r_checked, tsqr_r_csr, tsqr_with_stats, TsqrFactors,
+    TsqrMemStats,
 };

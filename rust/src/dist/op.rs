@@ -365,10 +365,23 @@ impl DistOp for DistRowCsrMatrix {
     ) -> (Vec<f64>, Vec<f64>) {
         DistRowCsrMatrix::fused_normal_matvec_sub(self, ctx, x, c)
     }
-    // the batched products use the trait defaults (one pass per
-    // factor) — the slabs are resident CSR arrays, so a batch override
-    // would save nnz re-reads but no generator runs or page-ins; the
-    // ledger honestly reports k passes for k sketches
+    fn matmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        ws: &[Matrix],
+    ) -> Vec<DistRowMatrix> {
+        DistRowCsrMatrix::matmul_small_batch(self, ctx, be, ws)
+    }
+
+    fn rmatmul_small_batch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        qs: &[&DistRowMatrix],
+    ) -> Vec<Matrix> {
+        DistRowCsrMatrix::rmatmul_small_batch(self, ctx, be, qs)
+    }
 }
 
 #[cfg(test)]

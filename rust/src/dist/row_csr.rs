@@ -237,6 +237,106 @@ impl DistRowCsrMatrix {
         .unwrap_or_else(|| Matrix::zeros(self.cols, q.cols()))
     }
 
+    /// Batched `A · Wₖ` over several driver-held factors: one SpMM task
+    /// per slab serves *every* factor through
+    /// [`Csr::matmul_batch`](crate::linalg::Csr::matmul_batch) — the
+    /// CSR arrays stream from memory once for k factors, and the ledger
+    /// charges ONE pass where the per-factor trait default charges k.
+    /// Each output is bit-identical to the corresponding single
+    /// [`DistRowCsrMatrix::matmul_small`] call (pinned in
+    /// `tests/op_equivalence.rs`).
+    pub fn matmul_small_batch(
+        &self,
+        ctx: &Context,
+        _be: &dyn Compute,
+        ws: &[Matrix],
+    ) -> Vec<DistRowMatrix> {
+        if ws.is_empty() {
+            return Vec::new();
+        }
+        for w in ws {
+            assert_eq!(self.cols, w.rows(), "matmul_small_batch: cols vs W rows");
+        }
+        ctx.add_pass(self.parts.len());
+        type BatchOut = Vec<RowPartition>;
+        let tasks: Vec<Box<dyn FnOnce() -> BatchOut + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let wrefs: Vec<&Matrix> = ws.iter().collect();
+                    p.data
+                        .matmul_batch(&wrefs)
+                        .into_iter()
+                        .map(|data| RowPartition { row_start: p.row_start, data })
+                        .collect()
+                }) as Box<dyn FnOnce() -> BatchOut + Send + '_>
+            })
+            .collect();
+        let mut per_slab = ctx.stage(tasks);
+        // transpose slab-major results into one DistRowMatrix per factor
+        (0..ws.len())
+            .map(|f| {
+                let parts: Vec<RowPartition> =
+                    per_slab.iter_mut().map(|outs| outs.remove(0)).collect();
+                DistRowMatrix::from_parts(parts, self.rows, ws[f].cols())
+            })
+            .collect()
+    }
+
+    /// Batched `Aᵀ · Qₖ` over several distributed tall factors: one
+    /// task per slab sweeps the nonzeros for every factor
+    /// ([`Csr::matmul_tn_batch`](crate::linalg::Csr::matmul_tn_batch)),
+    /// one ledger pass total, then one treeAggregate per factor in the
+    /// same fold order as the single-factor path — so each output is
+    /// bit-identical to the corresponding
+    /// [`DistRowCsrMatrix::rmatmul_small`] call.
+    pub fn rmatmul_small_batch(
+        &self,
+        ctx: &Context,
+        _be: &dyn Compute,
+        qs: &[&DistRowMatrix],
+    ) -> Vec<Matrix> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        for q in qs {
+            assert_eq!(self.rows, q.rows(), "rmatmul_small_batch: row count mismatch");
+        }
+        ctx.add_pass(self.parts.len());
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<Matrix> + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let slices: Vec<Matrix> = qs
+                        .iter()
+                        .map(|q| q.rows_slice(p.row_start, p.row_start + p.data.rows()))
+                        .collect();
+                    let srefs: Vec<&Matrix> = slices.iter().collect();
+                    p.data.matmul_tn_batch(&srefs)
+                }) as Box<dyn FnOnce() -> Vec<Matrix> + Send + '_>
+            })
+            .collect();
+        let mut per_slab = ctx.stage(tasks);
+        (0..qs.len())
+            .map(|f| {
+                let partials: Vec<Matrix> =
+                    per_slab.iter_mut().map(|outs| outs.remove(0)).collect();
+                tree_aggregate(
+                    ctx,
+                    partials,
+                    |mut a, b| {
+                        a.add_assign(&b);
+                        a
+                    },
+                    |m| 8 * m.rows() * m.cols(),
+                )
+                .unwrap_or_else(|| Matrix::zeros(self.cols, qs[f].cols()))
+            })
+            .collect()
+    }
+
     /// `AᵀA` (n×n, driver-held) by per-slab sparse Gram + treeAggregate
     /// — the Algorithm 3/4 entry, `O(Σ row_nnz²)` work and no
     /// densification anywhere.

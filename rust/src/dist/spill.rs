@@ -19,9 +19,15 @@
 //!   which is why results are independent of eviction order and of how
 //!   concurrent tasks interleave their fetches (pinned by
 //!   `tests/out_of_core.rs`).
-//! * **Budgeted LRU.** A fetch that misses reads the file and inserts
-//!   the payload, evicting least-recently-used entries first until the
-//!   cache fits the budget. The cache's resident high-water mark is the
+//! * **Budgeted eviction, pluggable policy.** A fetch that misses reads
+//!   the file and inserts the payload, evicting cached entries until the
+//!   cache fits the budget. The victim order is governed by
+//!   [`EvictPolicy`] — strict LRU (the default) or CLOCK second-chance
+//!   (`DSVD_SPILL_POLICY=clock`), which approximates LRU with O(1)
+//!   hits: a hit only sets a reference bit instead of reordering the
+//!   recency list, and the sweeping hand gives each referenced entry
+//!   one second chance before evicting it. Either way the cache's
+//!   resident high-water mark is the
 //!   `peak_resident_bytes` ledger the metrics report; with a budget of
 //!   one block the whole matrix streams through a single resident cell.
 //!   A payload that alone exceeds the budget is served **without
@@ -114,12 +120,47 @@ pub struct SpillStats {
     pub peak_resident_bytes: usize,
 }
 
+/// Which cached payload the budgeted cache evicts first (see module
+/// docs). Selected per store ([`SpillStore::with_budget_and_policy`])
+/// or process-wide via `DSVD_SPILL_POLICY=lru|clock`
+/// ([`SpillStore::from_env`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Strict least-recently-used: every hit moves the entry to the
+    /// back of the recency list; eviction pops the front.
+    #[default]
+    Lru,
+    /// CLOCK second-chance: entries sit in a ring; a hit sets the
+    /// entry's reference bit (no reordering), and the eviction hand
+    /// sweeps the ring clearing set bits, evicting the first entry
+    /// whose bit is already clear. Classic LRU approximation with
+    /// cheaper hits.
+    Clock,
+}
+
+impl EvictPolicy {
+    /// Parse `DSVD_SPILL_POLICY` (`lru` | `clock`, case-insensitive).
+    /// Unset or unrecognized values fall back to [`EvictPolicy::Lru`].
+    pub fn from_env() -> EvictPolicy {
+        match std::env::var("DSVD_SPILL_POLICY") {
+            Ok(v) if v.eq_ignore_ascii_case("clock") => EvictPolicy::Clock,
+            _ => EvictPolicy::Lru,
+        }
+    }
+}
+
 struct CacheInner {
     next_id: u64,
     /// Cached payloads by block id.
     resident: HashMap<u64, Arc<Matrix>>,
-    /// Ids from least- to most-recently used.
+    /// LRU: ids from least- to most-recently used. CLOCK: the ring in
+    /// insertion order, swept by `hand`.
     lru: Vec<u64>,
+    /// CLOCK only: position of the sweeping hand within `lru`.
+    hand: usize,
+    /// CLOCK only: per-id reference bits (set on hit, cleared by the
+    /// passing hand).
+    ref_bits: HashMap<u64, bool>,
     resident_bytes: usize,
     peak_resident_bytes: usize,
     /// High-water mark since the last [`SpillStore::begin_peak_window`]
@@ -141,6 +182,7 @@ struct CacheInner {
 pub struct SpillStore {
     dir: PathBuf,
     budget: usize,
+    policy: EvictPolicy,
     inner: Mutex<CacheInner>,
 }
 
@@ -153,6 +195,16 @@ impl SpillStore {
     /// between fetches). The temp directory is created here and removed
     /// when the store drops.
     pub fn with_budget(budget: usize) -> Result<Arc<SpillStore>, SpillError> {
+        Self::with_budget_and_policy(budget, EvictPolicy::Lru)
+    }
+
+    /// Store with an explicit cache budget AND eviction policy (see
+    /// [`EvictPolicy`]); [`SpillStore::with_budget`] is this with
+    /// [`EvictPolicy::Lru`].
+    pub fn with_budget_and_policy(
+        budget: usize,
+        policy: EvictPolicy,
+    ) -> Result<Arc<SpillStore>, SpillError> {
         let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
         let dir = std::env::temp_dir()
             .join(format!("dsvd-spill-{}-{seq}", std::process::id()));
@@ -164,10 +216,13 @@ impl SpillStore {
         Ok(Arc::new(SpillStore {
             dir,
             budget,
+            policy,
             inner: Mutex::new(CacheInner {
                 next_id: 0,
                 resident: HashMap::new(),
                 lru: Vec::new(),
+                hand: 0,
+                ref_bits: HashMap::new(),
                 resident_bytes: 0,
                 peak_resident_bytes: 0,
                 window_peak: 0,
@@ -178,20 +233,26 @@ impl SpillStore {
     }
 
     /// Store budgeted by the `DSVD_MEMORY_BUDGET` environment variable
-    /// (bytes). Unset or unparsable means unbounded; an explicit `0`
-    /// means what [`SpillStore::with_budget`] says it means — nothing
-    /// stays cached between fetches.
+    /// (bytes) with the `DSVD_SPILL_POLICY` eviction policy. Unset or
+    /// unparsable budget means unbounded; an explicit `0` means what
+    /// [`SpillStore::with_budget`] says it means — nothing stays cached
+    /// between fetches.
     pub fn from_env() -> Result<Arc<SpillStore>, SpillError> {
         let budget = std::env::var("DSVD_MEMORY_BUDGET")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())
             .unwrap_or(usize::MAX);
-        Self::with_budget(budget)
+        Self::with_budget_and_policy(budget, EvictPolicy::from_env())
     }
 
     /// The configured cache budget in bytes.
     pub fn budget(&self) -> usize {
         self.budget
+    }
+
+    /// The configured eviction policy.
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
     }
 
     /// The directory holding the per-block payload files (exposed so
@@ -280,11 +341,20 @@ impl SpillStore {
     fn get(&self, b: &SpilledBlock) -> Result<Arc<Matrix>, SpillError> {
         let mut g = self.inner.lock().unwrap();
         if let Some(m) = g.resident.get(&b.id).cloned() {
-            // touch: move to most-recently-used
-            if let Some(pos) = g.lru.iter().position(|&x| x == b.id) {
-                g.lru.remove(pos);
+            match self.policy {
+                EvictPolicy::Lru => {
+                    // touch: move to most-recently-used
+                    if let Some(pos) = g.lru.iter().position(|&x| x == b.id) {
+                        g.lru.remove(pos);
+                    }
+                    g.lru.push(b.id);
+                }
+                EvictPolicy::Clock => {
+                    // touch: set the reference bit; the ring order and
+                    // the hand stay put
+                    g.ref_bits.insert(b.id, true);
+                }
             }
-            g.lru.push(b.id);
             return Ok(m);
         }
         let path = self.file_path(b.id);
@@ -293,17 +363,42 @@ impl SpillStore {
         g.bytes_read += bytes;
         // a payload that alone exceeds the budget is served uncached
         // (and must not flush what smaller blocks have cached), so the
-        // resident set never exceeds the budget; otherwise evict
-        // LRU-first until the new payload fits
+        // resident set never exceeds the budget; otherwise evict per
+        // the configured policy until the new payload fits
         if bytes <= self.budget {
             while g.resident_bytes.saturating_add(bytes) > self.budget && !g.lru.is_empty() {
-                let victim = g.lru.remove(0);
+                let victim = match self.policy {
+                    EvictPolicy::Lru => g.lru.remove(0),
+                    EvictPolicy::Clock => loop {
+                        // the hand sweeps the ring: a set bit buys one
+                        // second chance, a clear bit is the victim —
+                        // terminates within two sweeps
+                        let hand = g.hand % g.lru.len();
+                        let id = g.lru[hand];
+                        if g.ref_bits.get(&id).copied().unwrap_or(false) {
+                            g.ref_bits.insert(id, false);
+                            g.hand = (hand + 1) % g.lru.len();
+                        } else {
+                            g.lru.remove(hand);
+                            g.ref_bits.remove(&id);
+                            // the element after the victim slides into
+                            // `hand`; wrap if the victim was last
+                            g.hand = if g.lru.is_empty() { 0 } else { hand % g.lru.len() };
+                            break id;
+                        }
+                    },
+                };
                 if let Some(v) = g.resident.remove(&victim) {
                     g.resident_bytes -= 8 * v.rows() * v.cols();
                 }
             }
             g.resident.insert(b.id, Arc::clone(&m));
             g.lru.push(b.id);
+            if self.policy == EvictPolicy::Clock {
+                // a fresh page earns its second chance only by being
+                // hit again — keeps one-shot scans evictable
+                g.ref_bits.insert(b.id, false);
+            }
             g.resident_bytes += bytes;
             g.peak_resident_bytes = g.peak_resident_bytes.max(g.resident_bytes);
             g.window_peak = g.window_peak.max(g.resident_bytes);
@@ -568,6 +663,79 @@ mod tests {
         assert!(dir.exists());
         drop(b);
         assert!(!dir.exists());
+    }
+
+    #[test]
+    fn clock_second_chance_protects_referenced_entries() {
+        let bytes = 8 * 3 * 3;
+        let store = SpillStore::with_budget_and_policy(2 * bytes, EvictPolicy::Clock).unwrap();
+        assert_eq!(store.policy(), EvictPolicy::Clock);
+        let a = store.put(&randmat(70, 3, 3)).unwrap();
+        let b = store.put(&randmat(71, 3, 3)).unwrap();
+        let c = store.put(&randmat(72, 3, 3)).unwrap();
+        let _ = a.fetch().unwrap();
+        let _ = b.fetch().unwrap();
+        let _ = a.fetch().unwrap(); // hit: sets a's reference bit
+        assert_eq!(store.stats().bytes_read, 2 * bytes);
+        // the hand clears a's bit (second chance) and evicts b, whose
+        // bit was never set — where FIFO would have evicted a
+        let _ = c.fetch().unwrap();
+        assert_eq!(store.stats().bytes_read, 3 * bytes);
+        let _ = a.fetch().unwrap(); // survived: a cache hit
+        assert_eq!(store.stats().bytes_read, 3 * bytes);
+        let _ = b.fetch().unwrap(); // the victim: must re-read
+        assert_eq!(store.stats().bytes_read, 4 * bytes);
+    }
+
+    #[test]
+    fn clock_rereads_no_more_than_lru_on_cyclic_pattern() {
+        // the power-iteration access shape: a hot small factor touched
+        // between every step of a cyclic scan over A's blocks, with
+        // room for the hot block plus one scan block
+        let bytes = 8 * 4 * 4;
+        let run = |policy: EvictPolicy| -> (usize, Vec<Vec<f64>>) {
+            let store = SpillStore::with_budget_and_policy(2 * bytes, policy).unwrap();
+            let hot = store.put(&randmat(60, 4, 4)).unwrap();
+            let scan: Vec<SpilledBlock> =
+                (0..3).map(|i| store.put(&randmat(61 + i, 4, 4)).unwrap()).collect();
+            let mut payloads = Vec::new();
+            payloads.push(hot.fetch().unwrap().data().to_vec());
+            for _round in 0..3 {
+                for s in &scan {
+                    payloads.push(s.fetch().unwrap().data().to_vec());
+                    payloads.push(hot.fetch().unwrap().data().to_vec());
+                }
+            }
+            let st = store.stats();
+            assert!(st.resident_bytes <= store.budget());
+            assert!(st.peak_resident_bytes <= store.budget());
+            (st.bytes_read, payloads)
+        };
+        let (lru_reads, lru_payloads) = run(EvictPolicy::Lru);
+        let (clock_reads, clock_payloads) = run(EvictPolicy::Clock);
+        // both policies must keep the hot block resident through the
+        // whole run: 1 hot read + 9 scan misses, nothing else
+        assert_eq!(lru_reads, 10 * bytes, "LRU re-read the hot block");
+        assert_eq!(clock_reads, 10 * bytes, "CLOCK re-read the hot block");
+        assert!(clock_reads <= lru_reads, "CLOCK {clock_reads} > LRU {lru_reads}");
+        // the eviction policy must never change bits
+        assert_eq!(lru_payloads, clock_payloads);
+    }
+
+    #[test]
+    fn env_policy_parsing() {
+        std::env::remove_var("DSVD_SPILL_POLICY");
+        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Lru);
+        std::env::set_var("DSVD_SPILL_POLICY", "clock");
+        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Clock);
+        std::env::set_var("DSVD_SPILL_POLICY", "CLOCK");
+        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Clock);
+        // unknown values fall back to the LRU default
+        std::env::set_var("DSVD_SPILL_POLICY", "mru");
+        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Lru);
+        std::env::remove_var("DSVD_SPILL_POLICY");
+        // the plain constructor never consults the environment
+        assert_eq!(SpillStore::with_budget(0).unwrap().policy(), EvictPolicy::Lru);
     }
 
     #[test]

@@ -101,6 +101,23 @@ pub fn tsqr_r(ctx: &Context, a: &DistRowMatrix) -> Matrix {
     reduce_r_tree(ctx, level)
 }
 
+/// [`tsqr_r`] under a stage-boundary health guard: the input slabs are
+/// finite-scanned before the factorization (one NaN anywhere poisons
+/// every R up the reduction tree) and the resulting R is screened
+/// after, each failure surfacing as a typed
+/// [`DsvdError`](super::DsvdError) instead of garbage factors
+/// propagating downstream.
+pub fn tsqr_r_checked(
+    ctx: &Context,
+    a: &DistRowMatrix,
+    health: &super::HealthCheck,
+) -> Result<Matrix, super::DsvdError> {
+    health.check_finite_dist(ctx, "TSQR input", a)?;
+    let r = super::catch_dsvd(|| tsqr_r(ctx, a))?;
+    health.check_finite(ctx, "R", r.data())?;
+    Ok(r)
+}
+
 /// R-only TSQR of a **sparse** row matrix — the TSQR entry point of
 /// [`DistRowCsrMatrix`]: each leaf task densifies its CSR slab
 /// transiently inside the task (`O(slab)` resident, exactly the bits

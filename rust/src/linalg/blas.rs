@@ -587,6 +587,70 @@ impl Csr {
         (y, bt)
     }
 
+    /// Batched `C_f = A·B_f` for several dense right factors in one
+    /// streaming sweep of the CSR arrays: each row's nonzero segment is
+    /// walked once per factor *while hot in cache*, so the sparse data
+    /// streams from memory a single time however many factors ride
+    /// along (the same trick as [`Csr::matmul_and_tn`]). Per factor the
+    /// accumulation order — row by row, nonzeros ascending — is exactly
+    /// [`Csr::matmul`]'s, so each output is bit-identical to the
+    /// corresponding single call (pinned in `tests/op_equivalence.rs`).
+    pub fn matmul_batch(&self, bs: &[&Matrix]) -> Vec<Matrix> {
+        for b in bs {
+            assert_eq!(self.cols, b.rows(), "csr matmul_batch shape mismatch");
+        }
+        let mut cs: Vec<Matrix> =
+            bs.iter().map(|b| Matrix::zeros(self.rows, b.cols())).collect();
+        for i in 0..self.rows {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            for (c, b) in cs.iter_mut().zip(bs) {
+                let n = b.cols();
+                let bdata = b.data();
+                let crow = &mut c.data_mut()[i * n..(i + 1) * n];
+                for k in lo..hi {
+                    let v = self.vals[k];
+                    let p = self.col_idx[k];
+                    let brow = &bdata[p * n..(p + 1) * n];
+                    for (cj, &bj) in crow.iter_mut().zip(brow) {
+                        *cj += v * bj;
+                    }
+                }
+            }
+        }
+        cs
+    }
+
+    /// Batched `C_f = Aᵀ·B_f` — the transpose-side twin of
+    /// [`Csr::matmul_batch`]: one streaming sweep of the CSR arrays for
+    /// all factors, per-factor accumulation order identical to
+    /// [`Csr::matmul_tn`], outputs bit-identical to the single calls.
+    pub fn matmul_tn_batch(&self, bs: &[&Matrix]) -> Vec<Matrix> {
+        for b in bs {
+            assert_eq!(self.rows, b.rows(), "csr matmul_tn_batch shape mismatch");
+        }
+        let mut cs: Vec<Matrix> =
+            bs.iter().map(|b| Matrix::zeros(self.cols, b.cols())).collect();
+        for i in 0..self.rows {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            for (c, b) in cs.iter_mut().zip(bs) {
+                let n = b.cols();
+                let brow = &b.data()[i * n..(i + 1) * n];
+                let cdata = c.data_mut();
+                for k in lo..hi {
+                    let v = self.vals[k];
+                    let p = self.col_idx[k];
+                    let crow = &mut cdata[p * n..(p + 1) * n];
+                    for (cj, &bj) in crow.iter_mut().zip(brow) {
+                        *cj += v * bj;
+                    }
+                }
+            }
+        }
+        cs
+    }
+
     /// y = A·x.
     pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len(), "csr gemv length mismatch");
@@ -911,6 +975,31 @@ mod tests {
             let (yd, btd) = matmul_and_tn(&a, &w);
             assert!(y.sub(&yd).max_abs() < 1e-13);
             assert!(bt.sub(&btd).max_abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn csr_batch_kernels_bit_identical_to_single_calls() {
+        let mut rng = Rng::seed(82);
+        for &(m, n, density) in &[(13usize, 7usize, 0.15f64), (40, 25, 0.05), (8, 30, 0.5)] {
+            let a = randsparse(&mut rng, m, n, density);
+            let c = Csr::from_dense(&a);
+            // mixed widths on purpose: the batch serves ragged factors
+            let ws: Vec<Matrix> =
+                [3usize, 6, 1].iter().map(|&l| randmat(&mut rng, n, l)).collect();
+            let wrefs: Vec<&Matrix> = ws.iter().collect();
+            for (batch, w) in c.matmul_batch(&wrefs).iter().zip(&ws) {
+                assert_eq!(batch.data(), c.matmul(w).data(), "({m},{n}) A·W");
+            }
+            let qs: Vec<Matrix> =
+                [2usize, 5].iter().map(|&l| randmat(&mut rng, m, l)).collect();
+            let qrefs: Vec<&Matrix> = qs.iter().collect();
+            for (batch, q) in c.matmul_tn_batch(&qrefs).iter().zip(&qs) {
+                assert_eq!(batch.data(), c.matmul_tn(q).data(), "({m},{n}) Aᵀ·Q");
+            }
+            // empty batches are legal no-ops
+            assert!(c.matmul_batch(&[]).is_empty());
+            assert!(c.matmul_tn_batch(&[]).is_empty());
         }
     }
 

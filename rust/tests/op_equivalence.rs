@@ -10,7 +10,9 @@
 //! for instruction).
 
 use dsvd::algs::{algorithm7, algorithm8, DistSvd, LowRankOpts};
-use dsvd::dist::{BlockStorage, Context, DistBlockMatrix, DistOp, UnfusedOp};
+use dsvd::dist::{
+    BlockStorage, Context, DistBlockMatrix, DistOp, DistRowCsrMatrix, DistRowMatrix, UnfusedOp,
+};
 use dsvd::gen::{SparseRandTestMatrix, SparseSpectrumTestMatrix};
 use dsvd::linalg::{blas, Matrix};
 use dsvd::rng::Rng;
@@ -248,6 +250,81 @@ fn residual_verification_reads_a_once_per_iteration() {
         unfused_est.to_bits(),
         "fusing the verifier must not change the estimate: {fused_est} vs {unfused_est}"
     );
+}
+
+#[test]
+fn csr_slab_batch_products_pinned_to_defaults() {
+    // the tall-sparse batch overrides: `DistRowCsrMatrix` serves k
+    // factors from ONE sweep of the CSR arrays (one ledger pass), and
+    // must stay bit-identical to the per-factor trait defaults — which
+    // `UnfusedOp` deliberately keeps, making it the baseline here just
+    // as it is for the fused-step pins above.
+    let mut rng = Rng::seed(0xBA7C);
+    let a =
+        Matrix::from_fn(70, 12, |_, _| if rng.uniform() < 0.25 { rng.gauss() } else { 0.0 });
+    let d = DistRowCsrMatrix::from_matrix(&a, 9); // 8 slabs
+    let ctx = Context::new(8);
+    let be = NativeCompute;
+    let op: &dyn DistOp = &d;
+    let unfused = UnfusedOp(&d);
+    let base: &dyn DistOp = &unfused;
+
+    // ragged factor widths so per-factor bookkeeping can't hide behind
+    // a uniform shape
+    let ws: Vec<Matrix> = [2usize, 5, 3]
+        .iter()
+        .enumerate()
+        .map(|(j, &k)| {
+            let mut r = Rng::seed(0xBA7D + j as u64);
+            Matrix::from_fn(12, k, |_, _| r.gauss())
+        })
+        .collect();
+
+    ctx.reset_metrics();
+    let got = op.matmul_small_batch(&ctx, &be, &ws);
+    let m_batch = ctx.take_metrics();
+    ctx.reset_metrics();
+    let want = base.matmul_small_batch(&ctx, &be, &ws);
+    let m_default = ctx.take_metrics();
+    assert_eq!(m_batch.a_passes, 1, "batched A·Wₖ must charge one pass for k factors");
+    assert_eq!(m_default.a_passes, ws.len(), "default charges one pass per factor");
+    assert_eq!(got.len(), want.len());
+    for (f, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.parts.len(), w.parts.len(), "factor {f}: partitioning changed");
+        for (pg, pw) in g.parts.iter().zip(&w.parts) {
+            assert_eq!(pg.row_start, pw.row_start, "factor {f}: slab layout changed");
+            assert_eq!(pg.data.data(), pw.data.data(), "factor {f}: A·W changed bits");
+        }
+    }
+
+    let qs_owned: Vec<DistRowMatrix> = (0..3usize)
+        .map(|j| {
+            let mut r = Rng::seed(0xC0DE + j as u64);
+            DistRowMatrix::from_matrix(&Matrix::from_fn(70, 2 + j, |_, _| r.gauss()), 13)
+        })
+        .collect();
+    let qs: Vec<&DistRowMatrix> = qs_owned.iter().collect();
+
+    ctx.reset_metrics();
+    let got = op.rmatmul_small_batch(&ctx, &be, &qs);
+    assert_eq!(
+        ctx.take_metrics().a_passes,
+        1,
+        "batched Aᵀ·Qₖ must charge one pass for k factors"
+    );
+    ctx.reset_metrics();
+    let want = base.rmatmul_small_batch(&ctx, &be, &qs);
+    assert_eq!(ctx.take_metrics().a_passes, qs.len(), "default charges one pass per factor");
+    assert_eq!(got.len(), want.len());
+    for (f, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.data(), w.data(), "factor {f}: Aᵀ·Q changed bits");
+    }
+
+    // degenerate batches stay cheap and well-formed
+    ctx.reset_metrics();
+    assert!(op.matmul_small_batch(&ctx, &be, &[]).is_empty());
+    assert!(op.rmatmul_small_batch(&ctx, &be, &[]).is_empty());
+    assert_eq!(ctx.take_metrics().a_passes, 0, "empty batches must not touch A");
 }
 
 #[test]

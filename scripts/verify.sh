@@ -6,9 +6,11 @@
 #                                the scaled benches ->
 #                                BENCH_tall_skinny.json, BENCH_lowrank.json,
 #                                BENCH_gen.json, BENCH_sparse.json,
-#                                BENCH_fused.json, BENCH_ooc.json
+#                                BENCH_fused.json, BENCH_ooc.json,
+#                                BENCH_faults.json
 #                                (fails if any record was not written; the
-#                                fused and out-of-core benches also gate)
+#                                fused, out-of-core, and fault benches
+#                                also gate)
 #   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
 #                                scaling acceptance test (>=4 cores)
 #
@@ -93,9 +95,21 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_ooc.json" \
     cargo bench --bench tables_ooc
 
+# the fault-injection sweep is a GATE too: the bench panics unless every
+# faulted run (rates 0.1 / 0.3 of seeded panics, transient errors, and
+# stragglers) recovers bit-identical to the fault-free reference and
+# every nonzero rate actually injected faults; runs with an inert fault
+# plan in the environment so only the bench's own seeded plans fire
+echo "== scaled bench + fault-recovery gates: tables_faults (DSVD_BENCH_SCALE=${SCALE})"
+env -u DSVD_FAULT_SEED -u DSVD_FAULT_RATE \
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_faults.json" \
+    cargo bench --bench tables_faults
+
 # every expected perf record must exist and be non-empty
 for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
-         BENCH_fused.json BENCH_ooc.json; do
+         BENCH_fused.json BENCH_ooc.json BENCH_faults.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
@@ -122,7 +136,17 @@ if ! grep -q '"a_passes_match_resident": true' BENCH_ooc.json; then
     echo "!! BENCH_ooc.json lacks the pass-equality gate field" >&2
     exit 1
 fi
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json"
+# the fault record must carry the recovery flag on every row, and no
+# row may have failed to recover bit-identically
+if ! grep -q '"recovered_bit_identical": true' BENCH_faults.json; then
+    echo "!! BENCH_faults.json lacks the bit-identical-recovery gate field" >&2
+    exit 1
+fi
+if grep -q '"recovered_bit_identical": false' BENCH_faults.json; then
+    echo "!! a faulted run was not bit-identical to the fault-free reference" >&2
+    exit 1
+fi
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json"
 
 if [ "${FULL:-0}" = "1" ]; then
     # the worker-scaling check gates in the debug tier-1 run already
