@@ -3,6 +3,14 @@
 //!
 //!     cargo run --release --example streaming_lowrank
 //!
+//! Despite the file name, this is a **batch** demo: the whole
+//! preference matrix is materialized up front and each algorithm runs
+//! over it at rest — nothing streams. (The name anticipates the
+//! ROADMAP item "One-pass streaming SVD and an incremental sketch
+//! service", for which this is the designated seed workload; until
+//! that lands, read "streaming" as the scenario class, not the
+//! execution model.)
+//!
 //! Builds a 8192 × 4096 "user × item" preference matrix with a planted
 //! rank-12 structure plus noise, stores it as a DistBlockMatrix (the
 //! shape where no full row-set fits one machine), and compares

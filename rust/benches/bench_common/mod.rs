@@ -51,9 +51,10 @@ pub fn ensure_sweep_comms(cfg: &mut RunConfig) {
 }
 
 /// The metrics fields shared by every bench JSON record (the pass
-/// ledger, the out-of-core spill ledger, and the fault-tolerance
-/// counters ride along so fused-vs-unfused, resident-vs-spilled, and
-/// faulted-vs-fault-free comparisons are reproducible from the records
+/// ledger, the out-of-core spill ledger, the fault-tolerance counters,
+/// and the adaptive-execution counters ride along so fused-vs-unfused,
+/// resident-vs-spilled, faulted-vs-fault-free, and
+/// adaptive-vs-fixed-rank comparisons are reproducible from the records
 /// alone).
 #[allow(dead_code)]
 pub fn metrics_json(m: &Metrics) -> String {
@@ -63,7 +64,8 @@ pub fn metrics_json(m: &Metrics) -> String {
          \"a_passes\": {}, \"blocks_materialized\": {}, \"spill_bytes_read\": {}, \
          \"spill_bytes_written\": {}, \"peak_resident_bytes\": {}, \
          \"faults_injected\": {}, \"tasks_retried\": {}, \"speculative_launches\": {}, \
-         \"recoveries\": {}, \"health_checks_run\": {}",
+         \"recoveries\": {}, \"health_checks_run\": {}, \"probe_matvecs\": {}, \
+         \"adaptive_rounds\": {}, \"final_rank\": {}",
         m.cpu_time,
         m.wall_clock,
         m.driver_elapsed,
@@ -80,7 +82,10 @@ pub fn metrics_json(m: &Metrics) -> String {
         m.tasks_retried,
         m.speculative_launches,
         m.recoveries,
-        m.health_checks_run
+        m.health_checks_run,
+        m.probe_matvecs,
+        m.adaptive_rounds,
+        m.final_rank
     )
 }
 

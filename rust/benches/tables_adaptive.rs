@@ -1,0 +1,137 @@
+//! Adaptive (tolerance-first) execution vs fixed-rank baselines.
+//!
+//! Sweeps tolerance targets over a geometric-spectrum block matrix and
+//! runs the adaptive Algorithm 7/8 drivers, then replays a fixed-rank
+//! run at the rank the adaptive driver settled on (with matched power
+//! iterations). Each record carries three boolean gates that
+//! scripts/verify.sh greps for:
+//!
+//!   within_tolerance      achieved ‖A − UΣV*‖₂ ≤ requested tolerance
+//!   estimator_within_hmt  recon ≤ estimate ≤ 10·√(2/π)·(√n+4)·recon —
+//!                         the HMT §4.3 posterior estimator really is an
+//!                         upper bound, and not wildly pessimistic
+//!   passes_within_budget  adaptive a_passes ≤ fixed-rank a_passes + 1
+//!                         (the probe matvecs ride existing traversals;
+//!                         rank discovery costs at most one extra pass)
+//!
+//!     cargo bench --bench tables_adaptive
+
+mod bench_common;
+
+use bench_common::{bench_config, metrics_json, write_bench_json};
+use dsvd::gen::{spectrum_geometric, DctBlockTestMatrix};
+use dsvd::harness::{run_lowrank_adaptive_prepared, run_lowrank_prepared, sci, LrAlg};
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let n = 128usize;
+    let m = (8192 / scale).max(n * 2);
+
+    let mut cfg = cfg_base.clone();
+    cfg.cols_per_part = n; // single block column at this scale
+    cfg.rows_per_part = (m / 16).max(1); // 16 row partitions
+    cfg.block_size = 8; // l0 and Δl
+
+    let ctx = cfg.context();
+    let sigma = spectrum_geometric(n);
+    let gen = DctBlockTestMatrix::new(m, n, &sigma);
+    let a = gen.generate(&ctx, be.as_ref(), cfg.rows_per_part, cfg.cols_per_part);
+
+    // Algorithm 8's Gram-based final factorization floors around
+    // √(working precision) ≈ 3e-6, so it only sweeps tolerances above
+    // that floor; Algorithm 7 (TSQR) goes deeper.
+    let sweep: [(LrAlg, &[f64]); 2] =
+        [(LrAlg::A7, &[1e-2, 1e-4, 1e-6]), (LrAlg::A8, &[1e-2, 1e-4])];
+    // Not-wildly-pessimistic envelope: ‖(A−QQ*A)ω‖ ≤ ‖A−QQ*A‖₂·‖ω‖ and
+    // a length-n gaussian probe has ‖ω‖ ≈ √n + O(1) w.h.p.
+    let envelope = 10.0 * (2.0 / std::f64::consts::PI).sqrt() * ((n as f64).sqrt() + 4.0);
+
+    println!("================================================================");
+    println!(
+        "Adaptive tolerance-first sweep — m={m} n={n} geometric spectrum, \
+         l0=Δl={}, backend={}",
+        cfg.block_size,
+        be.name()
+    );
+    println!("----------------------------------------------------------------");
+    println!(
+        "{:>11}  {:>9}  {:>5}  {:>6}  {:>10}  {:>10}  {:>7}  {:>7}",
+        "alg", "tol", "rank", "rounds", "estimate", "recon", "passes", "fixed"
+    );
+
+    let mut records = Vec::new();
+    for (alg, tols) in sweep {
+        for &tol in tols {
+            let run = run_lowrank_adaptive_prepared(&cfg, be.as_ref(), &a, tol, alg)
+                .unwrap_or_else(|e| {
+                    panic!("adaptive {} at tolerance {tol:e} failed: {e}", alg.name())
+                });
+            let report = &run.report;
+            let row = &run.row;
+
+            // Matched fixed-rank replay: same operator, the rank the
+            // adaptive run discovered, and rounds−1 power iterations
+            // (round 1 is the initial sketch).
+            let fixed_iters = report.rounds.saturating_sub(1).max(1);
+            let fixed =
+                run_lowrank_prepared(&cfg, be.as_ref(), &a, report.final_rank, fixed_iters, alg);
+
+            let within_tolerance = row.recon <= tol;
+            let estimator_within_hmt = row.recon <= report.estimate
+                && report.estimate <= (envelope * row.recon).max(1e-12);
+            let passes_within_budget = row.metrics.a_passes <= fixed.metrics.a_passes + 1;
+
+            println!(
+                "{:>11}  {:>9}  {:>5}  {:>6}  {:>10}  {:>10}  {:>7}  {:>7}",
+                row.algorithm,
+                sci(tol),
+                report.final_rank,
+                report.rounds,
+                sci(report.estimate),
+                sci(row.recon),
+                row.metrics.a_passes,
+                fixed.metrics.a_passes
+            );
+            for (gate, ok) in [
+                ("within_tolerance", within_tolerance),
+                ("estimator_within_hmt", estimator_within_hmt),
+                ("passes_within_budget", passes_within_budget),
+            ] {
+                if !ok {
+                    println!("  !! gate {gate} FAILED");
+                }
+            }
+
+            records.push(format!(
+                "\"suite\": \"ADAPTIVE\", \"m\": {}, \"n\": {}, \"algorithm\": \"{}\", \
+                 \"tolerance\": {:e}, \"estimate\": {:e}, \"final_rank\": {}, \
+                 \"rounds\": {}, \"probe_matvecs\": {}, \"block_size\": {}, {}, \
+                 \"recon\": {:e}, \"u_orth\": {:e}, \"v_orth\": {:e}, \
+                 \"fixed_rank_iters\": {}, \"fixed_rank_a_passes\": {}, \
+                 \"fixed_rank_recon\": {:e}, \"within_tolerance\": {}, \
+                 \"estimator_within_hmt\": {}, \"passes_within_budget\": {}",
+                m,
+                n,
+                row.algorithm,
+                tol,
+                report.estimate,
+                report.final_rank,
+                report.rounds,
+                report.probe_matvecs,
+                cfg.block_size,
+                metrics_json(&row.metrics),
+                row.recon,
+                row.u_orth,
+                row.v_orth,
+                fixed_iters,
+                fixed.metrics.a_passes,
+                fixed.recon,
+                within_tolerance,
+                estimator_within_hmt,
+                passes_within_budget,
+            ));
+        }
+    }
+
+    write_bench_json("BENCH_adaptive.json", &records);
+}

@@ -11,8 +11,10 @@ pub mod tall_skinny;
 
 pub use arnoldi::{preexisting_lowrank, ArnoldiOpts};
 pub use lowrank::{
-    algorithm5, algorithm6, algorithm7, algorithm8, try_algorithm5, try_algorithm7,
-    try_algorithm8, LowRankOpts, TsMethod,
+    algorithm5, algorithm5_adaptive, algorithm6, algorithm7, algorithm7_adaptive, algorithm8,
+    algorithm8_adaptive, try_algorithm5, try_algorithm5_adaptive, try_algorithm7,
+    try_algorithm7_adaptive, try_algorithm8, try_algorithm8_adaptive, AdaptiveOpts, AdaptiveReport,
+    AdaptiveRound, LowRankOpts, TsMethod,
 };
 pub use tall_skinny::{
     algorithm1, algorithm1_csr, algorithm1_explicit_q, algorithm2, algorithm2_csr, algorithm3,

@@ -116,11 +116,39 @@ pub struct TallSkinnyOpts {
     pub srft_chains: usize,
     /// Seed for Ω.
     pub seed: u64,
+    /// Stream index of this Ω draw. Every SRFT draw site derives its
+    /// generator via [`TallSkinnyOpts::srft_rng`], which splits the root
+    /// stream by this index — so call sites that must draw independent
+    /// mixings (Algorithm 5's power-iteration rounds, its final double
+    /// orthonormalization) bump the index and get statistically
+    /// independent Ωs while staying fully deterministic in
+    /// `(seed, srft_draw)`. The top-level Algorithms 1–4 use draw 0.
+    ///
+    /// Before this field existed every draw site ran `Rng::seed(seed)`
+    /// directly, so all of Algorithm 5's rounds reused the *identical*
+    /// mixing matrix.
+    pub srft_draw: u64,
 }
 
 impl Default for TallSkinnyOpts {
     fn default() -> Self {
-        TallSkinnyOpts { working_precision: 1e-11, srft_chains: 2, seed: 0x5EED }
+        TallSkinnyOpts { working_precision: 1e-11, srft_chains: 2, seed: 0x5EED, srft_draw: 0 }
+    }
+}
+
+impl TallSkinnyOpts {
+    /// This draw's seeded generator: the root stream `Rng::seed(seed)`
+    /// split by `srft_draw`, so distinct draw indices yield independent
+    /// streams and equal `(seed, srft_draw)` pairs yield identical bits.
+    pub fn srft_rng(&self) -> Rng {
+        Rng::seed(self.seed).split(self.srft_draw)
+    }
+
+    /// A copy of these options addressing a different SRFT draw stream.
+    pub fn with_draw(&self, draw: u64) -> TallSkinnyOpts {
+        let mut o = self.clone();
+        o.srft_draw = draw;
+        o
     }
 }
 
@@ -171,7 +199,7 @@ fn algorithm1_impl<A: TallInput + ?Sized>(
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
     let n = a.input_cols();
-    let mut rng = Rng::seed(opts.seed);
+    let mut rng = opts.srft_rng();
     let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
 
     // step 1 — mix every row (map stage; dense output, any storage in)
@@ -234,7 +262,7 @@ fn algorithm2_impl<A: TallInput + ?Sized>(
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
     let n = a.input_cols();
-    let mut rng = Rng::seed(opts.seed);
+    let mut rng = opts.srft_rng();
     let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
 
     // step 1 — mix
@@ -276,7 +304,7 @@ pub fn algorithm1_explicit_q(
     opts: &TallSkinnyOpts,
 ) -> DistSvd {
     let n = a.cols();
-    let mut rng = Rng::seed(opts.seed);
+    let mut rng = opts.srft_rng();
     let om = ctx.driver(|| Srft::with_chains(n, opts.srft_chains, &mut rng));
     let mut mixed = a.clone();
     mixed.map_rows(ctx, |row| om.forward(row));
@@ -547,7 +575,10 @@ pub fn preexisting(
 /// of R past the working-precision prefix, then reconstitute
 /// `Q = B[:, :k']·R₁₁⁻¹` with one distributed product. Exact because R is
 /// upper triangular: `B[:, :k'] = Q·R[:, :k'] = Q·R₁₁`.
-fn implicit_q(
+/// (`pub(crate)` so Algorithm 5's adaptive range finder in `lowrank.rs`
+/// can orthonormalize each fresh sketch block through the same TSQR
+/// merge without recomputing previous columns.)
+pub(crate) fn implicit_q(
     ctx: &Context,
     be: &dyn Compute,
     b: &DistRowMatrix,
@@ -813,6 +844,34 @@ mod tests {
         out: &DistSvd,
     ) -> ErrorReport {
         error_report(ctx, &NativeCompute, a, &out.u, &out.s, &out.v)
+    }
+
+    /// Distinct `srft_draw` indices must produce genuinely different
+    /// mixings, and equal indices identical bits — the regression guard
+    /// for the bug where every draw site ran `Rng::seed(opts.seed)` and
+    /// so every Ω in the process was the same matrix.
+    #[test]
+    fn srft_draw_streams_are_distinct_and_deterministic() {
+        let opts = TallSkinnyOpts::default();
+        let probe = |draw: u64| {
+            let mut rng = opts.with_draw(draw).srft_rng();
+            let om = Srft::with_chains(16, opts.srft_chains, &mut rng);
+            let mut row = vec![0.0; 16];
+            row[0] = 1.0;
+            om.forward(&mut row);
+            row
+        };
+        let d0 = probe(0);
+        let d1 = probe(1);
+        let d2 = probe(2);
+        assert_ne!(d0, d1, "draws 0 and 1 share a mixing matrix");
+        assert_ne!(d1, d2, "draws 1 and 2 share a mixing matrix");
+        assert_ne!(d0, d2, "draws 0 and 2 share a mixing matrix");
+        // determinism: the same (seed, draw) pair reproduces the bits
+        assert_eq!(d0, probe(0));
+        // and different draws still mix orthogonally (energy preserved)
+        let e: f64 = d1.iter().map(|v| v * v).sum();
+        assert!((e - 1.0).abs() < 1e-12, "draw-1 mixing not orthogonal: {e}");
     }
 
     #[test]

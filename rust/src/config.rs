@@ -62,6 +62,13 @@ pub struct RunConfig {
     pub backend: Backend,
     /// Power iterations for the error columns.
     pub power_iters: usize,
+    /// Target spectral-norm error `‖A − UΣVᵀ‖₂ ≤ tolerance` for the
+    /// adaptive (tolerance-first) entry points; `0.0` means disabled —
+    /// run the classic rank-first algorithms instead.
+    pub tolerance: f64,
+    /// Sketch growth increment Δl for the adaptive range finder (also
+    /// the initial block l₀ unless the caller overrides it).
+    pub block_size: usize,
 }
 
 impl Default for RunConfig {
@@ -80,6 +87,8 @@ impl Default for RunConfig {
             seed: 0x5EED,
             backend: Backend::Native,
             power_iters: 60,
+            tolerance: 0.0,
+            block_size: 8,
         }
     }
 }
@@ -117,6 +126,7 @@ impl RunConfig {
             working_precision: self.working_precision,
             srft_chains: self.srft_chains,
             seed: self.seed,
+            srft_draw: 0,
         }
     }
 
@@ -157,6 +167,20 @@ impl RunConfig {
             "backend" => self.backend = value.parse()?,
             "power-iters" | "power_iters" => {
                 self.power_iters = value.parse().map_err(|e| bad(&e))?
+            }
+            "tolerance" => {
+                let v: f64 = value.parse().map_err(|e| bad(&e))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("bad value for {key}: must be finite and >= 0"));
+                }
+                self.tolerance = v;
+            }
+            "block-size" | "block_size" => {
+                let v: usize = value.parse().map_err(|e| bad(&e))?;
+                if v == 0 {
+                    return Err(format!("bad value for {key}: must be >= 1"));
+                }
+                self.block_size = v;
             }
             other => return Err(format!("unknown configuration key '{other}'")),
         }
@@ -271,6 +295,22 @@ mod tests {
         .unwrap();
         assert_eq!(c.executors, 18); // from file
         assert_eq!(c.seed, 9); // CLI wins
+    }
+
+    #[test]
+    fn parse_adaptive_flags() {
+        let (c, _) = parse_flags(&s(&["--tolerance", "1e-6", "--block-size=16"])).unwrap();
+        assert_eq!(c.tolerance, 1e-6);
+        assert_eq!(c.block_size, 16);
+        // snake_case spelling accepted like every other knob
+        let mut d = RunConfig::default();
+        assert_eq!(d.tolerance, 0.0, "adaptive mode must default to off");
+        d.apply("block_size", "4").unwrap();
+        assert_eq!(d.block_size, 4);
+        // rejected: negative/NaN tolerance, zero growth block
+        assert!(d.apply("tolerance", "-1e-6").is_err());
+        assert!(d.apply("tolerance", "NaN").is_err());
+        assert!(d.apply("block-size", "0").is_err());
     }
 
     #[test]

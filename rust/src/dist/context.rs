@@ -496,6 +496,21 @@ impl Context {
     pub(crate) fn add_health_check(&self) {
         self.metrics_guard().health_checks_run += 1;
     }
+
+    /// Record one adaptive growth round: `probes` posterior-estimator
+    /// probe columns consumed, basis now at `rank` columns (the
+    /// `probe_matvecs` / `adaptive_rounds` / `final_rank` ledger — see
+    /// [`Metrics`]).
+    pub(crate) fn add_adaptive_round(&self, probes: usize, rank: usize) {
+        self.metrics_guard().add_adaptive_round(probes, rank);
+    }
+
+    /// Pin `Metrics::final_rank` to the column count of the factor an
+    /// adaptive run actually returned (the last round's snapshot may
+    /// predate the final orthonormalization's own discards).
+    pub(crate) fn set_final_rank(&self, rank: usize) {
+        self.metrics_guard().final_rank = rank;
+    }
 }
 
 /// Stamp a [`DsvdError::TaskPanicked`] with its stage/task coordinates

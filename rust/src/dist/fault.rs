@@ -77,6 +77,20 @@ pub enum DsvdError {
         /// The bound it had to stay under.
         threshold: f64,
     },
+    /// The adaptive range finder hit its rank/round caps (or the sketch
+    /// collapsed to numerical noise) with the posterior error estimate
+    /// still above the requested tolerance — the typed "your tolerance
+    /// is unreachable at this budget" outcome, never a panic.
+    ToleranceUnreachable {
+        /// The spectral-norm tolerance the caller asked for.
+        requested: f64,
+        /// The posterior error estimate when the run gave up.
+        estimate: f64,
+        /// Basis columns accumulated when the run gave up.
+        rank: usize,
+        /// The rank cap (`l_max`) the run was not allowed to exceed.
+        l_max: usize,
+    },
 }
 
 impl fmt::Display for DsvdError {
@@ -93,6 +107,11 @@ impl fmt::Display for DsvdError {
             DsvdError::NumericalHealth { check, factor, value, threshold } => write!(
                 f,
                 "health check '{check}' failed for factor {factor}: {value:e} exceeds {threshold:e}"
+            ),
+            DsvdError::ToleranceUnreachable { requested, estimate, rank, l_max } => write!(
+                f,
+                "tolerance {requested:e} unreachable: posterior error estimate still \
+                 {estimate:e} at rank {rank} (cap {l_max})"
             ),
         }
     }
@@ -557,6 +576,15 @@ mod tests {
             threshold: 1e-6,
         };
         assert!(e.to_string().contains("orthonormal"));
+        let e = DsvdError::ToleranceUnreachable {
+            requested: 1e-12,
+            estimate: 3e-4,
+            rank: 64,
+            l_max: 64,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("unreachable"), "{msg}");
+        assert!(msg.contains("rank 64"), "{msg}");
     }
 
     #[test]

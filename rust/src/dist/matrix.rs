@@ -228,6 +228,58 @@ impl DistRowMatrix {
         DistRowMatrix { parts, rows: self.rows, cols: w.cols() }
     }
 
+    /// Column-append a co-partitioned distributed factor:
+    /// `[self | other]`, one local copy task per slab pair, nothing
+    /// gathered to the driver. This is how the adaptive range finder
+    /// grows its sketch basis block-by-block — previously-orthonormalized
+    /// columns are appended to, never recomputed. Both sides must share
+    /// the slab layout (true by construction for factors derived from
+    /// the same operator partitioning).
+    pub fn hstack(&self, ctx: &Context, other: &DistRowMatrix) -> DistRowMatrix {
+        assert_eq!(self.rows, other.rows, "hstack: row-count mismatch");
+        assert_eq!(self.parts.len(), other.parts.len(), "hstack: slab-layout mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .zip(&other.parts)
+            .map(|(p, q)| {
+                assert_eq!(p.row_start, q.row_start, "hstack: slab-layout mismatch");
+                Box::new(move || RowPartition {
+                    row_start: p.row_start,
+                    data: p.data.hstack(&q.data),
+                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix { parts, rows: self.rows, cols: self.cols + other.cols }
+    }
+
+    /// Subtract a co-partitioned distributed factor in place (one task
+    /// per slab pair) — the projection step `Y ← Y − Q·(QᵀY)` of the
+    /// adaptive range finder, kept distributed end-to-end.
+    pub fn sub_assign(&mut self, ctx: &Context, other: &DistRowMatrix) {
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.rows, other.cols),
+            "sub_assign: shape mismatch"
+        );
+        assert_eq!(self.parts.len(), other.parts.len(), "sub_assign: slab-layout mismatch");
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .parts
+            .iter_mut()
+            .zip(&other.parts)
+            .map(|(p, q)| {
+                assert_eq!(p.row_start, q.row_start, "sub_assign: slab-layout mismatch");
+                Box::new(move || {
+                    for (d, s) in p.data.data_mut().iter_mut().zip(q.data.data()) {
+                        *d -= s;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        ctx.stage(tasks);
+    }
+
     /// `AᵀA` (n×n, driver-held) by per-partition Gram + treeAggregate.
     pub fn gram(&self, ctx: &Context, be: &dyn Compute) -> Matrix {
         let n = self.cols;
@@ -1846,6 +1898,38 @@ mod tests {
         assert_eq!(d.parts[0].row_start, 0);
         let ctx = Context::new(2);
         assert_eq!(d.collect(&ctx), a);
+    }
+
+    #[test]
+    fn hstack_and_sub_assign_match_dense() {
+        let ctx = Context::new(4);
+        let a = randmat(21, 33, 5);
+        let b = randmat(22, 33, 3);
+        let da = DistRowMatrix::from_matrix(&a, 8);
+        let db = DistRowMatrix::from_matrix(&b, 8);
+
+        let cat = da.hstack(&ctx, &db);
+        assert_eq!(cat.rows(), 33);
+        assert_eq!(cat.cols(), 8);
+        assert_eq!(cat.collect(&ctx), a.hstack(&b));
+        // the append stays distributed: slab layout preserved
+        assert_eq!(cat.num_partitions(), da.num_partitions());
+        assert_eq!(cat.parts[1].row_start, da.parts[1].row_start);
+
+        let c = randmat(23, 33, 5);
+        let mut dm = da.clone();
+        dm.sub_assign(&ctx, &DistRowMatrix::from_matrix(&c, 8));
+        assert!(dm.collect(&ctx).sub(&a.sub(&c)).max_abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "slab-layout mismatch")]
+    fn hstack_rejects_mismatched_slabs() {
+        let ctx = Context::new(2);
+        let a = randmat(24, 20, 2);
+        let da = DistRowMatrix::from_matrix(&a, 8);
+        let db = DistRowMatrix::from_matrix(&a, 5);
+        let _ = da.hstack(&ctx, &db);
     }
 
     #[test]

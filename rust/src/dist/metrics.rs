@@ -152,6 +152,17 @@ pub struct Metrics {
     /// ([`crate::dist::HealthCheck`] finite scans and orthonormality
     /// drift checks) run at stage boundaries.
     pub health_checks_run: usize,
+    /// Gaussian probe vectors consumed by the adaptive posterior error
+    /// estimator (HMT §4.3): each probe is one column of a fused power
+    /// step, so probes ride existing A passes — this counts them
+    /// separately so the estimator's sampling effort is visible.
+    pub probe_matvecs: usize,
+    /// Growth rounds the adaptive range finder executed (the first
+    /// `l₀`-column round counts as round 1; a fixed-rank run records 0).
+    pub adaptive_rounds: usize,
+    /// Rank the adaptive run settled on (columns of the final basis
+    /// after the working-precision discard); 0 for fixed-rank runs.
+    pub final_rank: usize,
 }
 
 /// Per-stage tallies the fault-tolerant stage loop hands to
@@ -270,6 +281,17 @@ impl Metrics {
         self.spill_bytes_read += read;
         self.spill_bytes_written += written;
         self.peak_resident_bytes = self.peak_resident_bytes.max(peak_resident);
+    }
+
+    /// Fold one adaptive growth round into the window: `probes` gaussian
+    /// probe columns were consumed by the posterior estimator and the
+    /// basis now holds `rank` columns. Rounds accumulate; the rank is a
+    /// last-writer-wins snapshot (the final round's value is the run's
+    /// final rank).
+    pub(crate) fn add_adaptive_round(&mut self, probes: usize, rank: usize) {
+        self.adaptive_rounds += 1;
+        self.probe_matvecs += probes;
+        self.final_rank = rank;
     }
 
     /// Record a driver-bound gather (e.g. `collect`): the whole cluster
@@ -454,6 +476,20 @@ mod tests {
         assert_eq!(m.tasks_retried, 1);
         assert_eq!(m.speculative_launches, 1);
         assert_eq!(m.recoveries, 1);
+    }
+
+    #[test]
+    fn adaptive_ledger_accumulates_rounds_and_snapshots_rank() {
+        let mut m = Metrics::default();
+        m.add_adaptive_round(8, 8);
+        m.add_adaptive_round(4, 12);
+        m.add_adaptive_round(4, 14); // discard shrank the last block
+        assert_eq!(m.adaptive_rounds, 3);
+        assert_eq!(m.probe_matvecs, 16);
+        assert_eq!(m.final_rank, 14, "final_rank must be the last round's rank");
+        // the adaptive ledger is bookkeeping, not time or passes
+        assert_eq!(m.cpu_time, 0.0);
+        assert_eq!(m.a_passes, 0);
     }
 
     #[test]

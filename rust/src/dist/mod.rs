@@ -48,7 +48,7 @@ pub use matrix::{
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
 pub use op::{DistOp, UnfusedOp};
 pub use row_csr::{CsrRowPartition, DistRowCsrMatrix};
-pub use spill::{EvictPolicy, SpillError, SpillStats, SpillStore, SpilledBlock};
+pub use spill::{parse_budget, EvictPolicy, SpillError, SpillStats, SpillStore, SpilledBlock};
 pub use tsqr::{
     tsqr, tsqr_lineage, tsqr_r, tsqr_r_checked, tsqr_r_csr, tsqr_with_stats, TsqrFactors,
     TsqrMemStats,

@@ -139,14 +139,28 @@ pub enum EvictPolicy {
 }
 
 impl EvictPolicy {
-    /// Parse `DSVD_SPILL_POLICY` (`lru` | `clock`, case-insensitive).
-    /// Unset or unrecognized values fall back to [`EvictPolicy::Lru`].
-    pub fn from_env() -> EvictPolicy {
-        match std::env::var("DSVD_SPILL_POLICY") {
-            Ok(v) if v.eq_ignore_ascii_case("clock") => EvictPolicy::Clock,
+    /// Parse a policy value (`lru` | `clock`, case-insensitive). `None`
+    /// or unrecognized values fall back to [`EvictPolicy::Lru`]. Pure —
+    /// the environment-reading [`EvictPolicy::from_env`] delegates here
+    /// so tests can cover every case without mutating process globals.
+    pub fn parse(value: Option<&str>) -> EvictPolicy {
+        match value {
+            Some(v) if v.eq_ignore_ascii_case("clock") => EvictPolicy::Clock,
             _ => EvictPolicy::Lru,
         }
     }
+
+    /// Parse `DSVD_SPILL_POLICY` via [`EvictPolicy::parse`].
+    pub fn from_env() -> EvictPolicy {
+        Self::parse(std::env::var("DSVD_SPILL_POLICY").ok().as_deref())
+    }
+}
+
+/// Parse a cache-budget value in bytes. `None` or unparsable means
+/// unbounded (`usize::MAX`); an explicit `0` means nothing stays cached
+/// between fetches. Pure counterpart of [`SpillStore::from_env`].
+pub fn parse_budget(value: Option<&str>) -> usize {
+    value.and_then(|v| v.parse::<usize>().ok()).unwrap_or(usize::MAX)
 }
 
 struct CacheInner {
@@ -238,10 +252,7 @@ impl SpillStore {
     /// [`SpillStore::with_budget`] says it means — nothing stays cached
     /// between fetches.
     pub fn from_env() -> Result<Arc<SpillStore>, SpillError> {
-        let budget = std::env::var("DSVD_MEMORY_BUDGET")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(usize::MAX);
+        let budget = parse_budget(std::env::var("DSVD_MEMORY_BUDGET").ok().as_deref());
         Self::with_budget_and_policy(budget, EvictPolicy::from_env())
     }
 
@@ -724,33 +735,34 @@ mod tests {
 
     #[test]
     fn env_policy_parsing() {
-        std::env::remove_var("DSVD_SPILL_POLICY");
-        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Lru);
-        std::env::set_var("DSVD_SPILL_POLICY", "clock");
-        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Clock);
-        std::env::set_var("DSVD_SPILL_POLICY", "CLOCK");
-        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Clock);
+        // hermetic: the pure parser is the whole env-var semantics, so
+        // no `set_var`/`remove_var` (which races under the parallel
+        // test runner) is needed to cover every case
+        assert_eq!(EvictPolicy::parse(None), EvictPolicy::Lru);
+        assert_eq!(EvictPolicy::parse(Some("clock")), EvictPolicy::Clock);
+        assert_eq!(EvictPolicy::parse(Some("CLOCK")), EvictPolicy::Clock);
+        assert_eq!(EvictPolicy::parse(Some("lru")), EvictPolicy::Lru);
         // unknown values fall back to the LRU default
-        std::env::set_var("DSVD_SPILL_POLICY", "mru");
-        assert_eq!(EvictPolicy::from_env(), EvictPolicy::Lru);
-        std::env::remove_var("DSVD_SPILL_POLICY");
+        assert_eq!(EvictPolicy::parse(Some("mru")), EvictPolicy::Lru);
+        assert_eq!(EvictPolicy::parse(Some("")), EvictPolicy::Lru);
         // the plain constructor never consults the environment
         assert_eq!(SpillStore::with_budget(0).unwrap().policy(), EvictPolicy::Lru);
     }
 
     #[test]
     fn env_budget_parsing() {
-        // hermetic: drive the variable explicitly (no other test in
-        // this binary reads it)
-        std::env::remove_var("DSVD_MEMORY_BUDGET");
-        assert_eq!(SpillStore::from_env().unwrap().budget(), usize::MAX);
-        std::env::set_var("DSVD_MEMORY_BUDGET", "4096");
-        assert_eq!(SpillStore::from_env().unwrap().budget(), 4096);
+        // hermetic: exercise the pure parser rather than mutating the
+        // process environment (see env_policy_parsing)
+        assert_eq!(parse_budget(None), usize::MAX);
+        assert_eq!(parse_budget(Some("4096")), 4096);
         // an explicit 0 caches nothing — NOT unbounded
-        std::env::set_var("DSVD_MEMORY_BUDGET", "0");
-        assert_eq!(SpillStore::from_env().unwrap().budget(), 0);
-        std::env::set_var("DSVD_MEMORY_BUDGET", "not-a-number");
-        assert_eq!(SpillStore::from_env().unwrap().budget(), usize::MAX);
-        std::env::remove_var("DSVD_MEMORY_BUDGET");
+        assert_eq!(parse_budget(Some("0")), 0);
+        assert_eq!(parse_budget(Some("not-a-number")), usize::MAX);
+        assert_eq!(parse_budget(Some("")), usize::MAX);
+        // the explicit constructor reports what it was given
+        assert_eq!(
+            SpillStore::with_budget_and_policy(4096, EvictPolicy::Clock).unwrap().budget(),
+            4096
+        );
     }
 }

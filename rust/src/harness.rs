@@ -7,8 +7,9 @@
 //! tables do not include the time spent checking the accuracy").
 
 use crate::algs::{
-    algorithm1, algorithm2, algorithm3, algorithm4, algorithm7, algorithm8, preexisting,
-    preexisting_lowrank, ArnoldiOpts, DistSvd, LowRankOpts,
+    algorithm1, algorithm2, algorithm3, algorithm4, algorithm7, algorithm7_adaptive, algorithm8,
+    algorithm8_adaptive, preexisting, preexisting_lowrank, AdaptiveOpts, AdaptiveReport,
+    ArnoldiOpts, DistSvd, LowRankOpts,
 };
 use crate::config::RunConfig;
 use crate::dist::{Context, DistBlockMatrix, DistOp, DistRowMatrix, Metrics};
@@ -280,6 +281,77 @@ pub fn run_lowrank_prepared(
     TableRow { algorithm: alg.name().to_string(), metrics, recon, u_orth, v_orth }
 }
 
+/// One row of the adaptive (tolerance-first) sweep: the usual table
+/// surface plus the adaptive run's own report and the tolerance it was
+/// asked for — enough for a record to gate "achieved ≤ requested" and
+/// "estimate ≥ achieved" offline.
+#[derive(Clone, Debug)]
+pub struct AdaptiveRunRow {
+    pub row: TableRow,
+    pub report: AdaptiveReport,
+    pub tolerance: f64,
+}
+
+/// Tolerance-first counterpart of [`run_lowrank_prepared`]: run the
+/// adaptive Algorithm 7/8 (`LrAlg::Pre` is rank-first only and falls
+/// back to Algorithm 7) at `cfg.tolerance`-style targets over an
+/// already-built operator, timing the algorithm only. The growth knobs
+/// come from the config: `cfg.block_size` is both `l₀` and `Δl`
+/// (`--block-size`), the tolerance is the explicit argument so sweeps
+/// can scan it without cloning configs.
+pub fn run_lowrank_adaptive_prepared(
+    cfg: &RunConfig,
+    be: &dyn Compute,
+    a: &DistBlockMatrix,
+    tolerance: f64,
+    alg: LrAlg,
+) -> Result<AdaptiveRunRow, crate::dist::DsvdError> {
+    let ctx = cfg.context();
+    ctx.reset_metrics();
+
+    let mut opts = AdaptiveOpts::new(tolerance);
+    opts.l0 = cfg.block_size.max(1);
+    opts.block_size = cfg.block_size.max(1);
+    opts.l_max = opts.l_max.min(a.rows().min(a.cols()).saturating_sub(1)).max(1);
+    opts.rows_per_part = cfg.rows_per_part;
+    opts.ts = cfg.ts_opts();
+
+    let (out, report) = match alg {
+        LrAlg::A8 => algorithm8_adaptive(&ctx, be, a, &opts)?,
+        _ => algorithm7_adaptive(&ctx, be, a, &opts)?,
+    };
+    let metrics = ctx.take_metrics();
+
+    let resid = ResidualOp { a, u: &out.u, s: &out.s, v: &out.v };
+    let recon = spectral_norm(&ctx, &resid, cfg.power_iters, cfg.seed ^ 0xE44);
+    let u_orth = max_entry_gram_minus_identity(&ctx, be, &out.u);
+    let v_orth = max_entry_gram_minus_identity_local(&out.v);
+    let name = if matches!(alg, LrAlg::A8) { "8-adaptive" } else { "7-adaptive" };
+    Ok(AdaptiveRunRow {
+        row: TableRow { algorithm: name.to_string(), metrics, recon, u_orth, v_orth },
+        report,
+        tolerance,
+    })
+}
+
+/// [`run_lowrank_adaptive_prepared`] with the synthetic-matrix setup of
+/// [`run_lowrank`]: synthesize (untimed), run adaptively (timed),
+/// verify (untimed). This is what `dsvd lowrank --tolerance X` drives.
+pub fn run_lowrank_adaptive(
+    cfg: &RunConfig,
+    be: &dyn Compute,
+    m: usize,
+    n: usize,
+    spectrum: Spectrum,
+    alg: LrAlg,
+) -> Result<AdaptiveRunRow, crate::dist::DsvdError> {
+    let ctx = cfg.context();
+    let sigma = spectrum.values(n.min(m));
+    let gen = DctBlockTestMatrix::new(m, n, &sigma);
+    let a = gen.generate(&ctx, be, cfg.rows_per_part, cfg.cols_per_part);
+    run_lowrank_adaptive_prepared(cfg, be, &a, cfg.tolerance, alg)
+}
+
 fn verify(
     cfg: &RunConfig,
     ctx: &Context,
@@ -472,6 +544,27 @@ mod tests {
             run_lowrank(&cfg, &NativeCompute, 96, 64, 8, 2, Spectrum::LowRank(8), LrAlg::A7);
         assert!(row.recon < 1e-10, "recon {}", row.recon);
         assert!(row.u_orth < 1e-12);
+    }
+
+    #[test]
+    fn mini_adaptive_lowrank_end_to_end() {
+        let mut cfg = RunConfig::default();
+        cfg.rows_per_part = 32;
+        cfg.cols_per_part = 32;
+        cfg.power_iters = 30;
+        cfg.block_size = 4;
+        let ctx = cfg.context();
+        let sigma: Vec<f64> = (0..64).map(|j| 0.25f64.powi(j as i32)).collect();
+        let gen = DctBlockTestMatrix::new(96, 64, &sigma);
+        let a = gen.generate(&ctx, &NativeCompute, 32, 32);
+        let r = run_lowrank_adaptive_prepared(&cfg, &NativeCompute, &a, 1e-3, LrAlg::A7)
+            .expect("adaptive run");
+        assert!(r.row.recon <= 1e-3, "achieved {} > requested 1e-3", r.row.recon);
+        assert!(r.report.estimate <= 1e-3, "estimate {}", r.report.estimate);
+        assert!(r.row.recon <= r.report.estimate, "estimate below achieved error");
+        assert_eq!(r.row.metrics.final_rank, r.report.final_rank);
+        assert_eq!(r.row.metrics.adaptive_rounds, r.report.rounds);
+        assert!(r.row.u_orth < 1e-10, "u_orth {}", r.row.u_orth);
     }
 
     #[test]

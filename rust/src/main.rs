@@ -11,6 +11,7 @@
 //! --cols-per-part N --fan-in N --workers N --working-precision X
 //! --srft-chains N --seed N --backend native|pjrt --power-iters N
 //! --shuffle-latency X --task-overhead X --config FILE
+//! --tolerance X --block-size N (adaptive, tolerance-first execution)
 
 use std::process::ExitCode;
 
@@ -130,6 +131,36 @@ fn cmd_lowrank(cfg: &RunConfig, extra: &Extra) -> CmdResult {
         Some(o) => return Err(format!("unknown --alg '{o}' (7|8|pre|all)").into()),
     };
     let be = cfg.compute()?;
+    if cfg.tolerance > 0.0 {
+        // tolerance-first: the adaptive drivers pick the rank; --l is
+        // ignored and the pre-existing baseline (rank-first only) is
+        // skipped
+        let mut rows = Vec::new();
+        for &a in algs.iter().filter(|&&a| a != LrAlg::Pre) {
+            let r = harness::run_lowrank_adaptive(cfg, be.as_ref(), m, n, spectrum, a)
+                .map_err(|e| format!("adaptive {}: {e}", a.name()))?;
+            println!(
+                "alg {}: tolerance {:.2e} → rank {} in {} rounds ({} probe matvecs), estimate {:.2e}",
+                a.name(),
+                r.tolerance,
+                r.report.final_rank,
+                r.report.rounds,
+                r.report.probe_matvecs,
+                r.report.estimate
+            );
+            rows.push(r.row);
+        }
+        print_rows(
+            &format!(
+                "lowrank m={m} n={n} tolerance={:.2e} Δl={} {spectrum:?} backend={}",
+                cfg.tolerance,
+                cfg.block_size,
+                be.name()
+            ),
+            &rows,
+        );
+        return Ok(());
+    }
     let rows: Vec<TableRow> = algs
         .iter()
         .map(|&a| run_lowrank(cfg, be.as_ref(), m, n, l, iters, spectrum, a))
@@ -202,6 +233,8 @@ usage: dsvd <command> [flags]
 commands:
   svd      --m N --n N [--spectrum geometric|staircase] [--alg 1|2|3|4|pre|all]
   lowrank  --m N --n N --l N --i N [--spectrum lowrank|staircase] [--alg 7|8|pre|all]
+           with --tolerance X: adaptive (tolerance-first) execution — the
+           run picks the rank, growing the sketch by --block-size per round
   table    [--id T3|T6|T9/T10|...|all]
   gen      --m N --n N [--spectrum ...]
   info
@@ -211,5 +244,6 @@ global flags:
   --fan-in N (2)           --workers N (0 = all)     --working-precision X (1e-11)
   --srft-chains N (2)      --seed N                  --backend native|pjrt
   --power-iters N (60)     --config FILE
+  --tolerance X (0 = rank-first)  --block-size N (8; adaptive l0 and Δl)
   --shuffle-latency X (simulated s/byte; env DSVD_SHUFFLE_LATENCY)
   --task-overhead X  (simulated s/task; env DSVD_TASK_OVERHEAD)";

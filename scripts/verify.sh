@@ -7,10 +7,10 @@
 #                                BENCH_tall_skinny.json, BENCH_lowrank.json,
 #                                BENCH_gen.json, BENCH_sparse.json,
 #                                BENCH_fused.json, BENCH_ooc.json,
-#                                BENCH_faults.json
+#                                BENCH_faults.json, BENCH_adaptive.json
 #                                (fails if any record was not written; the
-#                                fused, out-of-core, and fault benches
-#                                also gate)
+#                                fused, out-of-core, fault, and adaptive
+#                                benches also gate)
 #   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
 #                                scaling acceptance test (>=4 cores)
 #
@@ -107,9 +107,19 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_faults.json" \
     cargo bench --bench tables_faults
 
+# the adaptive tolerance sweep is a GATE as well: every record carries
+# three boolean gate fields (achieved error within the requested
+# tolerance, the HMT posterior estimator a genuine upper bound, the
+# adaptive pass count within one A pass of the matched fixed-rank run)
+echo "== scaled bench + adaptive-execution gates: tables_adaptive (DSVD_BENCH_SCALE=${SCALE})"
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_adaptive.json" \
+    cargo bench --bench tables_adaptive
+
 # every expected perf record must exist and be non-empty
 for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
-         BENCH_fused.json BENCH_ooc.json BENCH_faults.json; do
+         BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
@@ -146,7 +156,20 @@ if grep -q '"recovered_bit_identical": false' BENCH_faults.json; then
     echo "!! a faulted run was not bit-identical to the fault-free reference" >&2
     exit 1
 fi
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json"
+# every adaptive sweep point must meet its requested tolerance, keep the
+# posterior estimator an upper bound on the true error, and stay within
+# one A pass of the matched fixed-rank run at the discovered rank
+for gate in within_tolerance estimator_within_hmt passes_within_budget; do
+    if ! grep -q "\"$gate\": true" BENCH_adaptive.json; then
+        echo "!! BENCH_adaptive.json lacks the $gate gate field" >&2
+        exit 1
+    fi
+    if grep -q "\"$gate\": false" BENCH_adaptive.json; then
+        echo "!! an adaptive sweep point failed the $gate gate" >&2
+        exit 1
+    fi
+done
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json"
 
 if [ "${FULL:-0}" = "1" ]; then
     # the worker-scaling check gates in the debug tier-1 run already
