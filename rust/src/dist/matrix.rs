@@ -8,6 +8,8 @@
 //!   [`Block`] cells for the wide / low-rank workloads (problem {2}),
 //!   where no full row set fits one executor. Each cell picks its own
 //!   storage backend — [`Block::Dense`] (the original layout),
+//!   [`Block::DenseF32`] (f32 storage, f64 accumulation: half the
+//!   shuffle/spill bytes, see `DSVD_PRECISION` in `dist/README.md`),
 //!   [`Block::SparseCsr`] (per-block CSR, work and shuffle ∝ nnz),
 //!   [`Block::Implicit`] (a seeded generator materialized only inside
 //!   the task that consumes it), or [`Block::Spilled`] (out-of-core: the
@@ -29,13 +31,14 @@
 //! by block-column through fan-in-sized chunks (per-task shuffle bytes
 //! attributed by the comms model) instead of shipping n×l slabs.
 
+use crate::linalg::matrix_f32::{self as mf32, MatrixF32};
 use crate::linalg::{blas, Csr, Matrix};
 use crate::runtime::compute::Compute;
 
 use std::sync::Arc;
 
 use super::context::{chunk_owned, tree_aggregate, Context};
-use super::spill::{SpillError, SpillStore, SpilledBlock};
+use super::spill::{SpillError, SpillPayload, SpillStore, SpilledBlock};
 
 /// Unwrap a spill-tier result on the infallible API surface. Dense,
 /// CSR, and implicit cells can never fail, so this is a no-op for them;
@@ -587,6 +590,239 @@ impl DistRowMatrix {
 }
 
 // ---------------------------------------------------------------------------
+// DistRowMatrixF32 — f32 row slabs (the DSVD_PRECISION=f32 tall layout)
+// ---------------------------------------------------------------------------
+
+/// One contiguous f32 row slab of a [`DistRowMatrixF32`].
+#[derive(Clone, Debug)]
+pub struct RowPartitionF32 {
+    /// Global index of this slab's first row.
+    pub row_start: usize,
+    /// The f32 local rows (`r × n`).
+    pub data: MatrixF32,
+}
+
+/// Row-partitioned distributed matrix stored at f32 — the
+/// `DSVD_PRECISION=f32` face of [`DistRowMatrix`]. Storage is the only
+/// difference: every product widens each stored entry exactly and
+/// accumulates in f64 (`linalg::matrix_f32`), so downstream TSQR /
+/// Gram / factor stages see ordinary f64 inputs, while every byte the
+/// comms model charges for this operator is halved. Built only by the
+/// explicit f32 constructors — resolving `DSVD_PRECISION`
+/// ([`crate::linalg::Precision::from_env`]) is the caller's job, so a
+/// default pipeline never changes representation behind the caller's
+/// back.
+#[derive(Clone)]
+pub struct DistRowMatrixF32 {
+    /// The row slabs, ascending by `row_start`, tiling `[0, rows)`.
+    pub parts: Vec<RowPartitionF32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl DistRowMatrixF32 {
+    /// Demote a driver-held matrix into `rows_per_part`-row f32 slabs.
+    pub fn from_matrix(a: &Matrix, rows_per_part: usize) -> Self {
+        let parts = row_ranges(a.rows(), rows_per_part)
+            .into_iter()
+            .map(|(r0, r1)| RowPartitionF32 {
+                row_start: r0,
+                data: MatrixF32::from_matrix(&a.slice(r0, r1, 0, a.cols())),
+            })
+            .collect();
+        DistRowMatrixF32 { parts, rows: a.rows(), cols: a.cols() }
+    }
+
+    /// Demote an existing row matrix slab-for-slab (same partitioning,
+    /// so factors derived from either share the tiling).
+    pub fn from_row_matrix(a: &DistRowMatrix) -> Self {
+        let parts = a
+            .parts
+            .iter()
+            .map(|p| RowPartitionF32 {
+                row_start: p.row_start,
+                data: MatrixF32::from_matrix(&p.data),
+            })
+            .collect();
+        DistRowMatrixF32 { parts, rows: a.rows(), cols: a.cols() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Bytes of the stored representation, `4·rows·cols` — half the
+    /// dense-f64 rate; the operator's shuffle hint.
+    pub fn storage_bytes(&self) -> usize {
+        4 * self.rows * self.cols
+    }
+
+    /// Gather to the driver, promoted to f64 (exact widening). Ships
+    /// the stored 4-byte entries, so the shuffle charge is half what
+    /// the f64 gather costs.
+    pub fn collect(&self, ctx: &Context) -> Matrix {
+        ctx.add_shuffle(self.storage_bytes());
+        ctx.driver(|| {
+            let mut out = Matrix::zeros(self.rows, self.cols);
+            for p in &self.parts {
+                for i in 0..p.data.rows() {
+                    let dst = out.row_mut(p.row_start + i);
+                    for (o, &v) in dst.iter_mut().zip(p.data.row(i)) {
+                        *o = v as f64;
+                    }
+                }
+            }
+            out
+        })
+    }
+
+    /// `A · W` for a small driver-held `W`: one widening-GEMM task per
+    /// slab. The result is an ordinary f64 [`DistRowMatrix`] with `A`'s
+    /// partitioning — the sketch Y leaves the f32 domain immediately.
+    pub fn matmul_small(&self, ctx: &Context, _be: &dyn Compute, w: &Matrix) -> DistRowMatrix {
+        assert_eq!(self.cols, w.rows(), "matmul_small: {} cols vs {} W rows", self.cols, w.rows());
+        let tasks: Vec<Box<dyn FnOnce() -> RowPartition + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || RowPartition {
+                    row_start: p.row_start,
+                    data: mf32::matmul_f32(&p.data, w),
+                }) as Box<dyn FnOnce() -> RowPartition + Send + '_>
+            })
+            .collect();
+        let parts = ctx.stage(tasks);
+        DistRowMatrix { parts, rows: self.rows, cols: w.cols() }
+    }
+
+    /// `Aᵀ · Q` for a distributed tall f64 factor `Q`: per-slab
+    /// widening `matmul_tn` + treeAggregate of the f64 partials.
+    pub fn rmatmul_small(&self, ctx: &Context, _be: &dyn Compute, q: &DistRowMatrix) -> Matrix {
+        assert_eq!(self.rows, q.rows(), "rmatmul_small: row count mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> Matrix + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let qs = q.rows_slice(p.row_start, p.row_start + p.data.rows());
+                    mf32::matmul_tn_f32(&p.data, &qs)
+                }) as Box<dyn FnOnce() -> Matrix + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, q.cols()))
+    }
+
+    /// `y = A·x` (length m), widening per slab.
+    pub fn matvec(&self, ctx: &Context, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec length mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || (p.row_start, mf32::gemv_f32(&p.data, x)))
+                    as Box<dyn FnOnce() -> (usize, Vec<f64>) + Send + '_>
+            })
+            .collect();
+        let chunks = ctx.stage(tasks);
+        let mut y = vec![0.0; self.rows];
+        for (r0, c) in chunks {
+            y[r0..r0 + c.len()].copy_from_slice(&c);
+        }
+        y
+    }
+
+    /// `z = Aᵀ·y` (length n): per-slab widening `gemv_t` +
+    /// treeAggregate, mirroring [`DistRowMatrix::rmatvec`].
+    pub fn rmatvec(&self, ctx: &Context, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows, "rmatvec length mismatch");
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<f64> + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    mf32::gemv_t_f32(&p.data, &y[p.row_start..p.row_start + p.data.rows()])
+                }) as Box<dyn FnOnce() -> Vec<f64> + Send + '_>
+            })
+            .collect();
+        let partials = ctx.stage(tasks);
+        tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                for (x, v) in a.iter_mut().zip(&b) {
+                    *x += v;
+                }
+                a
+            },
+            |v| 8 * v.len(),
+        )
+        .unwrap_or_else(|| vec![0.0; self.cols])
+    }
+
+    /// One fused power-iteration step `(Y, Z) = (A·W, Aᵀ·(A·W))` from a
+    /// single traversal of the f32 slabs
+    /// ([`mf32::matmul_and_tn_f32`]); bit-identical to the unfused
+    /// ([`DistRowMatrixF32::matmul_small`],
+    /// [`DistRowMatrixF32::rmatmul_small`]) pair, exactly like the f64
+    /// layout's contract.
+    pub fn fused_power_step(
+        &self,
+        ctx: &Context,
+        _be: &dyn Compute,
+        w: &Matrix,
+    ) -> (DistRowMatrix, Matrix) {
+        assert_eq!(self.cols, w.rows(), "fused_power_step: cols vs W rows");
+        let tasks: Vec<Box<dyn FnOnce() -> (RowPartition, Matrix) + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let (y, bt) = mf32::matmul_and_tn_f32(&p.data, w);
+                    (RowPartition { row_start: p.row_start, data: y }, bt)
+                }) as Box<dyn FnOnce() -> (RowPartition, Matrix) + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut parts = Vec::with_capacity(results.len());
+        let mut partials = Vec::with_capacity(results.len());
+        for (part, bt) in results {
+            parts.push(part);
+            partials.push(bt);
+        }
+        let y = DistRowMatrix { parts, rows: self.rows, cols: w.cols() };
+        let z = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, w.cols()));
+        (y, z)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Block — the pluggable storage behind DistBlockMatrix (the DistOp layer)
 // ---------------------------------------------------------------------------
 
@@ -639,6 +875,12 @@ impl ImplicitBlock {
 pub enum Block {
     /// Dense local matrix (the original layout).
     Dense(Matrix),
+    /// Dense cell stored at f32 (`DSVD_PRECISION=f32`): half the
+    /// shuffle/spill bytes of [`Block::Dense`]; products widen each
+    /// entry exactly and accumulate in f64 (see
+    /// `linalg::matrix_f32`). Built only by the explicit f32
+    /// constructors — the env knob never changes a default layout.
+    DenseF32(MatrixF32),
     /// Compressed sparse rows; kernels in `linalg::blas`.
     SparseCsr(Csr),
     /// Seeded generator closure; materialized per consuming task.
@@ -659,9 +901,11 @@ pub enum Block {
 /// used, so routing through a view changes no bits.
 pub(crate) enum CellView<'a> {
     Dense(&'a Matrix),
+    DenseF32(&'a MatrixF32),
     Csr(&'a Csr),
     Owned(Matrix),
     Paged(Arc<Matrix>),
+    PagedF32(Arc<MatrixF32>),
 }
 
 impl CellView<'_> {
@@ -671,6 +915,8 @@ impl CellView<'_> {
             CellView::Dense(m) => be.matmul(m, w),
             CellView::Owned(m) => be.matmul(m, w),
             CellView::Paged(m) => be.matmul(m, w),
+            CellView::DenseF32(m) => mf32::matmul_f32(m, w),
+            CellView::PagedF32(m) => mf32::matmul_f32(m, w),
             CellView::Csr(c) => c.matmul(w),
         }
     }
@@ -681,6 +927,8 @@ impl CellView<'_> {
             CellView::Dense(m) => be.matmul_tn(m, q),
             CellView::Owned(m) => be.matmul_tn(m, q),
             CellView::Paged(m) => be.matmul_tn(m, q),
+            CellView::DenseF32(m) => mf32::matmul_tn_f32(m, q),
+            CellView::PagedF32(m) => mf32::matmul_tn_f32(m, q),
             CellView::Csr(c) => c.matmul_tn(q),
         }
     }
@@ -691,6 +939,8 @@ impl CellView<'_> {
             CellView::Dense(m) => be.matmul_and_tn(m, w),
             CellView::Owned(m) => be.matmul_and_tn(m, w),
             CellView::Paged(m) => be.matmul_and_tn(m, w),
+            CellView::DenseF32(m) => mf32::matmul_and_tn_f32(m, w),
+            CellView::PagedF32(m) => mf32::matmul_and_tn_f32(m, w),
             CellView::Csr(c) => c.matmul_and_tn(w),
         }
     }
@@ -701,6 +951,8 @@ impl CellView<'_> {
             CellView::Dense(m) => blas::gemv(m, x),
             CellView::Owned(m) => blas::gemv(m, x),
             CellView::Paged(m) => blas::gemv(m, x),
+            CellView::DenseF32(m) => mf32::gemv_f32(m, x),
+            CellView::PagedF32(m) => mf32::gemv_f32(m, x),
             CellView::Csr(c) => c.gemv(x),
         }
     }
@@ -711,6 +963,8 @@ impl CellView<'_> {
             CellView::Dense(m) => blas::gemv_t(m, y),
             CellView::Owned(m) => blas::gemv_t(m, y),
             CellView::Paged(m) => blas::gemv_t(m, y),
+            CellView::DenseF32(m) => mf32::gemv_t_f32(m, y),
+            CellView::PagedF32(m) => mf32::gemv_t_f32(m, y),
             CellView::Csr(c) => c.gemv_t(y),
         }
     }
@@ -720,6 +974,7 @@ impl Block {
     pub fn rows(&self) -> usize {
         match self {
             Block::Dense(m) => m.rows(),
+            Block::DenseF32(m) => m.rows(),
             Block::SparseCsr(c) => c.rows(),
             Block::Implicit(i) => i.r1 - i.r0,
             Block::Spilled(s) => s.rows(),
@@ -729,6 +984,7 @@ impl Block {
     pub fn cols(&self) -> usize {
         match self {
             Block::Dense(m) => m.cols(),
+            Block::DenseF32(m) => m.cols(),
             Block::SparseCsr(c) => c.cols(),
             Block::Implicit(i) => i.c1 - i.c0,
             Block::Spilled(s) => s.cols(),
@@ -737,15 +993,18 @@ impl Block {
 
     /// Bytes this block's stored representation actually moves when it
     /// crosses the simulated network — the [`super::DistOp`]
-    /// `shuffle_bytes` hint, per cell: dense ships every entry, CSR
-    /// ships nnz-proportional arrays, implicit ships its descriptor,
-    /// spilled ships its dense payload (the bytes at rest on disk).
+    /// `shuffle_bytes` hint, per cell: dense ships every entry (4
+    /// bytes each for f32 cells, half the f64 rate), CSR ships
+    /// nnz-proportional arrays, implicit ships its descriptor, spilled
+    /// ships its payload at its stored precision (the bytes at rest on
+    /// disk).
     pub fn storage_bytes(&self) -> usize {
         match self {
             Block::Dense(m) => 8 * m.rows() * m.cols(),
+            Block::DenseF32(m) => m.storage_bytes(),
             Block::SparseCsr(c) => c.storage_bytes(),
             Block::Implicit(_) => IMPLICIT_DESCRIPTOR_BYTES,
-            Block::Spilled(s) => 8 * s.rows() * s.cols(),
+            Block::Spilled(s) => s.precision().bytes_per_entry() * s.rows() * s.cols(),
         }
     }
 
@@ -755,9 +1014,16 @@ impl Block {
     pub(crate) fn try_view(&self) -> Result<CellView<'_>, SpillError> {
         Ok(match self {
             Block::Dense(m) => CellView::Dense(m),
+            Block::DenseF32(m) => CellView::DenseF32(m),
             Block::SparseCsr(c) => CellView::Csr(c),
             Block::Implicit(i) => CellView::Owned(i.materialize()),
-            Block::Spilled(s) => CellView::Paged(s.fetch()?),
+            // spilled cells page in at their stored precision — an f32
+            // payload stays f32 in the cache (half the resident bytes)
+            // and its products run the widening mixed kernels
+            Block::Spilled(s) => match s.fetch_payload()? {
+                SpillPayload::F64(m) => CellView::Paged(m),
+                SpillPayload::F32(m) => CellView::PagedF32(m),
+            },
         })
     }
 
@@ -766,6 +1032,7 @@ impl Block {
     pub fn try_to_dense(&self) -> Result<Matrix, SpillError> {
         Ok(match self {
             Block::Dense(m) => m.clone(),
+            Block::DenseF32(m) => m.to_matrix(),
             Block::SparseCsr(c) => c.to_dense(),
             Block::Implicit(i) => i.materialize(),
             Block::Spilled(s) => s.fetch()?.as_ref().clone(),
@@ -1010,6 +1277,29 @@ impl DistBlockMatrix {
         DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows: a.rows(), cols: a.cols() }
     }
 
+    /// Partition a driver-held matrix into an f32-stored block grid
+    /// (`DSVD_PRECISION=f32`): each cell is demoted once at ingest;
+    /// every later product widens exactly and accumulates in f64. The
+    /// grid's `storage_bytes` — and with it the comms model's shuffle
+    /// charge and the spill budget seen by [`DistBlockMatrix::spill`]
+    /// — is half the dense-f64 grid's.
+    pub fn from_matrix_f32(a: &Matrix, rows_per_block: usize, cols_per_block: usize) -> Self {
+        let rb = bounds(a.rows(), rows_per_block);
+        let cb = bounds(a.cols(), cols_per_block);
+        let grid: Vec<Vec<Block>> = (0..rb.len() - 1)
+            .map(|bi| {
+                (0..cb.len() - 1)
+                    .map(|bj| {
+                        Block::DenseF32(MatrixF32::from_matrix(
+                            &a.slice(rb[bi], rb[bi + 1], cb[bj], cb[bj + 1]),
+                        ))
+                    })
+                    .collect()
+            })
+            .collect();
+        DistBlockMatrix { grid, row_bounds: rb, col_bounds: cb, rows: a.rows(), cols: a.cols() }
+    }
+
     /// Partition a driver-held matrix into a CSR block grid (exact
     /// zeros dropped per cell).
     pub fn from_matrix_csr(a: &Matrix, rows_per_block: usize, cols_per_block: usize) -> Self {
@@ -1099,8 +1389,18 @@ impl DistBlockMatrix {
             .flat_map(|row_blocks| row_blocks.iter())
             .map(|b| {
                 let store = Arc::clone(store);
-                Box::new(move || Ok(Block::Spilled(store.put(&b.try_to_dense()?)?)))
-                    as Box<dyn FnOnce() -> Result<Block, SpillError> + Send + '_>
+                // precision-preserving: f32 cells spill the 4-byte
+                // format, everything else densifies to the f64 format
+                Box::new(move || {
+                    Ok(Block::Spilled(match b {
+                        Block::DenseF32(m) => store.put_f32(m)?,
+                        Block::Spilled(s) => match s.fetch_payload()? {
+                            SpillPayload::F32(m) => store.put_f32(&m)?,
+                            SpillPayload::F64(m) => store.put(&m)?,
+                        },
+                        _ => store.put(&b.try_to_dense()?)?,
+                    }))
+                }) as Box<dyn FnOnce() -> Result<Block, SpillError> + Send + '_>
             })
             .collect();
         let flat: Result<Vec<Block>, SpillError> = ctx.stage(tasks).into_iter().collect();
@@ -2352,5 +2652,110 @@ mod tests {
         assert!(m.stages >= 5, "stages {}", m.stages);
         // 16 map tasks + 8 + 4 + 2 + 1 reduce tasks
         assert!(m.tasks >= 16 + 15, "tasks {}", m.tasks);
+    }
+
+    #[test]
+    fn f32_row_matrix_matches_promoted_dense() {
+        // the f32 slab layout must agree with an ordinary f64 layout
+        // built from the PROMOTED copy: storage is the only difference,
+        // every accumulation is f64 on both sides
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(50, 40, 11);
+        let a32 = DistRowMatrixF32::from_matrix(&a, 7);
+        let promoted = DistRowMatrix::from_matrix(&a32.collect(&ctx), 7);
+        assert_eq!((a32.rows(), a32.cols()), (40, 11));
+        assert_eq!(a32.storage_bytes(), 4 * 40 * 11);
+        // demotion error only — unit-scale Gaussian entries
+        assert!(a32.collect(&ctx).sub(&a).max_abs() < 1e-5);
+
+        let w = randmat(51, 11, 3);
+        let y32 = a32.matmul_small(&ctx, &be, &w).collect(&ctx);
+        let yp = promoted.matmul_small(&ctx, &be, &w).collect(&ctx);
+        assert!(y32.sub(&yp).max_abs() < 1e-12);
+
+        let q = DistRowMatrix::from_matrix(&randmat(52, 40, 4), 7);
+        let z32 = a32.rmatmul_small(&ctx, &be, &q);
+        let zp = promoted.rmatmul_small(&ctx, &be, &q);
+        assert!(z32.sub(&zp).max_abs() < 1e-12);
+
+        let x: Vec<f64> = (0..11).map(|i| (i as f64).sin()).collect();
+        let v: Vec<f64> = (0..40).map(|i| (i as f64).cos()).collect();
+        for (g, w) in a32.matvec(&ctx, &x).iter().zip(promoted.matvec(&ctx, &x)) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        for (g, w) in a32.rmatvec(&ctx, &v).iter().zip(promoted.rmatvec(&ctx, &v)) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_fused_power_step_bit_identical_to_two_calls() {
+        let ctx = Context::new(3);
+        let be = NativeCompute;
+        let a32 = DistRowMatrixF32::from_matrix(&randmat(53, 33, 9), 8);
+        let w = randmat(54, 9, 4);
+        let (yf, zf) = a32.fused_power_step(&ctx, &be, &w);
+        let yu = a32.matmul_small(&ctx, &be, &w);
+        let zu = a32.rmatmul_small(&ctx, &be, &yu);
+        assert_eq!(yf.collect(&ctx).data(), yu.collect(&ctx).data());
+        assert_eq!(zf.data(), zu.data());
+    }
+
+    #[test]
+    fn f32_collect_charges_half_the_shuffle() {
+        let ctx = Context::new(2);
+        let a = randmat(55, 24, 10);
+        ctx.reset_metrics();
+        let _ = DistRowMatrix::from_matrix(&a, 6).collect(&ctx);
+        let f64_shuffle = ctx.take_metrics().shuffle_bytes;
+        ctx.reset_metrics();
+        let _ = DistRowMatrixF32::from_matrix(&a, 6).collect(&ctx);
+        let f32_shuffle = ctx.take_metrics().shuffle_bytes;
+        assert_eq!(f64_shuffle, 8 * 24 * 10);
+        assert_eq!(f32_shuffle, 4 * 24 * 10);
+    }
+
+    #[test]
+    fn f32_block_grid_matches_promoted_dense_grid() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(56, 30, 12);
+        let g32 = DistBlockMatrix::from_matrix_f32(&a, 9, 5);
+        // the stored representation is half the dense-f64 bytes…
+        assert_eq!(g32.storage_bytes(), 4 * 30 * 12);
+        // …and products agree with the promoted-copy grid to f64 roundoff
+        let promoted = DistBlockMatrix::from_matrix(&g32.collect(&ctx), 9, 5);
+        let w = randmat(57, 12, 3);
+        let y32 = g32.matmul_small(&ctx, &be, &w).collect(&ctx);
+        let yp = promoted.matmul_small(&ctx, &be, &w).collect(&ctx);
+        assert!(y32.sub(&yp).max_abs() < 1e-12);
+        let (yf, zf) = g32.fused_power_step(&ctx, &be, &w);
+        let zu = g32.rmatmul_small(&ctx, &be, &g32.matmul_small(&ctx, &be, &w));
+        assert_eq!(yf.collect(&ctx).data(), y32.data());
+        assert_eq!(zf.data(), zu.data());
+    }
+
+    #[test]
+    fn f32_grid_spills_at_f32_and_respills_preserve_precision() {
+        let ctx = Context::new(2);
+        let be = NativeCompute;
+        let a = randmat(58, 16, 8);
+        let g32 = DistBlockMatrix::from_matrix_f32(&a, 8, 8);
+        let store = SpillStore::with_budget(usize::MAX).unwrap();
+        let spilled = g32.spill(&ctx, &store).unwrap();
+        // the 4-byte format hits the write ledger and the shuffle hint
+        assert_eq!(store.stats().bytes_written, 4 * 16 * 8);
+        assert_eq!(spilled.storage_bytes(), 4 * 16 * 8);
+        // products page the f32 payload in and match the f64 source grid
+        let w = randmat(59, 8, 3);
+        let want = g32.matmul_small(&ctx, &be, &w).collect(&ctx);
+        let got = spilled.matmul_small(&ctx, &be, &w).collect(&ctx);
+        assert_eq!(got.data(), want.data(), "paging must not change bits");
+        // re-spilling to a second store keeps the 4-byte format
+        let store2 = SpillStore::with_budget(usize::MAX).unwrap();
+        let respilled = spilled.spill(&ctx, &store2).unwrap();
+        assert_eq!(store2.stats().bytes_written, 4 * 16 * 8);
+        assert_eq!(respilled.storage_bytes(), 4 * 16 * 8);
     }
 }

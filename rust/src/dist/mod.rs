@@ -11,6 +11,7 @@
 //! | [`pool::WorkerPool`] | executor JVMs | OS threads (`DSVD_WORKERS`) |
 //! | [`DistRowMatrix`] | `IndexedRowMatrix` | contiguous row slabs |
 //! | [`DistRowCsrMatrix`] | sparse `IndexedRowMatrix` | CSR row slabs (tall sparse inputs) |
+//! | [`DistRowMatrixF32`] | `IndexedRowMatrix` of floats | f32 row slabs, f64 accumulation (`DSVD_PRECISION=f32`) |
 //! | [`DistBlockMatrix`] | `BlockMatrix` | grid of pluggable [`Block`] cells (dense / CSR / implicit / spilled) |
 //! | [`SpillStore`] | disk-persisted RDD blocks | out-of-core tier: per-block files + budgeted LRU page cache |
 //! | [`DistOp`] | the `A·Ω` / `Aᵀ·Q` access pattern | operator trait Algorithms 5–8 are written against |
@@ -43,12 +44,15 @@ pub use crate::pool;
 pub use context::{tree_aggregate, Context};
 pub use fault::{catch_dsvd, DsvdError, FaultKind, FaultPlan, HealthCheck, RetryPolicy};
 pub use matrix::{
-    Block, BlockStorage, DistBlockMatrix, DistRowMatrix, ImplicitBlock, RowPartition,
+    Block, BlockStorage, DistBlockMatrix, DistRowMatrix, DistRowMatrixF32, ImplicitBlock,
+    RowPartition, RowPartitionF32,
 };
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
 pub use op::{DistOp, UnfusedOp};
 pub use row_csr::{CsrRowPartition, DistRowCsrMatrix};
-pub use spill::{parse_budget, EvictPolicy, SpillError, SpillStats, SpillStore, SpilledBlock};
+pub use spill::{
+    parse_budget, EvictPolicy, SpillError, SpillPayload, SpillStats, SpillStore, SpilledBlock,
+};
 pub use tsqr::{
     tsqr, tsqr_lineage, tsqr_r, tsqr_r_checked, tsqr_r_csr, tsqr_with_stats, TsqrFactors,
     TsqrMemStats,

@@ -27,6 +27,15 @@
 //! product charges [`super::Metrics::a_passes`] (one pass, one
 //! materialized "cell" per slab), making sparse tall runs comparable to
 //! the block-matrix backends in every BENCH record.
+//!
+//! The mixed-precision storage mode (`DSVD_PRECISION=f32`, see the
+//! *Kernel and precision model* section of the dist README) deliberately
+//! does **not** extend to these slabs: each stored nonzero already
+//! carries an 8-byte column index next to its 8-byte value, so demoting
+//! the value to f32 saves only a quarter of the bytes (versus half for
+//! dense payloads) while forfeiting the exact-widening guarantee on the
+//! gather-dominated CSR kernels — the one place the scheme wins least.
+//! Sparse slabs therefore always store and shuffle f64.
 
 use crate::linalg::{Csr, Matrix};
 use crate::runtime::compute::Compute;

@@ -2,8 +2,72 @@
 //! GEMV, and small helpers. These are the "MKL substitute" of the
 //! reproduction; the PJRT/Pallas tile engine in `crate::runtime` provides
 //! the alternative backend for the same contracts.
+//!
+//! # Kernel generations (`DSVD_KERNEL`)
+//!
+//! Every dense kernel exists in two generations selected once per
+//! process by [`kernel_kind`]:
+//!
+//! * **`blocked`** (default) — cache-blocked MC×KC×NC panels with a
+//!   register-tiled inner microkernel; on x86-64 with AVX2+FMA the
+//!   inner tile is explicit SIMD (4 rows × 8 columns of C held in 8
+//!   YMM accumulators), elsewhere a portable unrolled twin with the
+//!   same blocking and summation structure runs.
+//! * **`scalar`** (`DSVD_KERNEL=scalar`) — the original autovectorized
+//!   scalar loops, kept verbatim as the bit-exactness reference.
+//!
+//! Blocked results stay within the suites' 1e-12 envelopes of the
+//! scalar reference (different summation trees round differently), and
+//! each generation is individually deterministic: the blocked GEMM's
+//! per-entry sums depend only on the fixed KC partition of the inner
+//! dimension, so row chunking — and therefore `DSVD_WORKERS` — never
+//! changes a bit, exactly like the scalar path.
+
+use core::sync::atomic::{AtomicU8, Ordering};
 
 use super::matrix::Matrix;
+
+/// Which dense-kernel generation to run (`DSVD_KERNEL=scalar|blocked`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Original scalar loops — the bit-exactness reference.
+    Scalar,
+    /// Cache-blocked SIMD microkernels (default).
+    Blocked,
+}
+
+impl KernelKind {
+    /// Parse an override: only the literal `scalar` (any case) selects
+    /// the reference generation; everything else means blocked.
+    pub fn parse(value: Option<&str>) -> KernelKind {
+        match value {
+            Some(v) if v.eq_ignore_ascii_case("scalar") => KernelKind::Scalar,
+            _ => KernelKind::Blocked,
+        }
+    }
+
+    /// Resolve from the `DSVD_KERNEL` environment variable.
+    pub fn from_env() -> KernelKind {
+        KernelKind::parse(std::env::var("DSVD_KERNEL").ok().as_deref())
+    }
+}
+
+/// Process-wide kernel generation, resolved from `DSVD_KERNEL` on first
+/// use and cached (the kernels are hot paths; tests and benches that
+/// compare generations in one process use the explicit `*_with` entry
+/// points instead of re-reading the environment).
+pub fn kernel_kind() -> KernelKind {
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => KernelKind::Scalar,
+        2 => KernelKind::Blocked,
+        _ => {
+            let kind = KernelKind::from_env();
+            CACHE.store(if kind == KernelKind::Scalar { 1 } else { 2 }, Ordering::Relaxed);
+            kind
+        }
+    }
+}
 
 /// Cache-blocking parameters for the packed GEMM micro-kernel.
 const MC: usize = 64;
@@ -104,9 +168,89 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     }
 }
 
-/// C += A · B, blocked over (MC × KC) panels of A and (KC × NC) panels of B.
-/// Inner loop is an i-k-j row-major saxpy pattern that autovectorizes well.
+/// C += A · B — dispatches to the generation selected by `DSVD_KERNEL`
+/// (see [`kernel_kind`]). Both generations are chunk-invariant: the
+/// per-entry summation tree depends only on the KC partition of the
+/// inner dimension, never on the row grouping, so `matmul`'s M-panel
+/// fan-out is bit-identical to this serial call in either generation.
 pub fn gemm_acc(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    gemm_acc_with(kernel_kind(), c, a, b);
+}
+
+/// Microkernel entry point: C += A · B with an explicit generation.
+///
+/// `Blocked` runs the cache-blocked register-tiled microkernel (AVX2+FMA
+/// 4×8 tile on x86-64, portable unrolled twin elsewhere); `Scalar` runs
+/// the original loops. Used by the property suite and the kernel bench
+/// to compare generations inside one process.
+pub fn gemm_acc_with(kind: KernelKind, c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.shape(), (m, n));
+    match kind {
+        KernelKind::Scalar => gemm_acc_scalar(c, a, b),
+        KernelKind::Blocked => gemm_acc_blocked(c, a, b),
+    }
+}
+
+/// Blocked C += A·B: AVX2+FMA microkernel when the CPU has it, portable
+/// unrolled twin otherwise. Per entry the sum is a chain of fused (or
+/// plain, portable) multiply-adds over each KC panel with one flush
+/// into C per panel — a pure function of the KC partition of k.
+fn gemm_acc_blocked(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86::supported() {
+            unsafe { x86::gemm(c.data_mut(), a.data(), b.data(), m, k, n) };
+            return;
+        }
+    }
+    gemm_acc_portable(c.data_mut(), a.data(), b.data(), m, k, n);
+}
+
+/// Portable blocked GEMM twin: per (row, KC-panel) a fresh NC-wide
+/// accumulator tile collects plain mul/add products in ascending-p
+/// order and is flushed into C once — the same summation structure as
+/// the SIMD tile, with non-fused arithmetic.
+fn gemm_acc_portable(
+    cdata: &mut [f64],
+    adata: &[f64],
+    bdata: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut tile = [0.0f64; NC];
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for i in 0..m {
+                let t = &mut tile[..nb];
+                t.fill(0.0);
+                let arow = &adata[i * k + pc..i * k + pc + kb];
+                for (p, &x) in arow.iter().enumerate() {
+                    let brow = &bdata[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                    for (tj, &bj) in t.iter_mut().zip(brow) {
+                        *tj += x * bj;
+                    }
+                }
+                let crow = &mut cdata[i * n + jc..i * n + jc + nb];
+                for (cj, &tj) in crow.iter_mut().zip(&*t) {
+                    *cj += tj;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar C += A·B (the `DSVD_KERNEL=scalar` reference), blocked over
+/// (MC × KC) panels of A and (KC × NC) panels of B.
+/// Inner loop is an i-k-j row-major saxpy pattern that autovectorizes well.
+fn gemm_acc_scalar(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     let (m, k) = a.shape();
     let n = b.cols();
     assert_eq!(b.rows(), k);
@@ -182,9 +326,71 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     }
 }
 
-/// Serial kernel for `matmul_tn` restricted to rows `[r0, r1)`.
-/// Row-major friendly: accumulates outer products of rows of A and B.
+/// Microkernel entry point: Aᵀ·B serially with an explicit generation
+/// (no row chunking — the whole reduction in one range). Used by the
+/// property suite and the kernel bench.
+pub fn matmul_tn_with(kind: KernelKind, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    match kind {
+        KernelKind::Scalar => matmul_tn_range_scalar(a, b, 0, a.rows()),
+        KernelKind::Blocked => matmul_tn_range_blocked(a, b, 0, a.rows()),
+    }
+}
+
+/// Serial kernel for `matmul_tn` restricted to rows `[r0, r1)`,
+/// dispatching on the process-wide generation.
 fn matmul_tn_range(a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
+    match kernel_kind() {
+        KernelKind::Scalar => matmul_tn_range_scalar(a, b, r0, r1),
+        KernelKind::Blocked => matmul_tn_range_blocked(a, b, r0, r1),
+    }
+}
+
+/// Blocked Aᵀ·B over rows `[r0, r1)`: rows are folded in groups of 4
+/// (relative to the range start), each group contributing a pinned
+/// mul-then-fma chain per output entry. Within one range the result is
+/// deterministic; different range partitions may round differently
+/// (the chunk decision is shape-only, so runs stay reproducible).
+fn matmul_tn_range_blocked(a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
+    let ka = a.cols();
+    let kb = b.cols();
+    let mut c = Matrix::zeros(ka, kb);
+    let asub = &a.data()[r0 * ka..r1 * ka];
+    let bsub = &b.data()[r0 * kb..r1 * kb];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86::supported() {
+            unsafe { x86::tn_acc(c.data_mut(), asub, bsub, ka, kb, r1 - r0) };
+            return c;
+        }
+    }
+    tn_acc_portable(c.data_mut(), asub, bsub, ka, kb, r1 - r0);
+    c
+}
+
+/// Portable blocked Aᵀ·B twin: same 4-row group chains as the SIMD
+/// kernel, plain mul/add arithmetic.
+fn tn_acc_portable(c: &mut [f64], a: &[f64], b: &[f64], ka: usize, kb: usize, nr: usize) {
+    let mut i0 = 0;
+    while i0 < nr {
+        let cnt = (nr - i0).min(4);
+        for p in 0..ka {
+            let crow = &mut c[p * kb..(p + 1) * kb];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                let mut t = a[i0 * ka + p] * b[i0 * kb + j];
+                for r in 1..cnt {
+                    t += a[(i0 + r) * ka + p] * b[(i0 + r) * kb + j];
+                }
+                *cj += t;
+            }
+        }
+        i0 += cnt;
+    }
+}
+
+/// Scalar Aᵀ·B over rows `[r0, r1)` (the reference generation).
+/// Row-major friendly: accumulates outer products of rows of A and B.
+fn matmul_tn_range_scalar(a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
     let ka = a.cols();
     let kb = b.cols();
     let mut c = Matrix::zeros(ka, kb);
@@ -262,9 +468,89 @@ pub fn matmul_and_tn(a: &Matrix, w: &Matrix) -> (Matrix, Matrix) {
     }
 }
 
-/// Serial fused kernel over rows `[r0, r1)`: Y rows in `gemm_acc`'s
-/// k-ascending order, Bᵀ in `matmul_tn_range`'s (i, p)-ascending order.
+/// Microkernel entry point: fused `(A·W, Aᵀ·(A·W))` serially with an
+/// explicit generation. Bit-identical to the matching `gemm_acc_with` +
+/// `matmul_tn_with` pair in either generation.
+pub fn matmul_and_tn_with(kind: KernelKind, a: &Matrix, w: &Matrix) -> (Matrix, Matrix) {
+    assert_eq!(a.cols(), w.rows(), "matmul_and_tn shape mismatch");
+    match kind {
+        KernelKind::Scalar => matmul_and_tn_range_scalar(a, w, 0, a.rows()),
+        KernelKind::Blocked => matmul_and_tn_range_blocked(a, w, 0, a.rows()),
+    }
+}
+
+/// Serial fused kernel over rows `[r0, r1)`, dispatching on the
+/// process-wide generation.
 fn matmul_and_tn_range(a: &Matrix, w: &Matrix, r0: usize, r1: usize) -> (Matrix, Matrix) {
+    match kernel_kind() {
+        KernelKind::Scalar => matmul_and_tn_range_scalar(a, w, r0, r1),
+        KernelKind::Blocked => matmul_and_tn_range_blocked(a, w, r0, r1),
+    }
+}
+
+/// Blocked fused kernel over rows `[r0, r1)`: rows are processed in
+/// groups of 4 — each row's Y entries accumulate per-KC-panel fma
+/// chains (exactly the blocked GEMM's summation tree), then the group's
+/// finished Y rows fold into Bᵀ with the blocked `matmul_tn` group
+/// chain while the A rows are still hot in cache. A streams from
+/// memory once (the read-A-once property), and the result is
+/// bit-identical to the blocked two-call plan.
+fn matmul_and_tn_range_blocked(a: &Matrix, w: &Matrix, r0: usize, r1: usize) -> (Matrix, Matrix) {
+    let k = a.cols();
+    let l = w.cols();
+    let mut y = Matrix::zeros(r1 - r0, l);
+    let mut bt = Matrix::zeros(k, l);
+    let asub = &a.data()[r0 * k..r1 * k];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86::supported() {
+            unsafe { x86::fused(y.data_mut(), bt.data_mut(), asub, w.data(), k, l) };
+            return (y, bt);
+        }
+    }
+    fused_portable(y.data_mut(), bt.data_mut(), asub, w.data(), k, l);
+    (y, bt)
+}
+
+/// Portable blocked fused twin: same group/panel structure with plain
+/// mul/add arithmetic (matches the portable GEMM and Aᵀ·B chains).
+fn fused_portable(y: &mut [f64], bt: &mut [f64], a: &[f64], w: &[f64], k: usize, l: usize) {
+    let nr = if l == 0 { 0 } else { y.len() / l };
+    let mut i0 = 0;
+    while i0 < nr {
+        let cnt = (nr - i0).min(4);
+        for i in i0..i0 + cnt {
+            let arow = &a[i * k..(i + 1) * k];
+            let yrow = &mut y[i * l..(i + 1) * l];
+            for pc in (0..k).step_by(KC) {
+                let kb = KC.min(k - pc);
+                for (j, yj) in yrow.iter_mut().enumerate() {
+                    let mut t = 0.0;
+                    for p in 0..kb {
+                        t += arow[pc + p] * w[(pc + p) * l + j];
+                    }
+                    *yj += t;
+                }
+            }
+        }
+        for p in 0..k {
+            let btrow = &mut bt[p * l..(p + 1) * l];
+            for (j, cj) in btrow.iter_mut().enumerate() {
+                let mut t = a[i0 * k + p] * y[i0 * l + j];
+                for r in 1..cnt {
+                    t += a[(i0 + r) * k + p] * y[(i0 + r) * l + j];
+                }
+                *cj += t;
+            }
+        }
+        i0 += cnt;
+    }
+}
+
+/// Scalar fused kernel over rows `[r0, r1)`: Y rows in the scalar
+/// GEMM's k-ascending order, Bᵀ in `matmul_tn_range_scalar`'s
+/// (i, p)-ascending order.
+fn matmul_and_tn_range_scalar(a: &Matrix, w: &Matrix, r0: usize, r1: usize) -> (Matrix, Matrix) {
     let k = a.cols();
     let l = w.cols();
     let mut y = Matrix::zeros(r1 - r0, l);
@@ -331,18 +617,80 @@ pub fn gram(a: &Matrix) -> Matrix {
         Some(ranges) => par_reduce(ranges, |r0, r1| gram_upper_range(a, r0, r1)),
         None => gram_upper_range(a, 0, m),
     };
-    // mirror the strict upper triangle
+    mirror_upper(&mut g);
+    g
+}
+
+/// Microkernel entry point: Aᵀ·A serially with an explicit generation.
+pub fn gram_with(kind: KernelKind, a: &Matrix) -> Matrix {
+    let mut g = match kind {
+        KernelKind::Scalar => gram_upper_range_scalar(a, 0, a.rows()),
+        KernelKind::Blocked => gram_upper_range_blocked(a, 0, a.rows()),
+    };
+    mirror_upper(&mut g);
+    g
+}
+
+/// Copy the strict upper triangle onto the lower one — the Gram result
+/// is exactly symmetric by construction.
+fn mirror_upper(g: &mut Matrix) {
+    let n = g.cols();
     let gdata = g.data_mut();
     for p in 0..n {
         for j in (p + 1)..n {
             gdata[j * n + p] = gdata[p * n + j];
         }
     }
+}
+
+/// Upper-triangle Gram accumulation over rows `[r0, r1)` (no mirror),
+/// dispatching on the process-wide generation.
+fn gram_upper_range(a: &Matrix, r0: usize, r1: usize) -> Matrix {
+    match kernel_kind() {
+        KernelKind::Scalar => gram_upper_range_scalar(a, r0, r1),
+        KernelKind::Blocked => gram_upper_range_blocked(a, r0, r1),
+    }
+}
+
+/// Blocked upper-triangle Gram over rows `[r0, r1)`: the 4-row group
+/// chains of the blocked Aᵀ·B kernel, restricted to `j >= p`.
+fn gram_upper_range_blocked(a: &Matrix, r0: usize, r1: usize) -> Matrix {
+    let n = a.cols();
+    let mut g = Matrix::zeros(n, n);
+    let asub = &a.data()[r0 * n..r1 * n];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86::supported() {
+            unsafe { x86::gram_acc(g.data_mut(), asub, n, r1 - r0) };
+            return g;
+        }
+    }
+    gram_acc_portable(g.data_mut(), asub, n, r1 - r0);
     g
 }
 
-/// Upper-triangle Gram accumulation over rows `[r0, r1)` (no mirror).
-fn gram_upper_range(a: &Matrix, r0: usize, r1: usize) -> Matrix {
+/// Portable blocked Gram twin: same group chains, plain mul/add.
+fn gram_acc_portable(g: &mut [f64], a: &[f64], n: usize, nr: usize) {
+    let mut i0 = 0;
+    while i0 < nr {
+        let cnt = (nr - i0).min(4);
+        for p in 0..n {
+            let grow = &mut g[p * n..(p + 1) * n];
+            for j in p..n {
+                let mut t = a[i0 * n + p] * a[i0 * n + j];
+                for r in 1..cnt {
+                    t += a[(i0 + r) * n + p] * a[(i0 + r) * n + j];
+                }
+                grow[j] += t;
+            }
+        }
+        i0 += cnt;
+    }
+}
+
+/// Scalar upper-triangle Gram over rows `[r0, r1)` (no mirror) — the
+/// reference generation.
+fn gram_upper_range_scalar(a: &Matrix, r0: usize, r1: usize) -> Matrix {
     let n = a.cols();
     let mut g = Matrix::zeros(n, n);
     let adata = a.data();
@@ -384,6 +732,410 @@ pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
         }
     }
     y
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 AVX2+FMA microkernels — the SIMD face of the blocked generation
+// ---------------------------------------------------------------------------
+
+/// Explicit SIMD microkernels, selected at runtime when the CPU reports
+/// AVX2+FMA. Every kernel's per-entry summation tree is the same chain
+/// a scalar `f64::mul_add` loop would produce (FMA lanes are
+/// element-independent), which is what makes the blocked GEMM
+/// chunk-invariant and the fused kernel bit-identical to two calls.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{KC, NC};
+    use core::arch::x86_64::*;
+    use core::sync::atomic::{AtomicU8, Ordering};
+
+    /// Runtime AVX2+FMA detection, cached after the first query.
+    pub(super) fn supported() -> bool {
+        static CACHE: AtomicU8 = AtomicU8::new(0);
+        match CACHE.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let ok = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+                CACHE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+                ok
+            }
+        }
+    }
+
+    /// C += A·B over full row-major slices.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA support and slice lengths m·n / m·k /
+    /// k·n for c / a / b.
+    pub(super) unsafe fn gemm(c: &mut [f64], a: &[f64], b: &[f64], m: usize, k: usize, n: usize) {
+        let (cp, ap, bp) = (c.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        for jc in (0..n).step_by(NC) {
+            let nb = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kb = KC.min(k - pc);
+                let mut i = 0;
+                while i + 4 <= m {
+                    let cq = cp.add(i * n + jc);
+                    let aq = ap.add(i * k + pc);
+                    gemm_quad(cq, n, aq, k, bp.add(pc * n + jc), kb, nb);
+                    i += 4;
+                }
+                while i < m {
+                    let cq = cp.add(i * n + jc);
+                    let aq = ap.add(i * k + pc);
+                    gemm_one(cq, aq, bp.add(pc * n + jc), n, kb, nb);
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// 4×8 register tile: 4 rows of C × 8 columns held in 8 YMM
+    /// accumulators across the KC panel, flushed into C once.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gemm_quad(
+        c: *mut f64,
+        n: usize,
+        a: *const f64,
+        k: usize,
+        b: *const f64,
+        kb: usize,
+        nb: usize,
+    ) {
+        let (a0, a1, a2, a3) = (a, a.add(k), a.add(2 * k), a.add(3 * k));
+        let (c0, c1, c2, c3) = (c, c.add(n), c.add(2 * n), c.add(3 * n));
+        let mut j = 0;
+        while j + 8 <= nb {
+            let mut s00 = _mm256_setzero_pd();
+            let mut s01 = _mm256_setzero_pd();
+            let mut s10 = _mm256_setzero_pd();
+            let mut s11 = _mm256_setzero_pd();
+            let mut s20 = _mm256_setzero_pd();
+            let mut s21 = _mm256_setzero_pd();
+            let mut s30 = _mm256_setzero_pd();
+            let mut s31 = _mm256_setzero_pd();
+            for p in 0..kb {
+                let bl = _mm256_loadu_pd(b.add(p * n + j));
+                let bh = _mm256_loadu_pd(b.add(p * n + j + 4));
+                let x0 = _mm256_set1_pd(*a0.add(p));
+                s00 = _mm256_fmadd_pd(x0, bl, s00);
+                s01 = _mm256_fmadd_pd(x0, bh, s01);
+                let x1 = _mm256_set1_pd(*a1.add(p));
+                s10 = _mm256_fmadd_pd(x1, bl, s10);
+                s11 = _mm256_fmadd_pd(x1, bh, s11);
+                let x2 = _mm256_set1_pd(*a2.add(p));
+                s20 = _mm256_fmadd_pd(x2, bl, s20);
+                s21 = _mm256_fmadd_pd(x2, bh, s21);
+                let x3 = _mm256_set1_pd(*a3.add(p));
+                s30 = _mm256_fmadd_pd(x3, bl, s30);
+                s31 = _mm256_fmadd_pd(x3, bh, s31);
+            }
+            add_store(c0.add(j), s00, s01);
+            add_store(c1.add(j), s10, s11);
+            add_store(c2.add(j), s20, s21);
+            add_store(c3.add(j), s30, s31);
+            j += 8;
+        }
+        while j + 4 <= nb {
+            let mut s0 = _mm256_setzero_pd();
+            let mut s1 = _mm256_setzero_pd();
+            let mut s2 = _mm256_setzero_pd();
+            let mut s3 = _mm256_setzero_pd();
+            for p in 0..kb {
+                let bl = _mm256_loadu_pd(b.add(p * n + j));
+                s0 = _mm256_fmadd_pd(_mm256_set1_pd(*a0.add(p)), bl, s0);
+                s1 = _mm256_fmadd_pd(_mm256_set1_pd(*a1.add(p)), bl, s1);
+                s2 = _mm256_fmadd_pd(_mm256_set1_pd(*a2.add(p)), bl, s2);
+                s3 = _mm256_fmadd_pd(_mm256_set1_pd(*a3.add(p)), bl, s3);
+            }
+            add_store_one(c0.add(j), s0);
+            add_store_one(c1.add(j), s1);
+            add_store_one(c2.add(j), s2);
+            add_store_one(c3.add(j), s3);
+            j += 4;
+        }
+        while j < nb {
+            let mut t0 = 0.0;
+            let mut t1 = 0.0;
+            let mut t2 = 0.0;
+            let mut t3 = 0.0;
+            for p in 0..kb {
+                let bj = *b.add(p * n + j);
+                t0 = (*a0.add(p)).mul_add(bj, t0);
+                t1 = (*a1.add(p)).mul_add(bj, t1);
+                t2 = (*a2.add(p)).mul_add(bj, t2);
+                t3 = (*a3.add(p)).mul_add(bj, t3);
+            }
+            *c0.add(j) += t0;
+            *c1.add(j) += t1;
+            *c2.add(j) += t2;
+            *c3.add(j) += t3;
+            j += 1;
+        }
+    }
+
+    /// Single-row remainder of the GEMM tile — same per-entry chains.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gemm_one(c: *mut f64, a: *const f64, b: *const f64, n: usize, kb: usize, nb: usize) {
+        let mut j = 0;
+        while j + 4 <= nb {
+            let mut s = _mm256_setzero_pd();
+            for p in 0..kb {
+                let bl = _mm256_loadu_pd(b.add(p * n + j));
+                s = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(p)), bl, s);
+            }
+            add_store_one(c.add(j), s);
+            j += 4;
+        }
+        while j < nb {
+            let mut t = 0.0;
+            for p in 0..kb {
+                t = (*a.add(p)).mul_add(*b.add(p * n + j), t);
+            }
+            *c.add(j) += t;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn add_store(c: *mut f64, lo: __m256d, hi: __m256d) {
+        _mm256_storeu_pd(c, _mm256_add_pd(_mm256_loadu_pd(c), lo));
+        _mm256_storeu_pd(c.add(4), _mm256_add_pd(_mm256_loadu_pd(c.add(4)), hi));
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn add_store_one(c: *mut f64, v: __m256d) {
+        _mm256_storeu_pd(c, _mm256_add_pd(_mm256_loadu_pd(c), v));
+    }
+
+    /// C += Aᵀ·B over `nr` rows (slices already offset to the range).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA support and slice lengths ka·kb /
+    /// nr·ka / nr·kb for c / a / b.
+    pub(super) unsafe fn tn_acc(
+        c: &mut [f64],
+        a: &[f64],
+        b: &[f64],
+        ka: usize,
+        kb: usize,
+        nr: usize,
+    ) {
+        let cp = c.as_mut_ptr();
+        let mut i0 = 0;
+        while i0 + 4 <= nr {
+            let ar = [
+                a.as_ptr().add(i0 * ka),
+                a.as_ptr().add((i0 + 1) * ka),
+                a.as_ptr().add((i0 + 2) * ka),
+                a.as_ptr().add((i0 + 3) * ka),
+            ];
+            let br = [
+                b.as_ptr().add(i0 * kb),
+                b.as_ptr().add((i0 + 1) * kb),
+                b.as_ptr().add((i0 + 2) * kb),
+                b.as_ptr().add((i0 + 3) * kb),
+            ];
+            tn_quad(cp, ar, br, ka, kb);
+            i0 += 4;
+        }
+        if i0 < nr {
+            let ar: Vec<*const f64> = (i0..nr).map(|i| a.as_ptr().add(i * ka)).collect();
+            let br: Vec<*const f64> = (i0..nr).map(|i| b.as_ptr().add(i * kb)).collect();
+            tn_small(cp, &ar, &br, ka, kb);
+        }
+    }
+
+    /// 4-row Aᵀ·B group: per output entry a pinned mul-then-fma chain
+    /// over the group's rows.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tn_quad(c: *mut f64, ar: [*const f64; 4], br: [*const f64; 4], ka: usize, kb: usize) {
+        for p in 0..ka {
+            let x0 = _mm256_set1_pd(*ar[0].add(p));
+            let x1 = _mm256_set1_pd(*ar[1].add(p));
+            let x2 = _mm256_set1_pd(*ar[2].add(p));
+            let x3 = _mm256_set1_pd(*ar[3].add(p));
+            let crow = c.add(p * kb);
+            let mut j = 0;
+            while j + 4 <= kb {
+                let mut t = _mm256_mul_pd(x0, _mm256_loadu_pd(br[0].add(j)));
+                t = _mm256_fmadd_pd(x1, _mm256_loadu_pd(br[1].add(j)), t);
+                t = _mm256_fmadd_pd(x2, _mm256_loadu_pd(br[2].add(j)), t);
+                t = _mm256_fmadd_pd(x3, _mm256_loadu_pd(br[3].add(j)), t);
+                add_store_one(crow.add(j), t);
+                j += 4;
+            }
+            while j < kb {
+                let mut t = (*ar[0].add(p)) * *br[0].add(j);
+                t = (*ar[1].add(p)).mul_add(*br[1].add(j), t);
+                t = (*ar[2].add(p)).mul_add(*br[2].add(j), t);
+                t = (*ar[3].add(p)).mul_add(*br[3].add(j), t);
+                *crow.add(j) += t;
+                j += 1;
+            }
+        }
+    }
+
+    /// 1–3-row remainder group of Aᵀ·B — same chain, shorter.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tn_small(c: *mut f64, ar: &[*const f64], br: &[*const f64], ka: usize, kb: usize) {
+        for p in 0..ka {
+            let crow = c.add(p * kb);
+            let mut j = 0;
+            while j + 4 <= kb {
+                let v0 = _mm256_loadu_pd(br[0].add(j));
+                let mut t = _mm256_mul_pd(_mm256_set1_pd(*ar[0].add(p)), v0);
+                for (aq, bq) in ar.iter().zip(br).skip(1) {
+                    let vq = _mm256_loadu_pd(bq.add(j));
+                    t = _mm256_fmadd_pd(_mm256_set1_pd(*aq.add(p)), vq, t);
+                }
+                add_store_one(crow.add(j), t);
+                j += 4;
+            }
+            while j < kb {
+                let mut t = (*ar[0].add(p)) * *br[0].add(j);
+                for (aq, bq) in ar.iter().zip(br).skip(1) {
+                    t = (*aq.add(p)).mul_add(*bq.add(j), t);
+                }
+                *crow.add(j) += t;
+                j += 1;
+            }
+        }
+    }
+
+    /// Upper-triangle G += Aᵀ·A over `nr` rows (slice offset to the
+    /// range).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA support and slice lengths n·n / nr·n
+    /// for g / a.
+    pub(super) unsafe fn gram_acc(g: &mut [f64], a: &[f64], n: usize, nr: usize) {
+        let gp = g.as_mut_ptr();
+        let mut i0 = 0;
+        while i0 + 4 <= nr {
+            let r = [
+                a.as_ptr().add(i0 * n),
+                a.as_ptr().add((i0 + 1) * n),
+                a.as_ptr().add((i0 + 2) * n),
+                a.as_ptr().add((i0 + 3) * n),
+            ];
+            gram_quad(gp, r, n);
+            i0 += 4;
+        }
+        if i0 < nr {
+            let r: Vec<*const f64> = (i0..nr).map(|i| a.as_ptr().add(i * n)).collect();
+            gram_small(gp, &r, n);
+        }
+    }
+
+    /// 4-row Gram group, upper triangle only (`j >= p`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gram_quad(g: *mut f64, r: [*const f64; 4], n: usize) {
+        for p in 0..n {
+            let x0 = _mm256_set1_pd(*r[0].add(p));
+            let x1 = _mm256_set1_pd(*r[1].add(p));
+            let x2 = _mm256_set1_pd(*r[2].add(p));
+            let x3 = _mm256_set1_pd(*r[3].add(p));
+            let grow = g.add(p * n);
+            let mut j = p;
+            while j + 4 <= n {
+                let mut t = _mm256_mul_pd(x0, _mm256_loadu_pd(r[0].add(j)));
+                t = _mm256_fmadd_pd(x1, _mm256_loadu_pd(r[1].add(j)), t);
+                t = _mm256_fmadd_pd(x2, _mm256_loadu_pd(r[2].add(j)), t);
+                t = _mm256_fmadd_pd(x3, _mm256_loadu_pd(r[3].add(j)), t);
+                add_store_one(grow.add(j), t);
+                j += 4;
+            }
+            while j < n {
+                let mut t = (*r[0].add(p)) * *r[0].add(j);
+                t = (*r[1].add(p)).mul_add(*r[1].add(j), t);
+                t = (*r[2].add(p)).mul_add(*r[2].add(j), t);
+                t = (*r[3].add(p)).mul_add(*r[3].add(j), t);
+                *grow.add(j) += t;
+                j += 1;
+            }
+        }
+    }
+
+    /// 1–3-row remainder Gram group.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gram_small(g: *mut f64, r: &[*const f64], n: usize) {
+        for p in 0..n {
+            let grow = g.add(p * n);
+            let mut j = p;
+            while j + 4 <= n {
+                let v0 = _mm256_loadu_pd(r[0].add(j));
+                let mut t = _mm256_mul_pd(_mm256_set1_pd(*r[0].add(p)), v0);
+                for rq in r.iter().skip(1) {
+                    let vq = _mm256_loadu_pd(rq.add(j));
+                    t = _mm256_fmadd_pd(_mm256_set1_pd(*rq.add(p)), vq, t);
+                }
+                add_store_one(grow.add(j), t);
+                j += 4;
+            }
+            while j < n {
+                let mut t = (*r[0].add(p)) * *r[0].add(j);
+                for rq in r.iter().skip(1) {
+                    t = (*rq.add(p)).mul_add(*rq.add(j), t);
+                }
+                *grow.add(j) += t;
+                j += 1;
+            }
+        }
+    }
+
+    /// Fused `(Y, Bᵀ) = (A·W, Aᵀ·(A·W))` over `nr` rows (slice offset
+    /// to the range): per 4-row group the Y rows accumulate the blocked
+    /// GEMM's per-KC-panel fma chains, then fold into Bᵀ with the
+    /// blocked Aᵀ·B group chain while the A rows are hot — A streams
+    /// from memory once. Scalar `mul_add` under the `fma` feature emits
+    /// the same fused operation as the vector lanes, so the bits match
+    /// the two-call plan exactly.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA support and slice lengths nr·l / k·l /
+    /// nr·k / k·l for y / bt / a / w.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn fused(
+        y: &mut [f64],
+        bt: &mut [f64],
+        a: &[f64],
+        w: &[f64],
+        k: usize,
+        l: usize,
+    ) {
+        let nr = if l == 0 { 0 } else { y.len() / l };
+        let mut i0 = 0;
+        while i0 < nr {
+            let cnt = (nr - i0).min(4);
+            for i in i0..i0 + cnt {
+                let arow = &a[i * k..(i + 1) * k];
+                let yrow = &mut y[i * l..(i + 1) * l];
+                for pc in (0..k).step_by(KC) {
+                    let kb = KC.min(k - pc);
+                    for (j, yj) in yrow.iter_mut().enumerate() {
+                        let mut t = 0.0;
+                        for p in 0..kb {
+                            t = arow[pc + p].mul_add(w[(pc + p) * l + j], t);
+                        }
+                        *yj += t;
+                    }
+                }
+            }
+            for p in 0..k {
+                let btrow = &mut bt[p * l..(p + 1) * l];
+                for (j, cj) in btrow.iter_mut().enumerate() {
+                    let mut t = a[i0 * k + p] * y[i0 * l + j];
+                    for r in 1..cnt {
+                        t = a[(i0 + r) * k + p].mul_add(y[(i0 + r) * l + j], t);
+                    }
+                    *cj += t;
+                }
+            }
+            i0 += cnt;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -706,32 +1458,39 @@ impl Csr {
     }
 }
 
+/// 8-lane multi-accumulator dot product. The lanes hide the FP add
+/// latency so the loop vectorizes; the lane merge is the fixed tree
+/// `((s0+s4)+(s2+s6)) + ((s1+s5)+(s3+s7))` followed by an ascending
+/// scalar tail — pinned by `dot_reduction_association_is_pinned`.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: faster and slightly more accurate
-    let n = a.len();
-    let mut s0 = 0.0;
-    let mut s1 = 0.0;
-    let mut s2 = 0.0;
-    let mut s3 = 0.0;
-    let chunks = n / 4;
-    for c in 0..chunks {
-        let i = 4 * c;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    let mut s = [0.0f64; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for i in 0..8 {
+            s[i] += xa[i] * xb[i];
+        }
     }
-    let mut s = (s0 + s2) + (s1 + s3);
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
+    let mut t = ((s[0] + s[4]) + (s[2] + s[6])) + ((s[1] + s[5]) + (s[3] + s[7]));
+    for (xa, xb) in ra.iter().zip(rb) {
+        t += xa * xb;
     }
-    s
+    t
 }
 
+/// Euclidean norm. Fast path: the unrolled [`dot`] on `(x, x)` — one
+/// vectorized pass — accepted whenever the plain sum of squares is
+/// finite and far from the underflow floor; otherwise fall back to the
+/// scaled LAPACK dnrm2 loop, which is immune to overflow/underflow.
 #[inline]
 pub fn nrm2(x: &[f64]) -> f64 {
+    let ssq = dot(x, x);
+    if ssq.is_finite() && ssq > 1e-280 {
+        return ssq.sqrt();
+    }
     // scaled to avoid overflow/underflow, LAPACK dnrm2 style
     let mut scale = 0.0f64;
     let mut ssq = 1.0f64;
@@ -749,10 +1508,22 @@ pub fn nrm2(x: &[f64]) -> f64 {
     scale * ssq.sqrt()
 }
 
+/// y += alpha·x, 4-wide unrolled. Elementwise, so the unroll cannot
+/// change a bit relative to the plain loop (pinned in
+/// `axpy_unroll_is_elementwise_exact`).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut cy = y.chunks_exact_mut(4);
+    let cx = x.chunks_exact(4);
+    let rx = cx.remainder();
+    for (yy, xx) in (&mut cy).zip(cx) {
+        yy[0] += alpha * xx[0];
+        yy[1] += alpha * xx[1];
+        yy[2] += alpha * xx[2];
+        yy[3] += alpha * xx[3];
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(rx) {
         *yi += alpha * xi;
     }
 }
@@ -1029,5 +1800,122 @@ mod tests {
         let big = vec![1e200, 1e200];
         assert!((nrm2(&big) - 1e200 * (2.0f64).sqrt()).abs() / 1e200 < 1e-15);
         assert_eq!(nrm2(&[]), 0.0);
+        // squares underflow to zero — must take the scaled fallback
+        let tiny = vec![1e-200; 5];
+        assert!((nrm2(&tiny) - 1e-200 * 5.0f64.sqrt()).abs() / 1e-200 < 1e-15);
+    }
+
+    #[test]
+    fn kernel_kind_parsing() {
+        assert_eq!(KernelKind::parse(Some("scalar")), KernelKind::Scalar);
+        assert_eq!(KernelKind::parse(Some("SCALAR")), KernelKind::Scalar);
+        assert_eq!(KernelKind::parse(Some("blocked")), KernelKind::Blocked);
+        assert_eq!(KernelKind::parse(Some("anything-else")), KernelKind::Blocked);
+        assert_eq!(KernelKind::parse(None), KernelKind::Blocked);
+    }
+
+    fn check_gemm_generations(rng: &mut Rng, m: usize, k: usize, n: usize) {
+        let a = randmat(rng, m, k);
+        let b = randmat(rng, k, n);
+        let mut cb = Matrix::zeros(m, n);
+        gemm_acc_with(KernelKind::Blocked, &mut cb, &a, &b);
+        let mut cs = Matrix::zeros(m, n);
+        gemm_acc_with(KernelKind::Scalar, &mut cs, &a, &b);
+        assert!(cb.sub(&cs).max_abs() < 1e-12, "({m},{k},{n})");
+    }
+
+    #[test]
+    fn blocked_gemm_matches_scalar_on_ragged_shapes() {
+        // every dimension 1, 7, or straddling a blocking parameter, so
+        // all remainder paths of the tile (row quads, 8/4/1-wide column
+        // lanes, partial KC/NC panels) are exercised
+        let mut rng = Rng::seed(83);
+        let dims = [1usize, 7, MC - 1, MC + 1, KC + 1];
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    check_gemm_generations(&mut rng, m, k, n);
+                }
+            }
+        }
+        for &(m, k, n) in &[(3 * KC + 5, KC + 1, NC + 1), (NC + 1, 3 * KC + 5, MC - 1)] {
+            check_gemm_generations(&mut rng, m, k, n);
+        }
+        check_gemm_generations(&mut rng, MC + 1, NC + 1, 3 * KC + 5);
+    }
+
+    #[test]
+    fn blocked_reductions_match_scalar_on_ragged_shapes() {
+        let mut rng = Rng::seed(84);
+        let mut shapes = vec![(1usize, 1usize, 1usize), (7, 5, 3), (63, 9, 4), (65, 31, 8)];
+        shapes.extend_from_slice(&[(129, 17, 6), (389, 24, 11), (1029, 40, 5)]);
+        for (m, n, k) in shapes {
+            let a = randmat(&mut rng, m, n);
+            let b = randmat(&mut rng, m, k);
+            let tn_b = matmul_tn_with(KernelKind::Blocked, &a, &b);
+            let tn_s = matmul_tn_with(KernelKind::Scalar, &a, &b);
+            assert!(tn_b.sub(&tn_s).max_abs() < 1e-12, "tn ({m},{n},{k})");
+            let g_b = gram_with(KernelKind::Blocked, &a);
+            let g_s = gram_with(KernelKind::Scalar, &a);
+            assert!(g_b.sub(&g_s).max_abs() < 1e-12, "gram ({m},{n})");
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(g_b[(i, j)], g_b[(j, i)], "blocked gram symmetry ({m},{n})");
+                }
+            }
+            let w = randmat(&mut rng, k, 3);
+            let (y_b, bt_b) = matmul_and_tn_with(KernelKind::Blocked, &b, &w);
+            let (y_s, bt_s) = matmul_and_tn_with(KernelKind::Scalar, &b, &w);
+            assert!(y_b.sub(&y_s).max_abs() < 1e-12, "fused Y ({m},{n},{k})");
+            assert!(bt_b.sub(&bt_s).max_abs() < 1e-12, "fused Bt ({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn fused_matches_two_calls_bitwise_in_both_generations() {
+        let mut rng = Rng::seed(85);
+        for kind in [KernelKind::Scalar, KernelKind::Blocked] {
+            for &(m, k, l) in &[(23usize, 11usize, 4usize), (66, 129, 5), (131, 64, 9)] {
+                let a = randmat(&mut rng, m, k);
+                let w = randmat(&mut rng, k, l);
+                let (y, bt) = matmul_and_tn_with(kind, &a, &w);
+                let mut y_ref = Matrix::zeros(m, l);
+                gemm_acc_with(kind, &mut y_ref, &a, &w);
+                let bt_ref = matmul_tn_with(kind, &a, &y_ref);
+                assert_eq!(y.data(), y_ref.data(), "({m},{k},{l},{kind:?}) Y");
+                assert_eq!(bt.data(), bt_ref.data(), "({m},{k},{l},{kind:?}) Bt");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_reduction_association_is_pinned() {
+        let mut rng = Rng::seed(86);
+        let n = 19; // two full 8-lane chunks plus a 3-element tail
+        let a: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let mut s = [0.0f64; 8];
+        for c in 0..n / 8 {
+            for i in 0..8 {
+                s[i] += a[8 * c + i] * b[8 * c + i];
+            }
+        }
+        let mut want = ((s[0] + s[4]) + (s[2] + s[6])) + ((s[1] + s[5]) + (s[3] + s[7]));
+        for i in (n / 8) * 8..n {
+            want += a[i] * b[i];
+        }
+        assert_eq!(dot(&a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn axpy_unroll_is_elementwise_exact() {
+        let mut rng = Rng::seed(87);
+        let x: Vec<f64> = (0..23).map(|_| rng.gauss()).collect();
+        let y0: Vec<f64> = (0..23).map(|_| rng.gauss()).collect();
+        let mut y = y0.clone();
+        axpy(0.37, &x, &mut y);
+        for i in 0..23 {
+            assert_eq!(y[i].to_bits(), (y0[i] + 0.37 * x[i]).to_bits());
+        }
     }
 }

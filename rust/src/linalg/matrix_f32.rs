@@ -1,0 +1,339 @@
+//! Dense row-major `f32` matrix — the halved-byte storage mode behind
+//! `DSVD_PRECISION=f32` (`dist::Block::DenseF32`, f32 spill payloads,
+//! and `dist::DistRowMatrixF32` slabs).
+//!
+//! Only *storage* is single precision: every kernel here widens each
+//! f32 entry to f64 exactly (`f32 as f64` is lossless) and accumulates
+//! in f64, so the arithmetic error of a product against the demoted
+//! operand is the ordinary f64 roundoff. What f32 storage costs is the
+//! one-time demotion error of A itself (~1.2e-7 relative), which
+//! Halko–Martinsson–Tropp's robustness analysis (arXiv 0909.4061)
+//! shows the randomized range finder tolerates as long as the
+//! orthonormalization / Gram / small-factor stages stay f64 — which
+//! they do (see `dist/README.md`, "Kernel and precision model").
+
+use super::matrix::Matrix;
+
+/// Storage precision for sketch-side operand payloads
+/// (`DSVD_PRECISION=f32|f64`). Never changes the precision of TSQR,
+/// Gram accumulation, or the returned factors — those stay `f64`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full-precision storage (default).
+    F64,
+    /// Single-precision operand storage, f64 accumulation.
+    F32,
+}
+
+impl Precision {
+    /// Parse an override: only the literal `f32` (any case) selects
+    /// single-precision storage; everything else means f64.
+    pub fn parse(value: Option<&str>) -> Precision {
+        match value {
+            Some(v) if v.eq_ignore_ascii_case("f32") => Precision::F32,
+            _ => Precision::F64,
+        }
+    }
+
+    /// Resolve from the `DSVD_PRECISION` environment variable.
+    pub fn from_env() -> Precision {
+        Precision::parse(std::env::var("DSVD_PRECISION").ok().as_deref())
+    }
+
+    /// Bytes per stored matrix entry in this precision.
+    pub fn bytes_per_entry(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+        }
+    }
+}
+
+/// Dense row-major matrix of `f32` — a storage-only mirror of
+/// [`Matrix`] with exactly the accessors the f32 block/slab backends
+/// need.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatrixF32 {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatrixF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major data vector. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length {} != {}x{}", data.len(), rows, cols);
+        MatrixF32 { rows, cols, data }
+    }
+
+    /// Demote an `f64` matrix to f32 storage (round-to-nearest).
+    pub fn from_matrix(a: &Matrix) -> Self {
+        let data = a.data().iter().map(|&x| x as f32).collect();
+        MatrixF32 { rows: a.rows(), cols: a.cols(), data }
+    }
+
+    /// Promote back to an `f64` matrix (exact — every f32 is an f64).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|&x| x as f64).collect())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Bytes of the stored representation — half of what the same
+    /// shape costs in `f64` (this is the number the comms model and
+    /// the spill budget see).
+    pub fn storage_bytes(&self) -> usize {
+        4 * self.rows * self.cols
+    }
+
+    /// Copy of the sub-block `rows_range × col_range`.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> MatrixF32 {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = MatrixF32::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            let dst = &mut out.data[(i - r0) * (c1 - c0)..(i - r0 + 1) * (c1 - c0)];
+            dst.copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-precision kernels: f32 operand storage, exact widening, f64 sums
+// ---------------------------------------------------------------------------
+
+/// C = A·B with A stored f32 (widened exactly per entry) and B, C f64.
+pub fn matmul_f32(a: &MatrixF32, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    assert_eq!(k, b.rows(), "matmul_f32 shape mismatch");
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    let bdata = b.data();
+    let cdata = c.data_mut();
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = &mut cdata[i * n..(i + 1) * n];
+        for (p, &ap) in arow.iter().enumerate() {
+            let x = ap as f64;
+            if x == 0.0 {
+                continue;
+            }
+            let brow = &bdata[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += x * bj;
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ·B with A stored f32, B f64 — the outer-product-of-rows order
+/// of the scalar `blas::matmul_tn`.
+pub fn matmul_tn_f32(a: &MatrixF32, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn_f32 shape mismatch");
+    let (m, ka) = a.shape();
+    let kb = b.cols();
+    let mut c = Matrix::zeros(ka, kb);
+    let bdata = b.data();
+    let cdata = c.data_mut();
+    for i in 0..m {
+        let arow = a.row(i);
+        let brow = &bdata[i * kb..(i + 1) * kb];
+        for (p, &ap) in arow.iter().enumerate() {
+            let x = ap as f64;
+            if x == 0.0 {
+                continue;
+            }
+            let crow = &mut cdata[p * kb..(p + 1) * kb];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += x * bj;
+            }
+        }
+    }
+    c
+}
+
+/// Fused `(Y, Bᵀ) = (A·W, Aᵀ·(A·W))` with A stored f32 — the f32 face
+/// of `blas::matmul_and_tn`, streaming each stored row once and
+/// bit-identical to the ([`matmul_f32`], [`matmul_tn_f32`]) pair.
+pub fn matmul_and_tn_f32(a: &MatrixF32, w: &Matrix) -> (Matrix, Matrix) {
+    assert_eq!(a.cols(), w.rows(), "matmul_and_tn_f32 shape mismatch");
+    let (m, k) = a.shape();
+    let l = w.cols();
+    let mut y = Matrix::zeros(m, l);
+    let mut bt = Matrix::zeros(k, l);
+    let wdata = w.data();
+    for i in 0..m {
+        let arow = a.row(i);
+        let yrow = y.row_mut(i);
+        for (p, &ap) in arow.iter().enumerate() {
+            let x = ap as f64;
+            if x == 0.0 {
+                continue;
+            }
+            let wrow = &wdata[p * l..(p + 1) * l];
+            for (yj, &wj) in yrow.iter_mut().zip(wrow) {
+                *yj += x * wj;
+            }
+        }
+        let btdata = bt.data_mut();
+        for (p, &ap) in arow.iter().enumerate() {
+            let x = ap as f64;
+            if x == 0.0 {
+                continue;
+            }
+            let crow = &mut btdata[p * l..(p + 1) * l];
+            for (cj, &yj) in crow.iter_mut().zip(&*yrow) {
+                *cj += x * yj;
+            }
+        }
+    }
+    (y, bt)
+}
+
+/// y = A·x with A stored f32, x and y f64.
+pub fn gemv_f32(a: &MatrixF32, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "gemv_f32 length mismatch");
+    (0..a.rows())
+        .map(|i| {
+            let mut s = 0.0;
+            for (&ap, &xj) in a.row(i).iter().zip(x) {
+                s += ap as f64 * xj;
+            }
+            s
+        })
+        .collect()
+}
+
+/// y = Aᵀ·x with A stored f32, x and y f64.
+pub fn gemv_t_f32(a: &MatrixF32, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len(), "gemv_t_f32 length mismatch");
+    let mut y = vec![0.0; a.cols()];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        for (yj, &ap) in y.iter_mut().zip(a.row(i)) {
+            *yj += xi * ap as f64;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn precision_parsing() {
+        assert_eq!(Precision::parse(Some("f32")), Precision::F32);
+        assert_eq!(Precision::parse(Some("F32")), Precision::F32);
+        assert_eq!(Precision::parse(Some("f64")), Precision::F64);
+        assert_eq!(Precision::parse(Some("junk")), Precision::F64);
+        assert_eq!(Precision::parse(None), Precision::F64);
+        assert_eq!(Precision::F32.bytes_per_entry(), 4);
+        assert_eq!(Precision::F64.bytes_per_entry(), 8);
+    }
+
+    #[test]
+    fn demote_promote_roundtrip_and_bytes() {
+        let mut rng = Rng::seed(31);
+        let a = randmat(&mut rng, 9, 7);
+        let a32 = MatrixF32::from_matrix(&a);
+        assert_eq!(a32.shape(), (9, 7));
+        assert_eq!(a32.storage_bytes(), 4 * 9 * 7);
+        // demotion error is bounded by f32 roundoff on unit-scale data
+        assert!(a32.to_matrix().sub(&a).max_abs() < 1e-6);
+        // promote→demote is exact (every f32 is representable in f64)
+        let again = MatrixF32::from_matrix(&a32.to_matrix());
+        assert_eq!(again, a32);
+    }
+
+    #[test]
+    fn mixed_kernels_match_f64_on_promoted_operand() {
+        // computing on the PROMOTED f64 copy must give results within
+        // f64 roundoff of the mixed kernels — storage is the only
+        // difference, the arithmetic is f64 on both sides
+        let mut rng = Rng::seed(32);
+        let a = randmat(&mut rng, 37, 13);
+        let a32 = MatrixF32::from_matrix(&a);
+        let ap = a32.to_matrix();
+        let b = randmat(&mut rng, 13, 5);
+        assert!(matmul_f32(&a32, &b).sub(&blas::matmul(&ap, &b)).max_abs() < 1e-12);
+        let q = randmat(&mut rng, 37, 4);
+        assert!(matmul_tn_f32(&a32, &q).sub(&blas::matmul_tn(&ap, &q)).max_abs() < 1e-12);
+        let x: Vec<f64> = (0..13).map(|_| rng.gauss()).collect();
+        for (got, want) in gemv_f32(&a32, &x).iter().zip(blas::gemv(&ap, &x)) {
+            assert!((got - want).abs() < 1e-12);
+        }
+        let z: Vec<f64> = (0..37).map(|_| rng.gauss()).collect();
+        for (got, want) in gemv_t_f32(&a32, &z).iter().zip(blas::gemv_t(&ap, &z)) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fused_f32_bit_identical_to_two_calls() {
+        let mut rng = Rng::seed(33);
+        for &(m, k, l) in &[(23usize, 11usize, 4usize), (64, 17, 5), (130, 33, 8)] {
+            let a32 = MatrixF32::from_matrix(&randmat(&mut rng, m, k));
+            let w = randmat(&mut rng, k, l);
+            let (y, bt) = matmul_and_tn_f32(&a32, &w);
+            let y_ref = matmul_f32(&a32, &w);
+            let bt_ref = matmul_tn_f32(&a32, &y_ref);
+            assert_eq!(y.data(), y_ref.data(), "({m},{k},{l}) Y");
+            assert_eq!(bt.data(), bt_ref.data(), "({m},{k},{l}) Bt");
+        }
+    }
+
+    #[test]
+    fn slice_matches_promoted_slice() {
+        let mut rng = Rng::seed(34);
+        let a = randmat(&mut rng, 8, 6);
+        let a32 = MatrixF32::from_matrix(&a);
+        let s = a32.slice(2, 7, 1, 4);
+        assert_eq!(s.shape(), (5, 3));
+        assert_eq!(s.to_matrix(), a32.to_matrix().slice(2, 7, 1, 4));
+    }
+}

@@ -7,8 +7,10 @@ pub mod dct;
 pub mod eigh;
 pub mod fft;
 pub mod matrix;
+pub mod matrix_f32;
 pub mod qr;
 pub mod svd;
 
-pub use blas::Csr;
+pub use blas::{Csr, KernelKind};
 pub use matrix::Matrix;
+pub use matrix_f32::{MatrixF32, Precision};

@@ -220,6 +220,11 @@ fn cmd_gen(cfg: &RunConfig, extra: &Extra) -> CmdResult {
 fn cmd_info(cfg: &RunConfig) -> CmdResult {
     println!("dsvd — randomized distributed PCA/SVD (Li–Kluger–Tygert 2016 reproduction)");
     println!("config: {cfg:#?}");
+    println!(
+        "kernel: {:?} (DSVD_KERNEL)  storage precision: {:?} (DSVD_PRECISION)",
+        dsvd::linalg::blas::kernel_kind(),
+        dsvd::linalg::Precision::from_env()
+    );
     match dsvd::runtime::PjrtEngine::load_default() {
         Ok(e) => println!("pjrt: OK (platform = {}, artifacts = {:?})", e.platform(), e.artifact_dir),
         Err(e) => println!("pjrt: unavailable ({e}) — run `make artifacts`"),
@@ -246,4 +251,8 @@ global flags:
   --power-iters N (60)     --config FILE
   --tolerance X (0 = rank-first)  --block-size N (8; adaptive l0 and Δl)
   --shuffle-latency X (simulated s/byte; env DSVD_SHUFFLE_LATENCY)
-  --task-overhead X  (simulated s/task; env DSVD_TASK_OVERHEAD)";
+  --task-overhead X  (simulated s/task; env DSVD_TASK_OVERHEAD)
+
+env-only knobs:
+  DSVD_KERNEL=blocked|scalar     dense kernels (blocked SIMD default; scalar = reference)
+  DSVD_PRECISION=f64|f32         operand storage width (accumulation/factors stay f64)";

@@ -34,6 +34,12 @@ pub trait Compute: Sync {
 }
 
 /// Pure-Rust backend built on `crate::linalg::blas`.
+///
+/// The dense products dispatch through the kernel selector: `blocked`
+/// (cache-blocked SIMD microkernels, the default) or `scalar` (the
+/// original loop nest, kept as the bit-exactness reference), chosen
+/// once per process by `DSVD_KERNEL`. Both honour the same numerical
+/// contracts, so the backend name stays `"native"` either way.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeCompute;
 

@@ -9,10 +9,14 @@
 //! * the double-orthonormalization variants (Algorithms 7 and 8, whose
 //!   final subspace factorization runs Algorithm 2/4) must return left
 //!   singular vectors with `MaxEntry(|UᵀU−I|) ≤ 1e-13` — the paper's
-//!   machine-precision claim — on tall and wide shapes alike.
+//!   machine-precision claim — on tall and wide shapes alike;
+//! * the mixed-precision storage path (`DSVD_PRECISION=f32`: 4-byte
+//!   slabs, f64 accumulation, f64 factors) must satisfy the *same* two
+//!   guarantees whenever `σ_{l+1}` dwarfs the f32 demotion error — the
+//!   precision-robustness that HMT (arXiv 0909.4061) establishes.
 
 use dsvd::algs::{algorithm7, algorithm8, LowRankOpts};
-use dsvd::dist::{Context, DistBlockMatrix};
+use dsvd::dist::{Context, DistBlockMatrix, DistRowMatrixF32};
 use dsvd::gen::DctBlockTestMatrix;
 use dsvd::linalg::svd::svd;
 use dsvd::linalg::{blas, Matrix};
@@ -115,6 +119,51 @@ fn algorithm8_within_hmt_bound_of_dense_reference() {
         .powf(1.0 / (2.0 * iters as f64 + 1.0));
     assert!(err <= factor * sigma_opt, "err {err} vs bound {}", factor * sigma_opt);
     assert!(err >= 0.999 * sigma_opt, "err {err} below the optimal {sigma_opt}");
+}
+
+#[test]
+fn f32_sketch_path_stays_within_hmt_envelope() {
+    // The f32 storage path demotes only the *input* slabs: every product
+    // widens to f64 on read and the sketch/TSQR/SVD stages never leave
+    // f64. The demotion perturbs A by ‖E‖₂ ≲ √(mn)·ε_f32·max|aᵢⱼ| ≈ 1e-5
+    // here, far below σ_{l+1} = 2⁻⁶, so both the HMT reconstruction
+    // bound and the machine-precision orthonormality claim must survive
+    // the 4-byte operand untouched.
+    let (m, n, l, iters) = (80usize, 48usize, 6usize, 2usize);
+    let ctx = Context::new(8);
+    let (_a, a_dense, _) = geometric_block_matrix(&ctx, m, n);
+    let reference = svd(&a_dense);
+    let sigma_opt = reference.s[l];
+    let factor = (1.0 + 9.0 * ((l * n.min(m)) as f64).sqrt())
+        .powf(1.0 / (2.0 * iters as f64 + 1.0));
+
+    let a32 = DistRowMatrixF32::from_matrix(&a_dense, 16);
+    assert_eq!(a32.storage_bytes(), 4 * m * n, "f32 slabs must charge 4 bytes/entry");
+    for (name, out) in [
+        ("algorithm7", algorithm7(&ctx, &NativeCompute, &a32, &opts(l, iters))),
+        ("algorithm8", algorithm8(&ctx, &NativeCompute, &a32, &opts(l, iters))),
+    ] {
+        // reconstruction error measured against the *original* f64 A
+        let u_dense = out.u.collect(&ctx);
+        let err = dense_residual_norm(&a_dense, &u_dense, &out.s, &out.v);
+        assert!(
+            err <= factor * sigma_opt,
+            "{name} on f32 slabs: ‖A−UΣVᵀ‖₂ = {err} exceeds HMT bound {}",
+            factor * sigma_opt
+        );
+        assert!(err >= 0.999 * sigma_opt, "{name}: err {err} below the optimal {sigma_opt}");
+        // the factors are pure f64 products of f64 orthonormalizations,
+        // so the paper's 1e-13 claim must hold bit-for-bit as in f64
+        let u_orth = max_entry_gram_minus_identity(&ctx, &NativeCompute, &out.u);
+        assert!(u_orth <= 1e-13, "{name} (f32 path): MaxEntry(|UᵀU−I|) = {u_orth} > 1e-13");
+        let v_orth = max_entry_gram_minus_identity_local(&out.v);
+        assert!(v_orth <= 1e-13, "{name} (f32 path): MaxEntry(|VᵀV−I|) = {v_orth} > 1e-13");
+        // top singular values are insensitive to the 4-byte operand
+        for j in 0..3 {
+            let rel = (out.s[j] - reference.s[j]).abs() / reference.s[j];
+            assert!(rel < 1e-5, "{name} σ_{j}: {} vs dense {}", out.s[j], reference.s[j]);
+        }
+    }
 }
 
 #[test]

@@ -7,10 +7,13 @@
 #                                BENCH_tall_skinny.json, BENCH_lowrank.json,
 #                                BENCH_gen.json, BENCH_sparse.json,
 #                                BENCH_fused.json, BENCH_ooc.json,
-#                                BENCH_faults.json, BENCH_adaptive.json
+#                                BENCH_faults.json, BENCH_adaptive.json,
+#                                BENCH_kernels.json
 #                                (fails if any record was not written; the
-#                                fused, out-of-core, fault, and adaptive
-#                                benches also gate)
+#                                fused, out-of-core, fault, adaptive, and
+#                                kernel benches also gate), then the
+#                                DSVD_KERNEL / DSVD_PRECISION feature
+#                                matrix in separate processes
 #   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
 #                                scaling acceptance test (>=4 cores)
 #
@@ -117,9 +120,19 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_adaptive.json" \
     cargo bench --bench tables_adaptive
 
+# the kernel trajectory is a GATE: the blocked SIMD microkernels must
+# clear 1.5x over the scalar reference on matmul/matmul_tn/gram (while
+# agreeing to 1e-12 — the bench asserts that itself), and the f32
+# storage windows of Algorithms 7/8 must halve the byte ledgers with
+# the error columns intact
+echo "== kernel + precision gates: micro_kernels"
+DSVD_BENCH_JSON="BENCH_kernels.json" \
+    cargo bench --bench micro_kernels
+
 # every expected perf record must exist and be non-empty
 for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
-         BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json; do
+         BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json \
+         BENCH_kernels.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
@@ -169,7 +182,37 @@ for gate in within_tolerance estimator_within_hmt passes_within_budget; do
         exit 1
     fi
 done
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json"
+# the blocked microkernels must have cleared the 1.5x bar on all three
+# dense kernels, and the f32 storage runs must have halved the byte
+# ledgers while keeping the error columns inside their envelopes
+for gate in blocked_matmul_speedup_ok blocked_matmul_tn_speedup_ok blocked_gram_speedup_ok \
+            f32_shuffle_halved f32_peak_halved f32_orth_ok f32_recon_ok; do
+    if ! grep -q "\"$gate\": true" BENCH_kernels.json; then
+        echo "!! BENCH_kernels.json lacks the $gate gate field" >&2
+        exit 1
+    fi
+    if grep -q "\"$gate\": false" BENCH_kernels.json; then
+        echo "!! the kernel trajectory failed the $gate gate" >&2
+        exit 1
+    fi
+done
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json BENCH_kernels.json"
+
+# feature matrix: the kernel and precision knobs are cached per process,
+# so each leg runs in its own test invocation. The scalar reference path
+# must keep the equivalence, out-of-core, and fault suites green
+# unchanged; the f32-equivalent accuracy path must hold under
+# DSVD_PRECISION=f32 in the environment; and the default build must
+# keep compiling with the PJRT stub only (the `pjrt` feature is a
+# deliberate compile gate — its optional deps stay commented out).
+echo "== feature matrix: scalar kernel reference (DSVD_KERNEL=scalar)"
+env -u DSVD_SHUFFLE_LATENCY -u DSVD_TASK_OVERHEAD DSVD_KERNEL=scalar \
+    cargo test -q --test op_equivalence --test out_of_core --test fault_tolerance
+echo "== feature matrix: f32 storage path (DSVD_PRECISION=f32)"
+env -u DSVD_SHUFFLE_LATENCY -u DSVD_TASK_OVERHEAD DSVD_PRECISION=f32 \
+    cargo test -q --test lowrank_accuracy
+echo "== feature matrix: default features compile against the pjrt stub"
+cargo check --release --all-targets
 
 if [ "${FULL:-0}" = "1" ]; then
     # the worker-scaling check gates in the debug tier-1 run already
