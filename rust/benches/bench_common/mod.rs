@@ -60,7 +60,8 @@ pub fn ensure_sweep_comms(cfg: &mut RunConfig) {
 pub fn metrics_json(m: &Metrics) -> String {
     format!(
         "\"cpu_time\": {:e}, \"wall_clock\": {:e}, \"driver_elapsed\": {:e}, \
-         \"comms_time\": {:e}, \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}, \
+         \"comms_time\": {:e}, \"overlap_saved\": {:e}, \
+         \"stages\": {}, \"tasks\": {}, \"shuffle_bytes\": {}, \
          \"a_passes\": {}, \"blocks_materialized\": {}, \"spill_bytes_read\": {}, \
          \"spill_bytes_written\": {}, \"peak_resident_bytes\": {}, \
          \"faults_injected\": {}, \"tasks_retried\": {}, \"speculative_launches\": {}, \
@@ -70,6 +71,7 @@ pub fn metrics_json(m: &Metrics) -> String {
         m.wall_clock,
         m.driver_elapsed,
         m.comms_time,
+        m.overlap_saved,
         m.stages,
         m.tasks,
         m.shuffle_bytes,

@@ -24,6 +24,22 @@
 //! [`Context::driver`] runs a serialized closure on the driver and
 //! charges it to both clocks (driver work stalls the whole cluster).
 //!
+//! **Scheduling.** The context carries a [`SchedMode`] (`DSVD_SCHED`,
+//! pipelined by default). Under the pipelined scheduler a stage's
+//! shuffle transfers become *release times* instead of executor
+//! occupancy (they stream over the simulated network while other tasks
+//! compute), and reduction trees run as genuine dependency DAGs via
+//! [`Context::stage_dag`]: a parent merge dispatches on the real pool
+//! the moment its children's values land, not when the whole level
+//! drains. `DSVD_SCHED=barrier` restores the PR 1–8 stage-barrier
+//! executor as the ablation baseline. Numerics are identical in both
+//! modes — the DAG changes *when* tasks run, never the fold order —
+//! and only `wall_clock` / `overlap_saved` differ between them (see
+//! `dist/sched.rs`). With a **live fault plan** stages always run the
+//! staged fault-tolerant loop below, whatever the mode, so PR 6's
+//! deterministic `(stage, task, attempt)` fault coordinates and
+//! retry/speculation semantics are untouched.
+//!
 //! **Fault tolerance.** A context additionally carries a [`FaultPlan`]
 //! (inert by default; seeded from `DSVD_FAULT_SEED` / `DSVD_FAULT_RATE`
 //! or installed with [`Context::with_fault_plan`]) and a
@@ -45,6 +61,7 @@ use std::time::Instant;
 
 use super::fault::{error_from_panic, DsvdError, FaultKind, FaultPlan, RetryPolicy};
 use super::metrics::{CommsModel, Metrics, StageFaultCounters};
+use super::sched::{DagNodeMeta, SchedMode};
 use crate::pool::{self, WorkerPool};
 
 /// Simulated-cluster driver context. Cheap to create; every experiment
@@ -57,9 +74,24 @@ pub struct Context {
     metrics: Mutex<Metrics>,
     fault: FaultPlan,
     retry: RetryPolicy,
+    sched: SchedMode,
     /// Stage sequence number — the `stage` coordinate of the fault
     /// plan's deterministic schedule.
     stage_seq: AtomicUsize,
+}
+
+/// One node of a super-stage dependency DAG submitted to
+/// [`Context::stage_dag`]: the closure receives its dependencies'
+/// values (in `deps` order, each consumed exactly once) and returns the
+/// node's value plus the shuffled bytes it received — reported at run
+/// time because merge results have data-dependent sizes. `level` is the
+/// node's logical tree level, charged as one stage per level so the
+/// counters match the staged loop the DAG replaces.
+pub(crate) struct DagTask<'a, T> {
+    pub run: Box<dyn FnOnce(Vec<T>) -> (T, usize) + Send + 'a>,
+    /// Indices of earlier nodes this one consumes (topological order).
+    pub deps: Vec<usize>,
+    pub level: usize,
 }
 
 /// One re-runnable stage task inside the fault-tolerant loop: how to
@@ -86,6 +118,7 @@ impl Context {
             metrics: Mutex::new(Metrics::default()),
             fault: FaultPlan::from_env().unwrap_or_default(),
             retry: RetryPolicy::default(),
+            sched: SchedMode::from_env(),
             stage_seq: AtomicUsize::new(0),
         }
     }
@@ -122,6 +155,14 @@ impl Context {
         self
     }
 
+    /// Override the scheduling mode (`DSVD_SCHED` default) — see
+    /// [`SchedMode`]. Numerics are mode-independent; only the simulated
+    /// `wall_clock` / `overlap_saved` accounting moves.
+    pub fn with_sched(mut self, sched: SchedMode) -> Context {
+        self.sched = sched;
+        self
+    }
+
     pub fn executors(&self) -> usize {
         self.executors
     }
@@ -148,6 +189,26 @@ impl Context {
     /// The installed retry/backoff/speculation policy.
     pub fn retry_policy(&self) -> RetryPolicy {
         self.retry
+    }
+
+    /// The active scheduling mode.
+    pub fn sched(&self) -> SchedMode {
+        self.sched
+    }
+
+    /// True under the pipelined scheduler — the storage layer keys
+    /// double-buffered spill prefetch off this, and reductions take the
+    /// dependency-DAG path when the fault plan is also inert.
+    pub fn pipelined(&self) -> bool {
+        self.sched == SchedMode::Pipelined
+    }
+
+    /// True when stages may run as eager dependency DAGs: pipelined
+    /// mode *and* an inert fault plan. A live plan always takes the
+    /// staged fault-tolerant loop so the deterministic
+    /// `(stage, task, attempt)` fault coordinates stay meaningful.
+    pub(crate) fn dag_enabled(&self) -> bool {
+        self.sched == SchedMode::Pipelined && self.fault.is_inert()
     }
 
     /// Poison-tolerant metrics access: a panicking task (injected or
@@ -201,13 +262,16 @@ impl Context {
             let results = self.pool.run_scoped(tasks);
             let real = t0.elapsed().as_secs_f64();
             let durations: Vec<f64> = results.iter().map(|r| r.1).collect();
-            self.metrics_guard().record_stage(
-                &durations,
-                bytes,
-                self.executors,
-                &self.comms,
-                real,
-            );
+            let mut m = self.metrics_guard();
+            match self.sched {
+                SchedMode::Barrier => {
+                    m.record_stage(&durations, bytes, self.executors, &self.comms, real)
+                }
+                SchedMode::Pipelined => {
+                    m.record_stage_pipelined(&durations, bytes, self.executors, &self.comms, real)
+                }
+            }
+            drop(m);
             return results.into_iter().map(|r| r.0).collect();
         }
         let runners = tasks
@@ -229,6 +293,86 @@ impl Context {
             // error
             Err(e) => std::panic::panic_any(e),
         }
+    }
+
+    /// Execute a whole reduction tree (or any task DAG submitted in
+    /// topological order) as **one pipelined super-stage**: node `i`
+    /// dispatches on the real pool the moment every node in
+    /// `nodes[i].deps` has finished, so a parent merge overlaps the
+    /// still-running remainder of its level. Values flow through
+    /// driver-owned slots — each node's value is consumed by exactly
+    /// one dependent (or returned), and the fold order inside every
+    /// node is fixed by its `deps` list, which keeps the results
+    /// bit-identical to the staged loop the DAG replaces.
+    ///
+    /// Accounting: each logical `level` counts as one stage and each
+    /// node as one task (counter parity with the staged loop);
+    /// `wall_clock` is charged `min(dag, barrier-shadow)` and the
+    /// saving lands in `overlap_saved` (see
+    /// [`Metrics::record_dag_stage`](super::Metrics)).
+    ///
+    /// Only callable with an inert fault plan — callers gate on
+    /// [`Context::dag_enabled`] and fall back to staged loops
+    /// otherwise. Returns the slot vector; nodes whose value was
+    /// consumed by a dependent hold `None`.
+    pub(crate) fn stage_dag<'a, T: Send + 'a>(&self, nodes: Vec<DagTask<'a, T>>) -> Vec<Option<T>> {
+        debug_assert!(self.fault.is_inert(), "stage_dag requires an inert fault plan");
+        let n = nodes.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let t0 = Instant::now();
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let got_bytes: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let deps_list: Vec<Vec<usize>> = nodes.iter().map(|nd| nd.deps.clone()).collect();
+        let levels: Vec<usize> = nodes.iter().map(|nd| nd.level).collect();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = nodes
+            .into_iter()
+            .enumerate()
+            .map(|(i, node)| {
+                let slots = &slots;
+                let got_bytes = &got_bytes;
+                Box::new(move || {
+                    let inputs: Vec<T> = node
+                        .deps
+                        .iter()
+                        .map(|&d| {
+                            slots[d]
+                                .lock()
+                                .unwrap()
+                                .take()
+                                .expect("dependency value lands exactly once")
+                        })
+                        .collect();
+                    let (v, b) = (node.run)(inputs);
+                    got_bytes[i].store(b, Ordering::Relaxed);
+                    *slots[i].lock().unwrap() = Some(v);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let durations = self.pool.run_scoped_dag(tasks, &deps_list);
+        let real = t0.elapsed().as_secs_f64();
+        let meta: Vec<DagNodeMeta> = deps_list
+            .into_iter()
+            .zip(levels)
+            .enumerate()
+            .map(|(i, (deps, level))| DagNodeMeta {
+                deps,
+                bytes: got_bytes[i].load(Ordering::Relaxed),
+                level,
+            })
+            .collect();
+        self.metrics_guard().record_dag_stage(
+            &durations,
+            &meta,
+            self.executors,
+            &self.comms,
+            real,
+        );
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("no task holds a slot lock after the stage"))
+            .collect()
     }
 
     /// Fault-tolerant [`Context::stage`]: tasks are **re-invocable**
@@ -550,17 +694,27 @@ pub(crate) fn chunk_owned<T>(v: Vec<T>, size: usize) -> Vec<Vec<T>> {
 /// The grouping is by index, and each group folds left-to-right, so the
 /// result is bit-deterministic for a given fan-in regardless of worker
 /// count — and equals a flat left fold whenever `merge` is associative.
+///
+/// Under the pipelined scheduler (with an inert fault plan) the whole
+/// tree runs as one dependency DAG via [`Context::stage_dag`]: a parent
+/// merge dispatches the moment its children land instead of waiting
+/// for its level to drain. The node set, grouping, fold order, stage
+/// and task counts, and shuffled bytes are identical to the staged
+/// loop — only the schedule (and therefore `wall_clock`) moves.
 pub fn tree_aggregate<T, M, S>(ctx: &Context, items: Vec<T>, merge: M, size_of: S) -> Option<T>
 where
     T: Send,
     M: Fn(T, T) -> T + Sync,
-    S: Fn(&T) -> usize,
+    S: Fn(&T) -> usize + Sync,
 {
     let mut level = items;
     if level.is_empty() {
         return None;
     }
     let fan = ctx.fan_in();
+    if ctx.dag_enabled() && level.len() > 1 {
+        return tree_aggregate_dag(ctx, level, &merge, &size_of, fan);
+    }
     while level.len() > 1 {
         // every non-leading group member ships to its group leader
         let group_bytes: Vec<usize> =
@@ -584,6 +738,71 @@ where
         level = ctx.stage_shuffled(tasks, &group_bytes);
     }
     level.into_iter().next()
+}
+
+/// The dependency-DAG body of [`tree_aggregate`]: the same tree the
+/// staged loop builds level by level, submitted to
+/// [`Context::stage_dag`] in one piece. First-level nodes own their
+/// item group outright (the items are "on the executors" already, so
+/// those merges have no DAG dependencies — their shuffle bytes are the
+/// non-leading group members, exactly as the staged loop charges);
+/// deeper nodes consume their child nodes' values and report the
+/// non-leading input sizes as received bytes at run time.
+fn tree_aggregate_dag<T, M, S>(
+    ctx: &Context,
+    items: Vec<T>,
+    merge: &M,
+    size_of: &S,
+    fan: usize,
+) -> Option<T>
+where
+    T: Send,
+    M: Fn(T, T) -> T + Sync,
+    S: Fn(&T) -> usize + Sync,
+{
+    let mut nodes: Vec<DagTask<'_, T>> = Vec::new();
+    let mut top: Vec<usize> = Vec::new();
+    for g in chunk_owned(items, fan) {
+        let b: usize = g[1..].iter().map(size_of).sum();
+        nodes.push(DagTask {
+            run: Box::new(move |_inputs| {
+                let mut it = g.into_iter();
+                let mut acc = it.next().expect("chunk_owned never yields empty groups");
+                for x in it {
+                    acc = merge(acc, x);
+                }
+                (acc, b)
+            }),
+            deps: Vec::new(),
+            level: 0,
+        });
+        top.push(nodes.len() - 1);
+    }
+    let mut level = 1usize;
+    while top.len() > 1 {
+        let mut next = Vec::new();
+        for group in top.chunks(fan) {
+            let deps = group.to_vec();
+            nodes.push(DagTask {
+                run: Box::new(move |inputs: Vec<T>| {
+                    let b: usize = inputs[1..].iter().map(size_of).sum();
+                    let mut it = inputs.into_iter();
+                    let mut acc = it.next().expect("merge groups are non-empty");
+                    for x in it {
+                        acc = merge(acc, x);
+                    }
+                    (acc, b)
+                }),
+                deps,
+                level,
+            });
+            next.push(nodes.len() - 1);
+        }
+        top = next;
+        level += 1;
+    }
+    let root = top[0];
+    ctx.stage_dag(nodes).swap_remove(root)
 }
 
 #[cfg(test)]
@@ -644,8 +863,10 @@ mod tests {
 
     #[test]
     fn stage_shuffled_prices_the_bytes() {
+        // pinned to the barrier executor: transfers charged as occupancy
         let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
-        let ctx = Context::new(1).with_workers(1).with_comms(model);
+        let ctx =
+            Context::new(1).with_workers(1).with_comms(model).with_sched(SchedMode::Barrier);
         let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
             (0..4).map(|i| Box::new(move || i) as Box<dyn FnOnce() -> usize + Send>).collect();
         let out = ctx.stage_shuffled(tasks, &[1, 2, 3, 4]);
@@ -655,6 +876,32 @@ mod tests {
         // 1 executor: the 10 "seconds" of byte latency all serialize
         assert!(m.wall_clock >= 10.0, "wall {}", m.wall_clock);
         assert!((m.comms_time - 10.0).abs() < 1e-9, "comms {}", m.comms_time);
+        assert_eq!(m.overlap_saved, 0.0, "barrier mode hides nothing");
+    }
+
+    #[test]
+    fn pipelined_stage_overlaps_the_bytes() {
+        // same stage as `stage_shuffled_prices_the_bytes`, pipelined:
+        // the four transfers stream concurrently (release times 1..4 s)
+        // while the lone executor only drains the micro-compute, so the
+        // wall clock rides the longest transfer instead of the sum
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
+        let ctx =
+            Context::new(1).with_workers(1).with_comms(model).with_sched(SchedMode::Pipelined);
+        assert!(ctx.pipelined());
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4).map(|i| Box::new(move || i) as Box<dyn FnOnce() -> usize + Send>).collect();
+        let out = ctx.stage_shuffled(tasks, &[1, 2, 3, 4]);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        let m = ctx.metrics();
+        assert_eq!(m.shuffle_bytes, 10, "shuffle charges are schedule-independent");
+        assert!((m.comms_time - 10.0).abs() < 1e-9, "comms charges are schedule-independent");
+        assert!(m.wall_clock < 10.0, "transfers must overlap: wall {}", m.wall_clock);
+        assert!(m.wall_clock >= 4.0, "the longest transfer still gates: {}", m.wall_clock);
+        assert!(m.overlap_saved > 0.0);
+        // wall + overlap_saved reconstructs the barrier schedule
+        assert!(m.wall_clock + m.overlap_saved >= 10.0);
+        assert!(m.cpu_time + m.comms_time >= m.wall_clock, "busy-time invariant");
     }
 
     #[test]
@@ -711,6 +958,55 @@ mod tests {
             shallow < deep,
             "fan-8 should beat fan-2 under task overhead: {shallow} vs {deep}"
         );
+    }
+
+    /// The DAG path and the staged path of `tree_aggregate` are the
+    /// same computation: identical result (a non-commutative merge
+    /// proves the fold order), identical stage/task/shuffle counters,
+    /// and a pipelined wall clock never above the barrier one.
+    #[test]
+    fn tree_aggregate_dag_matches_staged_loop() {
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 1e-3 };
+        let run = |sched: SchedMode| {
+            let ctx = Context::new(4).with_fan_in(3).with_comms(model).with_sched(sched);
+            let items: Vec<String> = (0..40).map(|i| format!("{i:x}")).collect();
+            let got = tree_aggregate(&ctx, items, |a, b| format!("{a}{b}"), |s| s.len()).unwrap();
+            (got, ctx.take_metrics())
+        };
+        let (r_b, m_b) = run(SchedMode::Barrier);
+        let (r_p, m_p) = run(SchedMode::Pipelined);
+        assert_eq!(r_b, r_p, "fold order is schedule-independent");
+        assert_eq!(m_b.stages, m_p.stages, "one stage per tree level in both modes");
+        assert_eq!(m_b.tasks, m_p.tasks);
+        assert_eq!(m_b.shuffle_bytes, m_p.shuffle_bytes);
+        assert!((m_b.comms_time - m_p.comms_time).abs() < 1e-9);
+        // modeled seconds dwarf the measured micro-compute here, so the
+        // cross-run comparison is safe
+        assert!(
+            m_p.wall_clock < m_b.wall_clock,
+            "pipelined {} vs barrier {}",
+            m_p.wall_clock,
+            m_b.wall_clock
+        );
+        assert!(m_p.overlap_saved > 0.0);
+        assert_eq!(m_b.overlap_saved, 0.0);
+    }
+
+    /// The DAG path keeps determinism across worker counts — same
+    /// non-commutative merge, real eager dispatch.
+    #[test]
+    fn tree_aggregate_dag_is_deterministic_across_workers() {
+        for workers in [1usize, 2, 4] {
+            let ctx = Context::new(8)
+                .with_fan_in(2)
+                .with_workers(workers)
+                .with_sched(SchedMode::Pipelined);
+            assert!(ctx.dag_enabled());
+            let items: Vec<String> = (0..23).map(|i| format!("<{i}>")).collect();
+            let got = tree_aggregate(&ctx, items, |a, b| format!("{a}{b}"), |s| s.len()).unwrap();
+            let want: String = (0..23).map(|i| format!("<{i}>")).collect();
+            assert_eq!(got, want, "workers={workers}");
+        }
     }
 
     // --- fault-tolerant stage machinery -----------------------------

@@ -28,6 +28,16 @@
 //! closures are pure functions of their partition inputs, so a retried
 //! or speculatively re-executed task reproduces its value bit-for-bit,
 //! and any recovered run is **bit-identical** to a fault-free run.
+//!
+//! **Interplay with the pipelined scheduler** (`DSVD_SCHED`, see
+//! [`super::SchedMode`]): fault coordinates are `(stage, task,
+//! attempt)` indices into the staged execution order, so whenever a
+//! context carries a live plan ([`FaultPlan::is_inert`] = false) the
+//! eager DAG fast paths stand down and execution falls back to the
+//! staged loops — injected faults keep hitting exactly the task they
+//! name, and retry, speculation, and health guards behave identically
+//! under either scheduler mode. Recovery therefore stays bit-identical
+//! in pipelined mode too (pinned by `tests/sched_equivalence.rs`).
 
 use std::fmt;
 

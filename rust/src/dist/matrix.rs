@@ -1008,6 +1008,18 @@ impl Block {
         }
     }
 
+    /// Advisory double-buffering hint for the pipelined scheduler's
+    /// product sweeps: a spilled cell queues its page-in on the store's
+    /// background worker so the read overlaps the current cell's
+    /// kernel; every other storage is already resident and the hint is
+    /// free. Never blocks, never evicts, never busts the cache budget —
+    /// see [`SpilledBlock::prefetch`].
+    pub(crate) fn prefetch_hint(&self) {
+        if let Block::Spilled(s) = self {
+            s.prefetch();
+        }
+    }
+
     /// Acquire this cell's [`CellView`] — the one storage access a
     /// consuming task performs, shared by every product that task
     /// computes. Only spilled cells can fail.
@@ -1348,6 +1360,13 @@ impl DistBlockMatrix {
         });
         let out = f();
         if let (Some(s), Some(b)) = (&store, before) {
+            // quiesce the prefetch worker before snapshotting: a hint
+            // issued by a task that then failed could otherwise land
+            // after the bracket closes and leak its `bytes_read` into
+            // the NEXT product's delta (the success path consumes every
+            // hint with the same task's next fetch, so this never waits
+            // there)
+            s.drain_prefetches();
             let a = s.stats();
             ctx.add_spill(
                 a.bytes_read - b.bytes_read,
@@ -1449,6 +1468,7 @@ impl DistBlockMatrix {
         self.with_spill_ledger(ctx, || {
             let rb = &self.row_bounds;
             let cb = &self.col_bounds;
+            let pf = ctx.pipelined();
             ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
             type Out = Result<RowPartition, SpillError>;
             let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
@@ -1461,6 +1481,13 @@ impl DistBlockMatrix {
                     Box::new(move || {
                         let mut data = Matrix::zeros(r1 - r0, self.cols);
                         for (bj, b) in row_blocks.iter().enumerate() {
+                            // double buffering: page the next cell in
+                            // behind this cell's copy-out
+                            if pf {
+                                if let Some(next) = row_blocks.get(bj + 1) {
+                                    next.prefetch_hint();
+                                }
+                            }
                             let d = b.try_to_dense()?;
                             for i in 0..d.rows() {
                                 data.row_mut(i)[cb[bj]..cb[bj + 1]].copy_from_slice(d.row(i));
@@ -1703,6 +1730,7 @@ impl DistBlockMatrix {
         self.with_spill_ledger(ctx, || {
             let cb = &self.col_bounds;
             let rb = &self.row_bounds;
+            let pf = ctx.pipelined();
             ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
             type Out = Result<(usize, Vec<f64>), SpillError>;
             let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
@@ -1715,6 +1743,13 @@ impl DistBlockMatrix {
                     Box::new(move || {
                         let mut y = vec![0.0f64; r1 - r0];
                         for (bj, b) in row_blocks.iter().enumerate() {
+                            // double buffering: page the next cell in
+                            // behind this cell's gemv
+                            if pf {
+                                if let Some(next) = row_blocks.get(bj + 1) {
+                                    next.prefetch_hint();
+                                }
+                            }
                             let part = b.try_gemv(&x[cb[bj]..cb[bj + 1]])?;
                             for (yi, pi) in y.iter_mut().zip(&part) {
                                 *yi += pi;
@@ -1747,6 +1782,7 @@ impl DistBlockMatrix {
             let n = self.cols;
             let cb = &self.col_bounds;
             let rb = &self.row_bounds;
+            let pf = ctx.pipelined();
             ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
             type Out = Result<Vec<f64>, SpillError>;
             let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
@@ -1759,6 +1795,13 @@ impl DistBlockMatrix {
                     Box::new(move || {
                         let mut z = vec![0.0f64; n];
                         for (bj, b) in row_blocks.iter().enumerate() {
+                            // double buffering: page the next cell in
+                            // behind this cell's transpose gemv
+                            if pf {
+                                if let Some(next) = row_blocks.get(bj + 1) {
+                                    next.prefetch_hint();
+                                }
+                            }
                             let part = b.try_gemv_t(&y[r0..r1])?;
                             for (zi, pi) in z[cb[bj]..cb[bj + 1]].iter_mut().zip(&part) {
                                 *zi += pi;
@@ -1825,6 +1868,7 @@ impl DistBlockMatrix {
             let rb = &self.row_bounds;
             let nbc = cb.len() - 1;
             let nbr = rb.len() - 1;
+            let pf = ctx.pipelined();
             ctx.add_pass(nbr * nbc);
 
             type FusedOut = Result<(RowPartition, Vec<Matrix>), SpillError>;
@@ -1847,10 +1891,20 @@ impl DistBlockMatrix {
                         // Y panel, so sweep the row's views twice — each
                         // stored cell is accessed ONCE (implicit cells
                         // run their generator once, spilled cells page
-                        // in once) and the view is reused
+                        // in once) and the view is reused; under the
+                        // pipelined scheduler the next cell pages in
+                        // behind the current cell's acquisition
                         let views: Vec<CellView> = row_blocks
                             .iter()
-                            .map(|b| b.try_view())
+                            .enumerate()
+                            .map(|(bj, b)| {
+                                if pf {
+                                    if let Some(next) = row_blocks.get(bj + 1) {
+                                        next.prefetch_hint();
+                                    }
+                                }
+                                b.try_view()
+                            })
                             .collect::<Result<_, SpillError>>()?;
                         let mut acc = Matrix::zeros(r1 - r0, l);
                         for (bj, v) in views.iter().enumerate() {
@@ -1946,6 +2000,7 @@ impl DistBlockMatrix {
             let n = self.cols;
             let cb = &self.col_bounds;
             let rb = &self.row_bounds;
+            let pf = ctx.pipelined();
             ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
             type FusedVecOut = Result<(usize, Vec<f64>, Vec<f64>), SpillError>;
             let tasks: Vec<Box<dyn FnOnce() -> FusedVecOut + Send + '_>> = self
@@ -1956,9 +2011,20 @@ impl DistBlockMatrix {
                     let r0 = rb[bi];
                     let r1 = rb[bi + 1];
                     Box::new(move || {
+                        // pipelined: the next cell pages in behind the
+                        // current cell's acquisition (see
+                        // `try_fused_power_step`'s wide path)
                         let views: Vec<CellView> = row_blocks
                             .iter()
-                            .map(|b| b.try_view())
+                            .enumerate()
+                            .map(|(bj, b)| {
+                                if pf {
+                                    if let Some(next) = row_blocks.get(bj + 1) {
+                                        next.prefetch_hint();
+                                    }
+                                }
+                                b.try_view()
+                            })
                             .collect::<Result<_, SpillError>>()?;
                         let mut y = vec![0.0f64; r1 - r0];
                         for (bj, v) in views.iter().enumerate() {
@@ -2040,6 +2106,7 @@ impl DistBlockMatrix {
         self.with_spill_ledger(ctx, || {
             let cb = &self.col_bounds;
             let rb = &self.row_bounds;
+            let pf = ctx.pipelined();
             ctx.add_pass((rb.len() - 1) * (cb.len() - 1));
             type Out = Result<Vec<RowPartition>, SpillError>;
             let tasks: Vec<Box<dyn FnOnce() -> Out + Send + '_>> = self
@@ -2053,6 +2120,13 @@ impl DistBlockMatrix {
                         let mut accs: Vec<Matrix> =
                             ws.iter().map(|w| Matrix::zeros(r1 - r0, w.cols())).collect();
                         for (bj, b) in row_blocks.iter().enumerate() {
+                            // double buffering: page the next cell in
+                            // behind this cell's batched products
+                            if pf {
+                                if let Some(next) = row_blocks.get(bj + 1) {
+                                    next.prefetch_hint();
+                                }
+                            }
                             // one access to the stored block serves
                             // every sketch in the batch
                             let view = b.try_view()?;

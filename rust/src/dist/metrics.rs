@@ -24,12 +24,22 @@
 //! driver observed (stages + serialized driver sections) — the number
 //! that shrinks when `DSVD_WORKERS` grows on a multi-core machine.
 //!
-//! Invariant: with the free comms model (the default),
-//! `cpu_time >= wall_clock` always — a makespan over E ≥ 1 executors
-//! can never exceed the serial sum, and driver work adds to both sides
-//! equally. With a nonzero comms model the guaranteed invariant becomes
-//! `cpu_time + comms_time >= wall_clock`: the simulated schedule can
-//! never beat the serial sum of compute *plus* communication charges.
+//! Invariants, stated per-worker: every second of `wall_clock` is
+//! covered by some executor's busy time (compute occupancy) or by a
+//! modeled transfer on the critical path, so with the free comms model
+//! (the tier-1 default) `cpu_time >= wall_clock` always — a makespan
+//! over E ≥ 1 executors can never exceed the serial sum, and driver
+//! work adds to both sides equally. With a nonzero comms model the
+//! guaranteed invariant is `cpu_time + comms_time >= wall_clock`: the
+//! barrier schedule charges every transfer as executor occupancy, so
+//! its makespan never beats the serial sum of compute plus
+//! communication — and the pipelined schedule (`DSVD_SCHED=pipelined`,
+//! the default) is clamped to `min(pipelined, barrier)` per stage, so
+//! the bound survives overlap. The seconds overlap shaved off the
+//! barrier schedule accumulate in `overlap_saved`; `comms_time` itself
+//! is schedule-independent (it counts charged transfer seconds, hidden
+//! or not), so between the two modes only `wall_clock` and
+//! `overlap_saved` move.
 
 /// Communication cost model for the simulated cluster: what one task
 /// pays, on top of its measured compute time, for the bytes it receives
@@ -98,7 +108,16 @@ pub struct Metrics {
     pub driver_elapsed: f64,
     /// Total modeled communication seconds charged (per-task overhead +
     /// per-byte latency, summed over tasks and driver gathers).
+    /// Schedule-independent: hidden transfers still count here.
     pub comms_time: f64,
+    /// Simulated seconds the pipelined scheduler shaved off the barrier
+    /// schedule — per stage, `barrier_makespan - charged_makespan`,
+    /// accumulated. Zero in `DSVD_SCHED=barrier` mode and under the
+    /// free comms model on flat stages; positive whenever transfers (or
+    /// eager cross-level dispatch in a reduction DAG) were hidden
+    /// behind compute. `wall_clock + overlap_saved` reconstructs the
+    /// barrier wall clock of the same measured run.
+    pub overlap_saved: f64,
     /// Number of stages executed.
     pub stages: usize,
     /// Number of partition tasks executed.
@@ -205,6 +224,77 @@ impl Metrics {
             self.comms_time += effective.iter().sum::<f64>() - durations.iter().sum::<f64>();
             self.wall_clock += simulate_makespan(&effective, executors);
         }
+    }
+
+    /// Fold one completed stage into the totals under the **pipelined**
+    /// scheduler: counters and `comms_time` exactly as
+    /// [`Metrics::record_stage`] (the charges are schedule-independent),
+    /// but `wall_clock` is charged the overlap schedule — each task's
+    /// shuffle bytes become a release time instead of executor
+    /// occupancy — clamped to the barrier makespan
+    /// (`min(pipelined, barrier)`, see `dist/sched.rs`), with the
+    /// difference accumulated into `overlap_saved`.
+    pub(crate) fn record_stage_pipelined(
+        &mut self,
+        durations: &[f64],
+        bytes: &[usize],
+        executors: usize,
+        model: &CommsModel,
+        real_elapsed: f64,
+    ) {
+        if model.is_free() {
+            // nothing to overlap: the pipelined and barrier schedules
+            // of a flat stage coincide
+            self.record_stage(durations, bytes, executors, model, real_elapsed);
+            return;
+        }
+        debug_assert!(bytes.is_empty() || bytes.len() == durations.len());
+        self.stages += 1;
+        self.tasks += durations.len();
+        self.cpu_time += durations.iter().sum::<f64>();
+        self.driver_elapsed += real_elapsed;
+        self.shuffle_bytes += bytes.iter().sum::<usize>();
+        let effective: Vec<f64> = durations
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| d + model.task_cost(bytes.get(i).copied().unwrap_or(0)))
+            .collect();
+        self.comms_time += effective.iter().sum::<f64>() - durations.iter().sum::<f64>();
+        let barrier = simulate_makespan(&effective, executors);
+        let pipe = super::sched::pipelined_makespan(durations, bytes, executors, model);
+        let chosen = pipe.min(barrier);
+        self.wall_clock += chosen;
+        self.overlap_saved += barrier - chosen;
+    }
+
+    /// Fold one super-stage dependency DAG (a whole reduction tree
+    /// dispatched eagerly — see `Context::stage_dag`) into the totals.
+    /// Counter parity with the staged loop it replaces: each logical
+    /// tree level counts as one stage, every node as one task, and
+    /// `comms_time`/`shuffle_bytes` charge each node's received bytes
+    /// exactly as the per-level barrier stages would. `wall_clock` is
+    /// charged `min(dag, barrier-shadow)` and the saving lands in
+    /// `overlap_saved`.
+    pub(crate) fn record_dag_stage(
+        &mut self,
+        durations: &[f64],
+        meta: &[super::sched::DagNodeMeta],
+        executors: usize,
+        model: &CommsModel,
+        real_elapsed: f64,
+    ) {
+        debug_assert_eq!(durations.len(), meta.len());
+        self.stages += meta.iter().map(|m| m.level + 1).max().unwrap_or(0);
+        self.tasks += durations.len();
+        self.cpu_time += durations.iter().sum::<f64>();
+        self.driver_elapsed += real_elapsed;
+        self.shuffle_bytes += meta.iter().map(|m| m.bytes).sum::<usize>();
+        self.comms_time += meta.iter().map(|m| model.task_cost(m.bytes)).sum::<f64>();
+        let barrier = super::sched::dag_barrier_makespan(durations, meta, executors, model);
+        let dag = super::sched::dag_makespan(durations, meta, executors, model);
+        let chosen = dag.min(barrier);
+        self.wall_clock += chosen;
+        self.overlap_saved += barrier - chosen;
     }
 
     /// Fold one fault-tolerant stage into the totals. `compute[i]` is
@@ -490,6 +580,59 @@ mod tests {
         // the adaptive ledger is bookkeeping, not time or passes
         assert_eq!(m.cpu_time, 0.0);
         assert_eq!(m.a_passes, 0);
+    }
+
+    #[test]
+    fn pipelined_stage_charges_min_and_accumulates_overlap() {
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
+        let mut b = Metrics::default();
+        b.record_stage(&[0.1, 0.1], &[2, 2], 1, &model, 0.0);
+        let mut p = Metrics::default();
+        p.record_stage_pipelined(&[0.1, 0.1], &[2, 2], 1, &model, 0.0);
+        // every charge except the wall clock is schedule-independent
+        assert_eq!(b.comms_time, p.comms_time);
+        assert_eq!(b.shuffle_bytes, p.shuffle_bytes);
+        assert_eq!(b.cpu_time, p.cpu_time);
+        assert_eq!((b.stages, b.tasks), (p.stages, p.tasks));
+        // barrier: (0.1+2)+(0.1+2); pipelined: both transfers stream
+        // from t=0, the lone executor drains 2×0.1 after they land
+        assert!((b.wall_clock - 4.2).abs() < 1e-12, "barrier {}", b.wall_clock);
+        assert!(p.wall_clock < b.wall_clock);
+        assert!((p.wall_clock + p.overlap_saved - b.wall_clock).abs() < 1e-12);
+        assert_eq!(b.overlap_saved, 0.0);
+        // the per-worker busy-time invariant survives overlap
+        assert!(p.cpu_time + p.comms_time >= p.wall_clock - 1e-12);
+    }
+
+    #[test]
+    fn pipelined_stage_free_model_matches_barrier_exactly() {
+        let mut b = Metrics::default();
+        b.record_stage(&[1.0, 2.0, 0.5], &[], 2, &FREE_COMMS, 0.1);
+        let mut p = Metrics::default();
+        p.record_stage_pipelined(&[1.0, 2.0, 0.5], &[], 2, &FREE_COMMS, 0.1);
+        assert_eq!(b, p);
+    }
+
+    #[test]
+    fn dag_stage_counts_levels_as_stages_and_keeps_the_invariant() {
+        use super::super::sched::DagNodeMeta;
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
+        let meta = vec![
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![0, 1], bytes: 4, level: 1 },
+        ];
+        let mut m = Metrics::default();
+        m.record_dag_stage(&[0.1, 0.1, 0.1], &meta, 2, &model, 0.0);
+        // the super-stage counts one stage per tree level
+        assert_eq!(m.stages, 2);
+        assert_eq!(m.tasks, 3);
+        assert_eq!(m.shuffle_bytes, 4);
+        assert!((m.comms_time - 4.0).abs() < 1e-12);
+        // barrier shadow: 0.1 (leaf level) + (0.1 + 4.0) (merge level)
+        assert!(m.wall_clock <= 4.2 + 1e-12, "wall {}", m.wall_clock);
+        assert!(m.overlap_saved >= 0.0);
+        assert!(m.cpu_time + m.comms_time >= m.wall_clock - 1e-12);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! | [`tree_aggregate`] | `treeAggregate` | fan-in-wide parallel merges |
 //! | [`tsqr`] / [`tsqr_r`] | modified `computeSVD` QR | reduction-tree TSQR |
 //! | [`Metrics`] / [`CommsModel`] | Spark UI stage metrics | CPU/wall/shuffle accounting + priced communication |
+//! | [`SchedMode`] | the DAG scheduler vs stage barriers | pipelined comms/compute overlap (`DSVD_SCHED`), barrier ablation baseline |
 //! | [`FaultPlan`] / [`RetryPolicy`] / [`HealthCheck`] | task failures, speculative execution, the silent-wrong-answer SVD | seeded deterministic fault injection, `catch_unwind` retry with simulated backoff, stage-boundary factor-health guards |
 //!
 //! Determinism is a hard guarantee: stage results return in task order
@@ -33,6 +34,7 @@ pub mod matrix;
 pub mod metrics;
 pub mod op;
 pub mod row_csr;
+pub mod sched;
 pub mod spill;
 pub mod tsqr;
 
@@ -50,6 +52,7 @@ pub use matrix::{
 pub use metrics::{simulate_makespan, CommsModel, Metrics, FREE_COMMS};
 pub use op::{DistOp, UnfusedOp};
 pub use row_csr::{CsrRowPartition, DistRowCsrMatrix};
+pub use sched::{pipelined_makespan, SchedMode};
 pub use spill::{
     parse_budget, EvictPolicy, SpillError, SpillPayload, SpillStats, SpillStore, SpilledBlock,
 };

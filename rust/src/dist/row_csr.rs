@@ -19,7 +19,15 @@
 //!   one-sweep [`Csr::matmul_and_tn`] kernel.
 //! * **TSQR** enters through [`super::tsqr::tsqr_r_csr`], which
 //!   densifies each slab transiently inside its leaf task and reuses
-//!   the shared dense R merge tree.
+//!   the shared dense R merge tree — under the pipelined scheduler
+//!   (`DSVD_SCHED`, see [`super::SchedMode`]) leaves and merge levels
+//!   run as one dependency DAG, so a parent merge starts the moment its
+//!   children's R's land instead of waiting for the slowest leaf.
+//!
+//! This layout needs no sweep-level prefetch hooks of its own: its
+//! slabs are always resident (CSR never spills), and its reductions
+//! ride [`super::tree_aggregate`], which the pipelined scheduler
+//! already turns into an eagerly-dispatched merge DAG.
 //!
 //! Unlike [`DistRowMatrix`] — whose slabs hold *derived* data
 //! (sketches, factors) and therefore never charge the pass ledger —

@@ -1,0 +1,282 @@
+//! `sched` — the scheduling mode of the simulated cluster and the
+//! makespan simulators behind the `wall_clock` column.
+//!
+//! Two executors are selectable via `DSVD_SCHED`:
+//!
+//! * **`barrier`** — the classic Spark stage barrier: every task of a
+//!   stage is charged its compute duration *plus* its full
+//!   communication cost ([`CommsModel::task_cost`]) as one opaque
+//!   occupancy, and the next stage starts only when the slowest
+//!   executor drains. This is the PR 1–8 behaviour, kept as the
+//!   deterministic ablation baseline.
+//! * **`pipelined`** (default) — a dependency-DAG list scheduler:
+//!   modeled shuffle transfers stream over the (simulated) network
+//!   *while* other tasks compute, so a task occupies its executor only
+//!   for `duration + task_overhead` and its shuffle bytes become a
+//!   *release time* (`byte_latency × bytes` after its inputs land)
+//!   instead of executor occupancy. Tree reductions additionally run as
+//!   real dependency DAGs: a parent merge dispatches the moment its
+//!   children land, not when the whole level drains (see
+//!   `Context::stage_dag`).
+//!
+//! Numerics are identical in both modes: scheduling changes *when*
+//! tasks run, never the order results are folded in (reductions fold
+//! groups by index, stages return results in task order). Only
+//! `wall_clock` and `overlap_saved` move between modes; `cpu_time`,
+//! `comms_time`, `shuffle_bytes`, and the stage/task counters are
+//! byte-for-byte the same.
+//!
+//! Both simulators are *monotone-guarded*: greedy list scheduling with
+//! release times is subject to scheduling anomalies (adding overlap can
+//! in rare cases lengthen a greedy schedule), so the metrics layer
+//! charges `min(pipelined, barrier)` — a pipelined scheduler may always
+//! fall back to inserting barriers, making the barrier schedule a legal
+//! pipelined schedule and the bound sound.
+
+use super::metrics::{simulate_makespan, CommsModel};
+
+/// Which executor the [`Context`](super::Context) charges simulated
+/// wall-clock with — see the module docs. Selected by `DSVD_SCHED`
+/// (`barrier` | `pipelined`), pipelined by default.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Stage barrier: comms charged as executor occupancy, stages
+    /// drain fully before the next starts (the ablation baseline).
+    Barrier,
+    /// Comms/compute overlap: transfers are release times, tree
+    /// reductions dispatch eagerly along the dependency DAG.
+    #[default]
+    Pipelined,
+}
+
+impl SchedMode {
+    /// Parse an optional `DSVD_SCHED` value. `None`, empty, or
+    /// unrecognized values fall back to the pipelined default, so a
+    /// stale or misspelled variable can never silently change numerics
+    /// (it cannot — numerics are mode-independent — but it also never
+    /// aborts a run).
+    pub fn parse(raw: Option<&str>) -> SchedMode {
+        match raw.map(str::trim) {
+            Some(s) if s.eq_ignore_ascii_case("barrier") => SchedMode::Barrier,
+            Some(s) if s.eq_ignore_ascii_case("pipelined") => SchedMode::Pipelined,
+            _ => SchedMode::Pipelined,
+        }
+    }
+
+    /// Mode from the `DSVD_SCHED` environment variable.
+    pub fn from_env() -> SchedMode {
+        Self::parse(std::env::var("DSVD_SCHED").ok().as_deref())
+    }
+}
+
+/// Scheduling metadata for one node of a super-stage dependency DAG
+/// (a whole reduction tree executed as one dispatch): which earlier
+/// nodes it consumes, how many shuffled bytes it receives, and which
+/// logical tree level it belongs to (for stage accounting and the
+/// barrier shadow schedule).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct DagNodeMeta {
+    /// Indices of the nodes this node consumes (all strictly smaller
+    /// than the node's own index — the DAG is submitted in topological
+    /// order).
+    pub deps: Vec<usize>,
+    /// Shuffled bytes this node receives (from its non-leading
+    /// children, or from the executors holding its source items).
+    pub bytes: usize,
+    /// Logical tree level (leaves / first merges at 0). Each level
+    /// counts as one stage, and the barrier shadow schedule drains
+    /// levels one at a time.
+    pub level: usize,
+}
+
+/// Pipelined makespan of one flat stage: each task's shuffle bytes are
+/// a release time (`byte_latency × bytes` — the transfer streams while
+/// other executors compute) and the task occupies the least-loaded
+/// executor for `duration + task_overhead` once released. Greedy
+/// placement in submission order, like [`simulate_makespan`].
+pub fn pipelined_makespan(
+    durations: &[f64],
+    bytes: &[usize],
+    executors: usize,
+    model: &CommsModel,
+) -> f64 {
+    if durations.is_empty() {
+        return 0.0;
+    }
+    let mut avail = vec![0.0f64; executors.max(1).min(durations.len())];
+    let mut makespan = 0.0f64;
+    for (i, &d) in durations.iter().enumerate() {
+        let ready = model.byte_latency * bytes.get(i).copied().unwrap_or(0) as f64;
+        let ei = least_loaded(&avail);
+        let finish = avail[ei].max(ready) + d + model.task_overhead;
+        avail[ei] = finish;
+        makespan = makespan.max(finish);
+    }
+    makespan
+}
+
+/// Pipelined makespan of a super-stage DAG: node `i` becomes ready
+/// `byte_latency × bytes[i]` after the last of its dependencies
+/// finishes (its inputs stream in over the network), then occupies the
+/// least-loaded executor for `duration + task_overhead`. Nodes are
+/// placed greedily in submission (= topological) order.
+pub(crate) fn dag_makespan(
+    durations: &[f64],
+    meta: &[DagNodeMeta],
+    executors: usize,
+    model: &CommsModel,
+) -> f64 {
+    debug_assert_eq!(durations.len(), meta.len());
+    if durations.is_empty() {
+        return 0.0;
+    }
+    let mut avail = vec![0.0f64; executors.max(1).min(durations.len())];
+    let mut finish = vec![0.0f64; durations.len()];
+    let mut makespan = 0.0f64;
+    for (i, &d) in durations.iter().enumerate() {
+        let landed = meta[i].deps.iter().map(|&p| finish[p]).fold(0.0f64, f64::max);
+        let ready = landed + model.byte_latency * meta[i].bytes as f64;
+        let ei = least_loaded(&avail);
+        finish[i] = avail[ei].max(ready) + d + model.task_overhead;
+        avail[ei] = finish[i];
+        makespan = makespan.max(finish[i]);
+    }
+    makespan
+}
+
+/// The barrier shadow of a super-stage DAG: what the same nodes would
+/// cost under `DSVD_SCHED=barrier` — every level drains fully before
+/// the next starts, and each node is charged compute plus its full
+/// [`CommsModel::task_cost`] as executor occupancy. This is the bound
+/// `wall_clock` never exceeds in pipelined mode, and the baseline
+/// `overlap_saved` is measured against.
+pub(crate) fn dag_barrier_makespan(
+    durations: &[f64],
+    meta: &[DagNodeMeta],
+    executors: usize,
+    model: &CommsModel,
+) -> f64 {
+    debug_assert_eq!(durations.len(), meta.len());
+    let levels = meta.iter().map(|m| m.level + 1).max().unwrap_or(0);
+    (0..levels)
+        .map(|l| {
+            let effective: Vec<f64> = meta
+                .iter()
+                .zip(durations)
+                .filter(|(m, _)| m.level == l)
+                .map(|(m, &d)| d + model.task_cost(m.bytes))
+                .collect();
+            simulate_makespan(&effective, executors)
+        })
+        .sum()
+}
+
+fn least_loaded(avail: &[f64]) -> usize {
+    let mut idx = 0;
+    let mut best = f64::INFINITY;
+    for (i, &v) in avail.iter().enumerate() {
+        if v < best {
+            best = v;
+            idx = i;
+        }
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::metrics::FREE_COMMS;
+    use super::*;
+
+    #[test]
+    fn parse_is_hermetic_and_defaults_pipelined() {
+        assert_eq!(SchedMode::parse(None), SchedMode::Pipelined);
+        assert_eq!(SchedMode::parse(Some("")), SchedMode::Pipelined);
+        assert_eq!(SchedMode::parse(Some("barrier")), SchedMode::Barrier);
+        assert_eq!(SchedMode::parse(Some("BARRIER")), SchedMode::Barrier);
+        assert_eq!(SchedMode::parse(Some(" pipelined ")), SchedMode::Pipelined);
+        assert_eq!(SchedMode::parse(Some("nonsense")), SchedMode::Pipelined);
+        assert_eq!(SchedMode::default(), SchedMode::Pipelined);
+    }
+
+    #[test]
+    fn pipelined_stage_hides_transfers_behind_compute() {
+        // 1 executor, byte-heavy tasks: the barrier schedule serializes
+        // compute + transfer per task; the pipelined schedule starts
+        // every transfer at t=0 and only the compute occupies the
+        // executor.
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
+        let d = [0.1, 0.1, 0.1];
+        let b = [1, 2, 3];
+        let pipe = pipelined_makespan(&d, &b, 1, &model);
+        let effective: Vec<f64> =
+            d.iter().zip(&b).map(|(&x, &by)| x + model.task_cost(by)).collect();
+        let barrier = simulate_makespan(&effective, 1);
+        // barrier: (0.1+1)+(0.1+2)+(0.1+3) = 6.3; pipelined: transfers
+        // released at 1/2/3, executor drains 0.1 each → 3.1 ceiling
+        assert!((barrier - 6.3).abs() < 1e-12, "barrier {barrier}");
+        assert!(pipe < barrier, "pipe {pipe} barrier {barrier}");
+        assert!(pipe >= 3.0, "the longest transfer still gates: {pipe}");
+    }
+
+    #[test]
+    fn pipelined_stage_with_free_model_matches_barrier() {
+        let d = [1.0, 2.0, 0.5, 0.25];
+        for e in 1..6 {
+            let pipe = pipelined_makespan(&d, &[0; 4], e, &FREE_COMMS);
+            assert!((pipe - simulate_makespan(&d, e)).abs() < 1e-12, "e={e}");
+        }
+    }
+
+    #[test]
+    fn dag_parent_starts_when_children_land_not_when_level_drains() {
+        // 4 leaves on 4 executors, one slow; two first-level merges;
+        // one root. Pipelined: the fast pair's merge overlaps the slow
+        // leaf. Barrier: every level waits for the slow leaf.
+        let model = CommsModel { byte_latency: 0.0, task_overhead: 0.0 };
+        let d = [0.1, 0.1, 0.1, 2.0, 0.5, 0.5, 0.1];
+        let meta = vec![
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![0, 1], bytes: 0, level: 1 },
+            DagNodeMeta { deps: vec![2, 3], bytes: 0, level: 1 },
+            DagNodeMeta { deps: vec![4, 5], bytes: 0, level: 2 },
+        ];
+        let dag = dag_makespan(&d, &meta, 4, &model);
+        let barrier = dag_barrier_makespan(&d, &meta, 4, &model);
+        // barrier: 2.0 + 0.5 + 0.1 = 2.6; dag: merge(0,1) runs during
+        // the slow leaf, root waits only for merge(2,3) → 2.0+0.5+0.1
+        // on the critical path through leaf 3, but merge(4) is already
+        // done → 2.6 vs ... the dag path is leaf3(2.0)+merge5(0.5)+root(0.1)=2.6
+        // with merge4 hidden — equal here; shrink leaf3 influence by
+        // checking a transfer-bound variant below instead.
+        assert!(dag <= barrier + 1e-12);
+
+        // now make the merges byte-bound: barrier charges transfers as
+        // occupancy, dag lets them stream while the slow leaf computes
+        let model = CommsModel { byte_latency: 1.0, task_overhead: 0.0 };
+        let mut meta2 = meta;
+        meta2[4].bytes = 1;
+        meta2[5].bytes = 1;
+        meta2[6].bytes = 1;
+        let dag = dag_makespan(&d, &meta2, 4, &model);
+        let barrier = dag_barrier_makespan(&d, &meta2, 4, &model);
+        assert!(dag < barrier, "dag {dag} barrier {barrier}");
+    }
+
+    #[test]
+    fn dag_respects_dependencies() {
+        // a chain: each node waits for the previous even with plenty of
+        // executors
+        let model = FREE_COMMS;
+        let d = [1.0, 1.0, 1.0];
+        let meta = vec![
+            DagNodeMeta { deps: vec![], bytes: 0, level: 0 },
+            DagNodeMeta { deps: vec![0], bytes: 0, level: 1 },
+            DagNodeMeta { deps: vec![1], bytes: 0, level: 2 },
+        ];
+        assert!((dag_makespan(&d, &meta, 8, &model) - 3.0).abs() < 1e-12);
+    }
+}

@@ -50,23 +50,45 @@
 //!   cleanup happens exactly when the spilled matrix and the store are
 //!   both gone, on the success and the error path alike.
 //!
+//! * **Async prefetch (double buffering).** Under the pipelined
+//!   scheduler, product sweeps call [`SpilledBlock::prefetch`] on the
+//!   *next* cell before running the current cell's kernel: a dedicated
+//!   background thread pages the payload in while the kernel computes,
+//!   so the page-in cost of cell `j+1` hides behind the compute of cell
+//!   `j`. Prefetch is strictly advisory and budget-respecting — a
+//!   prefetched-but-unconsumed page counts toward `resident_bytes` (and
+//!   therefore `peak_resident_bytes`) like any resident page, so a
+//!   prefetch that would push the resident-plus-in-flight set over the
+//!   budget is **skipped at issue time** (never queued), and one that
+//!   no longer fits when its read lands is discarded uncharged. A
+//!   prefetch never evicts: eviction authority stays with the demand
+//!   [`fetch`](SpilledBlock::fetch) path. A fetch of an in-flight block
+//!   waits for the landing and serves it as an ordinary hit, so
+//!   `bytes_read` charges each page-in exactly once whatever the
+//!   interleaving — `peak_resident_bytes ≤ budget` and the eviction
+//!   trajectories are prefetch-independent by construction.
+//!
 //! Ledger semantics: `bytes_read` counts payload bytes fetched from
 //! disk (cache hits are free), `bytes_written` counts payload bytes
 //! spilled, and `peak_resident_bytes` is the cache's lifetime
 //! high-water mark. The cache lock is held across file I/O so each miss
 //! reads its file exactly once, keeping the counters meaningful under
-//! concurrent tasks. Task-transient views (a fetched `Arc` held for one
-//! task's lifetime) share the cached allocation and are not counted
-//! twice; they are bounded by one block row per in-flight task.
+//! concurrent tasks (the prefetch worker reads without the lock, but
+//! only ids it has exclusively reserved in the in-flight set, so the
+//! exactly-once property survives). Task-transient views (a fetched
+//! `Arc` held for one task's lifetime) share the cached allocation and
+//! are not counted twice; they are bounded by one block row per
+//! in-flight task.
 
 use crate::linalg::matrix_f32::MatrixF32;
 use crate::linalg::{Matrix, Precision};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Magic number leading every f64 spill file (version 1 of the format).
 const SPILL_MAGIC: u64 = 0xD5BD_5B10_C0DE_0001;
@@ -128,6 +150,13 @@ pub struct SpillStats {
     pub resident_bytes: usize,
     /// Lifetime high-water mark of `resident_bytes`.
     pub peak_resident_bytes: usize,
+    /// Prefetches accepted into the in-flight queue (each lands as a
+    /// resident page or is discarded if it no longer fits).
+    pub prefetch_issued: usize,
+    /// Prefetches skipped at issue time because the resident-plus-
+    /// in-flight set would have exceeded the budget (the budget guard —
+    /// a skipped prefetch costs nothing and evicts nothing).
+    pub prefetch_skipped: usize,
 }
 
 /// Which cached payload the budgeted cache evicts first (see module
@@ -205,6 +234,108 @@ struct CacheInner {
     window_peak: usize,
     bytes_read: usize,
     bytes_written: usize,
+    /// Ids the prefetch worker has reserved: their reads are in flight
+    /// and their eventual bytes are counted in `inflight_bytes`. A
+    /// demand fetch of an in-flight id waits for the landing.
+    inflight: HashSet<u64>,
+    /// Payload bytes of every in-flight prefetch — reserved against the
+    /// budget so concurrent prefetches cannot collectively bust it.
+    inflight_bytes: usize,
+    prefetch_issued: usize,
+    prefetch_skipped: usize,
+}
+
+impl CacheInner {
+    /// Admit one validated payload into the cache and update the
+    /// recency bookkeeping for `policy` plus the residency ledger. The
+    /// caller has already made room (demand path) or verified the
+    /// payload fits (prefetch landing); this never evicts.
+    fn admit(&mut self, id: u64, payload: &SpillPayload, policy: EvictPolicy) {
+        self.resident.insert(id, payload.clone());
+        self.lru.push(id);
+        if policy == EvictPolicy::Clock {
+            // a fresh page earns its second chance only by being hit
+            // again — keeps one-shot scans evictable
+            self.ref_bits.insert(id, false);
+        }
+        self.resident_bytes += payload.bytes();
+        self.peak_resident_bytes = self.peak_resident_bytes.max(self.resident_bytes);
+        self.window_peak = self.window_peak.max(self.resident_bytes);
+    }
+}
+
+/// The lock-and-signal pair shared between a [`SpillStore`] and its
+/// prefetch worker thread. A separate `Arc` so the worker never holds
+/// the store itself — [`SpillStore`]'s drop (and with it the temp-dir
+/// cleanup) still fires the moment the last descriptor drops, joining
+/// the worker before removing the directory.
+struct CacheShared {
+    inner: Mutex<CacheInner>,
+    /// Signalled every time an in-flight prefetch resolves (lands,
+    /// is discarded, or fails): demand fetches and
+    /// [`SpillStore::drain_prefetches`] wait on this.
+    landed: Condvar,
+}
+
+/// One queued page-in for the prefetch worker: everything the read
+/// needs, copied out of the descriptor so the job holds no store
+/// reference.
+struct PrefetchJob {
+    id: u64,
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    bytes: usize,
+}
+
+/// The lazily-spawned background thread that services
+/// [`SpilledBlock::prefetch`] requests, plus the channel feeding it.
+/// Dropping the sender shuts the worker down; [`SpillStore`]'s drop
+/// joins it before removing the spill directory.
+struct PrefetchWorker {
+    tx: Sender<PrefetchJob>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// Body of the prefetch worker thread: for each queued job, read and
+/// validate the payload file **without** holding the cache lock (the id
+/// is reserved in the in-flight set, so no demand fetch races the
+/// read), then land it under the lock — admitting it if it still fits
+/// the budget, discarding it uncharged otherwise. Read failures are
+/// swallowed: the next demand fetch re-reads synchronously and surfaces
+/// the typed error on the caller's path.
+fn prefetch_worker_main(
+    shared: Arc<CacheShared>,
+    budget: usize,
+    policy: EvictPolicy,
+    rx: std::sync::mpsc::Receiver<PrefetchJob>,
+) {
+    while let Ok(job) = rx.recv() {
+        let payload = match job.precision {
+            Precision::F64 => {
+                read_payload(&job.path, job.rows, job.cols).map(|m| SpillPayload::F64(Arc::new(m)))
+            }
+            Precision::F32 => read_payload_f32(&job.path, job.rows, job.cols)
+                .map(|m| SpillPayload::F32(Arc::new(m))),
+        };
+        let mut g = shared.inner.lock().unwrap();
+        g.inflight.remove(&job.id);
+        g.inflight_bytes -= job.bytes;
+        if let Ok(p) = payload {
+            // demand fetches may have grown the resident set since this
+            // job was queued; a landing that no longer fits is discarded
+            // (uncharged) rather than evicting on a guess
+            if g.resident_bytes.saturating_add(p.bytes()) <= budget
+                && !g.resident.contains_key(&job.id)
+            {
+                g.bytes_read += p.bytes();
+                g.admit(job.id, &p, policy);
+            }
+        }
+        drop(g);
+        shared.landed.notify_all();
+    }
 }
 
 /// The out-of-core tier: a private temp directory of write-once block
@@ -218,7 +349,13 @@ pub struct SpillStore {
     dir: PathBuf,
     budget: usize,
     policy: EvictPolicy,
-    inner: Mutex<CacheInner>,
+    /// Cache state + landing signal, shared with the prefetch worker
+    /// (which deliberately holds only this `Arc`, never the store — see
+    /// [`CacheShared`]).
+    shared: Arc<CacheShared>,
+    /// The background page-in thread, spawned on the first
+    /// [`SpilledBlock::prefetch`] and joined when the store drops.
+    prefetch: Mutex<Option<PrefetchWorker>>,
 }
 
 /// Process-wide counter making concurrent stores' directories unique.
@@ -252,18 +389,26 @@ impl SpillStore {
             dir,
             budget,
             policy,
-            inner: Mutex::new(CacheInner {
-                next_id: 0,
-                resident: HashMap::new(),
-                lru: Vec::new(),
-                hand: 0,
-                ref_bits: HashMap::new(),
-                resident_bytes: 0,
-                peak_resident_bytes: 0,
-                window_peak: 0,
-                bytes_read: 0,
-                bytes_written: 0,
+            shared: Arc::new(CacheShared {
+                inner: Mutex::new(CacheInner {
+                    next_id: 0,
+                    resident: HashMap::new(),
+                    lru: Vec::new(),
+                    hand: 0,
+                    ref_bits: HashMap::new(),
+                    resident_bytes: 0,
+                    peak_resident_bytes: 0,
+                    window_peak: 0,
+                    bytes_read: 0,
+                    bytes_written: 0,
+                    inflight: HashSet::new(),
+                    inflight_bytes: 0,
+                    prefetch_issued: 0,
+                    prefetch_skipped: 0,
+                }),
+                landed: Condvar::new(),
             }),
+            prefetch: Mutex::new(None),
         }))
     }
 
@@ -295,12 +440,26 @@ impl SpillStore {
 
     /// Snapshot of the cumulative ledger.
     pub fn stats(&self) -> SpillStats {
-        let g = self.inner.lock().unwrap();
+        let g = self.shared.inner.lock().unwrap();
         SpillStats {
             bytes_read: g.bytes_read,
             bytes_written: g.bytes_written,
             resident_bytes: g.resident_bytes,
             peak_resident_bytes: g.peak_resident_bytes,
+            prefetch_issued: g.prefetch_issued,
+            prefetch_skipped: g.prefetch_skipped,
+        }
+    }
+
+    /// Block until every in-flight prefetch has resolved (landed in the
+    /// cache, been discarded, or failed). Product sweeps consume each
+    /// prefetch with the very next fetch, so they never need this; it
+    /// exists so ledger snapshots and tests can quiesce the background
+    /// worker deterministically.
+    pub fn drain_prefetches(&self) {
+        let mut g = self.shared.inner.lock().unwrap();
+        while !g.inflight.is_empty() {
+            g = self.shared.landed.wait(g).unwrap();
         }
     }
 
@@ -310,14 +469,14 @@ impl SpillStore {
     /// `peak_resident_bytes` charges never leak an earlier product's
     /// peak across a `reset_metrics` boundary.
     pub(crate) fn begin_peak_window(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shared.inner.lock().unwrap();
         g.window_peak = g.resident_bytes;
     }
 
     /// Highest `resident_bytes` seen since the last
     /// [`SpillStore::begin_peak_window`] (or store creation).
     pub(crate) fn peak_in_window(&self) -> usize {
-        self.inner.lock().unwrap().window_peak
+        self.shared.inner.lock().unwrap().window_peak
     }
 
     fn file_path(&self, id: u64) -> PathBuf {
@@ -330,7 +489,7 @@ impl SpillStore {
     /// lives at rest on disk until something reads it.
     pub fn put(self: &Arc<Self>, m: &Matrix) -> Result<SpilledBlock, SpillError> {
         let id = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.shared.inner.lock().unwrap();
             let id = g.next_id;
             g.next_id += 1;
             id
@@ -357,7 +516,7 @@ impl SpillStore {
             path: path.clone(),
             detail: e.to_string(),
         })?;
-        self.inner.lock().unwrap().bytes_written += payload_bytes;
+        self.shared.inner.lock().unwrap().bytes_written += payload_bytes;
         Ok(SpilledBlock {
             id,
             rows: m.rows(),
@@ -375,7 +534,7 @@ impl SpillStore {
     /// the f64 format; the magic word distinguishes the two on disk.
     pub fn put_f32(self: &Arc<Self>, m: &MatrixF32) -> Result<SpilledBlock, SpillError> {
         let id = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.shared.inner.lock().unwrap();
             let id = g.next_id;
             g.next_id += 1;
             id
@@ -401,7 +560,7 @@ impl SpillStore {
             path: path.clone(),
             detail: e.to_string(),
         })?;
-        self.inner.lock().unwrap().bytes_written += payload_bytes;
+        self.shared.inner.lock().unwrap().bytes_written += payload_bytes;
         Ok(SpilledBlock {
             id,
             rows: m.rows(),
@@ -421,7 +580,14 @@ impl SpillStore {
     /// cluster, where the comms model (not real disk bandwidth) is the
     /// quantity under study.
     fn get(&self, b: &SpilledBlock) -> Result<SpillPayload, SpillError> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shared.inner.lock().unwrap();
+        // an in-flight prefetch of this very block: wait for the landing
+        // instead of reading the file a second time — the landed page is
+        // then served as an ordinary hit (one `bytes_read` charge total),
+        // or re-read synchronously below if it was discarded or failed
+        while g.inflight.contains(&b.id) {
+            g = self.shared.landed.wait(g).unwrap();
+        }
         if let Some(m) = g.resident.get(&b.id).cloned() {
             match self.policy {
                 EvictPolicy::Lru | EvictPolicy::Mru => {
@@ -481,23 +647,78 @@ impl SpillStore {
                     g.resident_bytes -= v.bytes();
                 }
             }
-            g.resident.insert(b.id, m.clone());
-            g.lru.push(b.id);
-            if self.policy == EvictPolicy::Clock {
-                // a fresh page earns its second chance only by being
-                // hit again — keeps one-shot scans evictable
-                g.ref_bits.insert(b.id, false);
-            }
-            g.resident_bytes += bytes;
-            g.peak_resident_bytes = g.peak_resident_bytes.max(g.resident_bytes);
-            g.window_peak = g.window_peak.max(g.resident_bytes);
+            g.admit(b.id, &m, self.policy);
         }
         Ok(m)
+    }
+
+    /// Queue an advisory page-in of `b` on the background worker (see
+    /// the module docs' double-buffering contract). No-op if the block
+    /// is already resident or already in flight; **skipped** — never
+    /// queued — when the resident-plus-in-flight bytes would exceed the
+    /// budget, because a prefetch must not evict and must not be able to
+    /// bust `peak_resident_bytes ≤ budget`.
+    fn prefetch_block(self: &Arc<Self>, b: &SpilledBlock) {
+        let bytes = match b.precision {
+            Precision::F64 => 8 * b.rows * b.cols,
+            Precision::F32 => 4 * b.rows * b.cols,
+        };
+        {
+            let mut g = self.shared.inner.lock().unwrap();
+            if g.resident.contains_key(&b.id) || g.inflight.contains(&b.id) {
+                return;
+            }
+            if g.resident_bytes.saturating_add(g.inflight_bytes).saturating_add(bytes)
+                > self.budget
+            {
+                g.prefetch_skipped += 1;
+                return;
+            }
+            g.inflight.insert(b.id);
+            g.inflight_bytes += bytes;
+            g.prefetch_issued += 1;
+        }
+        let job = PrefetchJob {
+            id: b.id,
+            path: self.file_path(b.id),
+            rows: b.rows,
+            cols: b.cols,
+            precision: b.precision,
+            bytes,
+        };
+        let mut w = self.prefetch.lock().unwrap();
+        let worker = w.get_or_insert_with(|| {
+            let (tx, rx) = channel();
+            let shared = Arc::clone(&self.shared);
+            let (budget, policy) = (self.budget, self.policy);
+            let handle = std::thread::Builder::new()
+                .name("dsvd-spill-prefetch".into())
+                .spawn(move || prefetch_worker_main(shared, budget, policy, rx))
+                .expect("spawn spill prefetch worker");
+            PrefetchWorker { tx, handle }
+        });
+        if worker.tx.send(job).is_err() {
+            // worker died (should not happen); roll the reservation back
+            // so demand fetches and drains never wait on a ghost
+            let mut g = self.shared.inner.lock().unwrap();
+            g.inflight.remove(&b.id);
+            g.inflight_bytes -= bytes;
+            drop(g);
+            self.shared.landed.notify_all();
+        }
     }
 }
 
 impl Drop for SpillStore {
     fn drop(&mut self) {
+        // shut the prefetch worker down before removing the directory:
+        // dropping the sender ends its recv loop, and the join is safe
+        // because the worker holds only the `CacheShared` Arc — never
+        // the store — so this drop cannot be running ON that thread
+        if let Some(w) = self.prefetch.lock().unwrap().take() {
+            drop(w.tx);
+            let _ = w.handle.join();
+        }
         // best-effort: the error path (tests delete files mid-run) must
         // still end with the directory gone
         let _ = std::fs::remove_dir_all(&self.dir);
@@ -591,6 +812,18 @@ impl SpilledBlock {
     /// [`SpilledBlock::fetch`].
     pub fn fetch_payload(&self) -> Result<SpillPayload, SpillError> {
         self.store.get(self)
+    }
+
+    /// Advisory hint that this block will be fetched soon: queue its
+    /// page-in on the store's background worker so the read overlaps
+    /// whatever the caller computes next (the pipelined scheduler's
+    /// double-buffered sweeps call this on cell `j+1` before running
+    /// cell `j`'s kernel). Never blocks, never evicts, never exceeds
+    /// the budget — see [`SpillStore`]'s module docs; a hint that can't
+    /// be honored is counted in [`SpillStats::prefetch_skipped`] and
+    /// costs nothing.
+    pub fn prefetch(&self) {
+        self.store.prefetch_block(self);
     }
 
     /// The store backing this block (the metrics layer brackets
@@ -1043,5 +1276,113 @@ mod tests {
             SpillStore::with_budget_and_policy(4096, EvictPolicy::Clock).unwrap().budget(),
             4096
         );
+    }
+
+    #[test]
+    fn prefetch_lands_as_a_single_charge_hit() {
+        let store = SpillStore::with_budget(usize::MAX).unwrap();
+        let a = randmat(80, 6, 4);
+        let b = store.put(&a).unwrap();
+        b.prefetch();
+        b.prefetch(); // in flight or resident either way: a no-op, not a re-issue
+        store.drain_prefetches();
+        let s = store.stats();
+        assert_eq!(s.prefetch_issued, 1);
+        assert_eq!(s.prefetch_skipped, 0);
+        assert_eq!(s.bytes_read, 8 * 6 * 4, "the landing charges the page-in");
+        assert_eq!(s.resident_bytes, 8 * 6 * 4);
+        // the demand fetch rides the landed page: a hit, no second charge
+        assert_eq!(b.fetch().unwrap().data(), a.data());
+        assert_eq!(store.stats().bytes_read, 8 * 6 * 4);
+        b.prefetch(); // resident: a no-op
+        assert_eq!(store.stats().prefetch_issued, 1);
+
+        // f32 blocks prefetch at their stored 4-byte accounting
+        let a32 = MatrixF32::from_matrix(&randmat(81, 6, 4));
+        let b32 = store.put_f32(&a32).unwrap();
+        b32.prefetch();
+        store.drain_prefetches();
+        let s = store.stats();
+        assert_eq!(s.prefetch_issued, 2);
+        assert_eq!(s.bytes_read, 8 * 6 * 4 + 4 * 6 * 4);
+        match b32.fetch_payload().unwrap() {
+            SpillPayload::F32(m) => assert_eq!(m.data(), a32.data()),
+            SpillPayload::F64(_) => panic!("f32 block paged in as f64"),
+        }
+        assert_eq!(store.stats().bytes_read, 8 * 6 * 4 + 4 * 6 * 4, "landed page must be a hit");
+    }
+
+    #[test]
+    fn prefetch_respects_the_budget_and_never_evicts() {
+        let bytes = 8 * 4 * 4;
+        // room for exactly one payload
+        let store = SpillStore::with_budget(bytes).unwrap();
+        let b0 = store.put(&randmat(82, 4, 4)).unwrap();
+        let b1 = store.put(&randmat(83, 4, 4)).unwrap();
+        b0.prefetch();
+        store.drain_prefetches();
+        assert_eq!(store.stats().resident_bytes, bytes);
+        // a second prefetch would push resident past the budget: it is
+        // skipped at issue time, never queued, and evicts nothing
+        b1.prefetch();
+        let s = store.stats();
+        assert_eq!(s.prefetch_issued, 1);
+        assert_eq!(s.prefetch_skipped, 1);
+        assert_eq!(s.resident_bytes, bytes, "a skipped prefetch must not evict");
+        assert_eq!(s.bytes_read, bytes);
+        assert!(s.peak_resident_bytes <= store.budget());
+        // a payload that alone exceeds the budget is always skipped
+        let big = store.put(&randmat(84, 8, 8)).unwrap();
+        big.prefetch();
+        assert_eq!(store.stats().prefetch_skipped, 2);
+        // demand fetching the skipped block still works (and may evict,
+        // because eviction authority stays with the demand path)
+        let _ = b1.fetch().unwrap();
+        let s = store.stats();
+        assert_eq!(s.bytes_read, 2 * bytes);
+        assert!(s.peak_resident_bytes <= store.budget());
+    }
+
+    #[test]
+    fn double_buffered_sweep_stays_within_budget_with_exact_reads() {
+        let bytes = 8 * 4 * 4;
+        // room for two payloads: the current cell plus the prefetched next
+        let store = SpillStore::with_budget(2 * bytes).unwrap();
+        let blocks: Vec<SpilledBlock> =
+            (0..4).map(|i| store.put(&randmat(85 + i, 4, 4)).unwrap()).collect();
+        let plain: Vec<Vec<f64>> = (0..4).map(|i| randmat(85 + i, 4, 4).data().to_vec()).collect();
+        // the product-sweep shape: hint cell j+1, then consume cell j
+        for (j, b) in blocks.iter().enumerate() {
+            if let Some(next) = blocks.get(j + 1) {
+                next.prefetch();
+            }
+            assert_eq!(b.fetch().unwrap().data(), plain[j], "prefetch changed bits");
+        }
+        store.drain_prefetches();
+        let s = store.stats();
+        // every page-in charged exactly once, whether it arrived by
+        // prefetch or by demand — same trajectory as the plain sweep
+        assert_eq!(s.bytes_read, 4 * bytes);
+        assert!(s.peak_resident_bytes <= store.budget(), "prefetch busted the budget");
+        assert!(s.resident_bytes <= store.budget());
+        // the in-flight reservation makes over-committed hints skip
+        // deterministically: cell 1's hint lands in an empty cache, but
+        // by every later hint the current cell plus the buffered next
+        // already fill the budget
+        assert_eq!(s.prefetch_issued, 1);
+        assert_eq!(s.prefetch_skipped, 2);
+    }
+
+    #[test]
+    fn prefetch_worker_shuts_down_with_the_store() {
+        let store = SpillStore::with_budget(usize::MAX).unwrap();
+        let dir = store.dir().to_path_buf();
+        let b = store.put(&randmat(89, 5, 5)).unwrap();
+        b.prefetch();
+        drop(store);
+        // the descriptor still holds the store (and its worker) alive
+        assert!(dir.exists());
+        drop(b); // joins the worker, then removes the directory
+        assert!(!dir.exists());
     }
 }

@@ -225,6 +225,10 @@ fn cmd_info(cfg: &RunConfig) -> CmdResult {
         dsvd::linalg::blas::kernel_kind(),
         dsvd::linalg::Precision::from_env()
     );
+    println!(
+        "scheduler: {:?} (DSVD_SCHED; pipelined overlaps modeled comms with compute)",
+        dsvd::dist::SchedMode::from_env()
+    );
     match dsvd::runtime::PjrtEngine::load_default() {
         Ok(e) => println!("pjrt: OK (platform = {}, artifacts = {:?})", e.platform(), e.artifact_dir),
         Err(e) => println!("pjrt: unavailable ({e}) — run `make artifacts`"),
@@ -255,4 +259,6 @@ global flags:
 
 env-only knobs:
   DSVD_KERNEL=blocked|scalar     dense kernels (blocked SIMD default; scalar = reference)
-  DSVD_PRECISION=f64|f32         operand storage width (accumulation/factors stay f64)";
+  DSVD_PRECISION=f64|f32         operand storage width (accumulation/factors stay f64)
+  DSVD_SCHED=pipelined|barrier   wall-clock scheduler (pipelined DAG overlap default;
+                                 barrier = per-stage sync reference; numerics identical)";

@@ -22,6 +22,13 @@
 //!   executes inline when called *from* a worker (a task that fans out
 //!   again must never block waiting on its own pool) and when the fan-out
 //!   could not help (single task, single-thread pool).
+//! * `run_scoped_dag` is the pipelined variant: tasks declare data
+//!   dependencies on earlier tasks and each one is dispatched the
+//!   moment its last input lands — a reduction-tree parent starts while
+//!   the rest of its level is still running. Determinism is untouched
+//!   because dependents only consume slots their dependencies fully
+//!   wrote (the fold *order* is fixed by the DAG shape, only the
+//!   *schedule* moves).
 //!
 //! The process-wide default pool (`global()`) is sized by the
 //! `DSVD_WORKERS` environment variable, falling back to the number of
@@ -183,6 +190,190 @@ impl WorkerPool {
         }
         out
     }
+
+    /// Run a dependency DAG of tasks with eager dispatch: task `i`
+    /// starts the moment every task in `deps[i]` has completed, not
+    /// when a whole stage drains. Dependency indices must be strictly
+    /// smaller than the task's own index (submission order is
+    /// topological); tasks communicate through caller-owned slots (the
+    /// closures return nothing here) and a dependent may rely on its
+    /// dependencies' writes being visible — completion is published
+    /// under a lock before the dependent is dispatched. Returns each
+    /// task's measured compute seconds in submission order.
+    ///
+    /// Panic semantics: a panicking task cancels its not-yet-dispatched
+    /// transitive dependents (their closures are dropped unrun and
+    /// report 0 seconds), every already-running task finishes, and the
+    /// first panic resumes on the driver — the same contract as
+    /// [`WorkerPool::run_scoped`].
+    pub fn run_scoped_dag<'a>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'a>>,
+        deps: &[Vec<usize>],
+    ) -> Vec<f64> {
+        let n = tasks.len();
+        debug_assert_eq!(n, deps.len());
+        debug_assert!(deps.iter().enumerate().all(|(i, d)| d.iter().all(|&p| p < i)));
+        if n == 0 {
+            return Vec::new();
+        }
+        // Inline paths mirror `run_scoped`: submission order is a
+        // topological order, so running serially by index satisfies
+        // every dependency.
+        if n == 1 || self.size == 1 || in_worker() {
+            return tasks
+                .into_iter()
+                .map(|t| {
+                    let t0 = Instant::now();
+                    t();
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+        }
+
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut pending: Vec<usize> = vec![0; n];
+        for (i, ds) in deps.iter().enumerate() {
+            pending[i] = ds.len();
+            for &p in ds {
+                dependents[p].push(i);
+            }
+        }
+        let sync = Arc::new(DagSync {
+            jobs: Mutex::new(Vec::new()),
+            state: Mutex::new(DagState {
+                pending,
+                dependents,
+                durations: vec![0.0; n],
+                cancelled: vec![false; n],
+                remaining: n,
+                panic: None,
+            }),
+            done: Condvar::new(),
+            tx: self.tx.as_ref().expect("pool is shut down").clone(),
+        });
+        let jobs: Vec<Option<Job>> = tasks
+            .into_iter()
+            .enumerate()
+            .map(|(i, task)| {
+                let sync2 = Arc::clone(&sync);
+                let job: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                    let t0 = Instant::now();
+                    let out = catch_unwind(AssertUnwindSafe(task));
+                    let dt = t0.elapsed().as_secs_f64();
+                    DagSync::complete(&sync2, i, dt, out.err());
+                });
+                // SAFETY: identical argument to `run_scoped` — the jobs
+                // are erased to 'static to enter the queue, but this
+                // function blocks until `remaining == 0`, which only
+                // happens once every dispatched job has run to
+                // completion (panics caught and recorded) and every
+                // cancelled job is accounted; the cancelled closures
+                // are dropped below, still inside this call, so no job
+                // and no captured borrow outlives the caller's frame.
+                Some(unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'a>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                })
+            })
+            .collect();
+        *sync.jobs.lock().unwrap() = jobs;
+
+        // dispatch the roots; everything else follows from completions
+        let roots: Vec<usize> = {
+            let st = sync.state.lock().unwrap();
+            (0..n).filter(|&i| st.pending[i] == 0).collect()
+        };
+        DagSync::dispatch(&sync, &roots);
+
+        let mut st = sync.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = sync.done.wait(st).unwrap();
+        }
+        let durations = std::mem::take(&mut st.durations);
+        let panic = st.panic.take();
+        drop(st);
+        // drop the never-dispatched (cancelled) closures while their
+        // borrows are still alive — see the SAFETY comment above
+        sync.jobs.lock().unwrap().clear();
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+        durations
+    }
+}
+
+/// Shared dispatch state for one `run_scoped_dag` call.
+struct DagSync {
+    /// Erased job closures, `take`n exactly once when dispatched.
+    jobs: Mutex<Vec<Option<Job>>>,
+    state: Mutex<DagState>,
+    done: Condvar,
+    tx: Sender<Job>,
+}
+
+struct DagState {
+    /// Unmet dependency count per task; a task dispatches at 0.
+    pending: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+    durations: Vec<f64>,
+    cancelled: Vec<bool>,
+    /// Tasks not yet finished or cancelled; the driver wakes at 0.
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+impl DagSync {
+    /// Publish task `i`'s completion and dispatch every dependent whose
+    /// last input just landed. On panic, cancel the transitive
+    /// dependents that can no longer receive their inputs.
+    fn complete(
+        sync: &Arc<DagSync>,
+        i: usize,
+        dt: f64,
+        err: Option<Box<dyn std::any::Any + Send + 'static>>,
+    ) {
+        let mut ready = Vec::new();
+        {
+            let mut st = sync.state.lock().unwrap();
+            st.durations[i] = dt;
+            st.remaining -= 1;
+            if let Some(payload) = err {
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+                let mut stack = st.dependents[i].clone();
+                while let Some(j) = stack.pop() {
+                    if !st.cancelled[j] {
+                        st.cancelled[j] = true;
+                        st.remaining -= 1;
+                        stack.extend(st.dependents[j].iter().copied());
+                    }
+                }
+            } else {
+                let down = st.dependents[i].clone();
+                for j in down {
+                    st.pending[j] -= 1;
+                    if st.pending[j] == 0 && !st.cancelled[j] {
+                        ready.push(j);
+                    }
+                }
+            }
+            if st.remaining == 0 {
+                sync.done.notify_all();
+            }
+        }
+        Self::dispatch(sync, &ready);
+    }
+
+    fn dispatch(sync: &Arc<DagSync>, ids: &[usize]) {
+        for &j in ids {
+            let job = sync.jobs.lock().unwrap()[j].take().expect("job dispatched once");
+            sync.tx.send(job).expect("pool workers exited");
+        }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -296,5 +487,66 @@ mod tests {
     fn env_default_workers_positive() {
         assert!(default_workers() >= 1);
         assert!(global().size() >= 1);
+    }
+
+    /// A 4-leaf reduction tree driven as a DAG: every parent must see
+    /// both children's slots written, whatever the schedule.
+    #[test]
+    fn dag_parents_see_their_children() {
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let slots: Vec<Mutex<Option<u64>>> = (0..7).map(|_| Mutex::new(None)).collect();
+            let deps: Vec<Vec<usize>> =
+                vec![vec![], vec![], vec![], vec![], vec![0, 1], vec![2, 3], vec![4, 5]];
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..7)
+                .map(|i| {
+                    let slots = &slots;
+                    let deps = deps[i].clone();
+                    Box::new(move || {
+                        let v: u64 = if deps.is_empty() {
+                            1 << i
+                        } else {
+                            deps.iter()
+                                .map(|&d| {
+                                    slots[d].lock().unwrap().take().expect("dependency landed")
+                                })
+                                .sum()
+                        };
+                        *slots[i].lock().unwrap() = Some(v);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            let durations = pool.run_scoped_dag(tasks, &deps);
+            assert_eq!(durations.len(), 7);
+            assert_eq!(slots[6].lock().unwrap().take(), Some(0b1111), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn dag_panic_cancels_dependents_and_resumes() {
+        let pool = WorkerPool::new(2);
+        let ran = Mutex::new(Vec::new());
+        let deps: Vec<Vec<usize>> = vec![vec![], vec![], vec![0, 1], vec![2]];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|i| {
+                let ran = &ran;
+                Box::new(move || {
+                    if i == 1 {
+                        panic!("leaf 1 exploded");
+                    }
+                    ran.lock().unwrap().push(i);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.run_scoped_dag(tasks, &deps)));
+        assert!(caught.is_err());
+        let ran = ran.lock().unwrap();
+        // the doomed subtree (2 and 3) never ran; leaf 0 may or may not
+        // have finished first but is allowed to
+        assert!(!ran.contains(&2) && !ran.contains(&3), "ran {ran:?}");
+        // the pool survives for the next stage
+        let ok: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4).map(|i| Box::new(move || i) as Box<dyn FnOnce() -> usize + Send>).collect();
+        assert_eq!(pool.run_scoped(ok).len(), 4);
     }
 }

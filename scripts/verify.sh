@@ -8,12 +8,13 @@
 #                                BENCH_gen.json, BENCH_sparse.json,
 #                                BENCH_fused.json, BENCH_ooc.json,
 #                                BENCH_faults.json, BENCH_adaptive.json,
-#                                BENCH_kernels.json
+#                                BENCH_pipeline.json, BENCH_kernels.json
 #                                (fails if any record was not written; the
-#                                fused, out-of-core, fault, adaptive, and
-#                                kernel benches also gate), then the
-#                                DSVD_KERNEL / DSVD_PRECISION feature
-#                                matrix in separate processes
+#                                fused, out-of-core, fault, adaptive,
+#                                scheduler, and kernel benches also gate),
+#                                then the DSVD_KERNEL / DSVD_SCHED /
+#                                DSVD_PRECISION feature matrix in
+#                                separate processes
 #   FULL=1 scripts/verify.sh     also runs the timing-sensitive worker-
 #                                scaling acceptance test (>=4 cores)
 #
@@ -120,6 +121,20 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_adaptive.json" \
     cargo bench --bench tables_adaptive
 
+# the scheduler sweep is a GATE: every workload runs under both the
+# barrier and the pipelined DAG scheduler; the bench panics unless the
+# two are bit-identical, the pipelined wall clock never exceeds the
+# barrier wall clock, the comms-heavy TSQR fan-in row pipelines at
+# least 1.15x, and prefetch keeps the resident set within the spill
+# budget on the out-of-core rows. Runs with DSVD_SCHED scrubbed from
+# the environment so the bench's own per-row mode selection decides.
+echo "== scaled bench + scheduler gates: tables_pipeline (DSVD_BENCH_SCALE=${SCALE})"
+env -u DSVD_SCHED \
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_pipeline.json" \
+    cargo bench --bench tables_pipeline
+
 # the kernel trajectory is a GATE: the blocked SIMD microkernels must
 # clear 1.5x over the scalar reference on matmul/matmul_tn/gram (while
 # agreeing to 1e-12 — the bench asserts that itself), and the f32
@@ -132,7 +147,7 @@ DSVD_BENCH_JSON="BENCH_kernels.json" \
 # every expected perf record must exist and be non-empty
 for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
          BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json \
-         BENCH_kernels.json; do
+         BENCH_pipeline.json BENCH_kernels.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
@@ -182,6 +197,19 @@ for gate in within_tolerance estimator_within_hmt passes_within_budget; do
         exit 1
     fi
 done
+# every scheduler-sweep row must be bit-identical across modes, never
+# slower pipelined, within the spill budget, and the TSQR fan-in row
+# must have cleared its 1.15x speedup bar
+for gate in bit_identical pipelined_not_slower tsqr_fanin_speedup_ok peak_within_budget; do
+    if ! grep -q "\"$gate\": true" BENCH_pipeline.json; then
+        echo "!! BENCH_pipeline.json lacks the $gate gate field" >&2
+        exit 1
+    fi
+    if grep -q "\"$gate\": false" BENCH_pipeline.json; then
+        echo "!! a scheduler-sweep row failed the $gate gate" >&2
+        exit 1
+    fi
+done
 # the blocked microkernels must have cleared the 1.5x bar on all three
 # dense kernels, and the f32 storage runs must have halved the byte
 # ledgers while keeping the error columns inside their envelopes
@@ -196,7 +224,7 @@ for gate in blocked_matmul_speedup_ok blocked_matmul_tn_speedup_ok blocked_gram_
         exit 1
     fi
 done
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json BENCH_kernels.json"
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json BENCH_pipeline.json BENCH_kernels.json"
 
 # feature matrix: the kernel and precision knobs are cached per process,
 # so each leg runs in its own test invocation. The scalar reference path
@@ -208,6 +236,10 @@ echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json 
 echo "== feature matrix: scalar kernel reference (DSVD_KERNEL=scalar)"
 env -u DSVD_SHUFFLE_LATENCY -u DSVD_TASK_OVERHEAD DSVD_KERNEL=scalar \
     cargo test -q --test op_equivalence --test out_of_core --test fault_tolerance
+echo "== feature matrix: barrier scheduler (DSVD_SCHED=barrier)"
+env -u DSVD_SHUFFLE_LATENCY -u DSVD_TASK_OVERHEAD DSVD_SCHED=barrier \
+    cargo test -q --test op_equivalence --test out_of_core --test fault_tolerance \
+    --test sched_equivalence
 echo "== feature matrix: f32 storage path (DSVD_PRECISION=f32)"
 env -u DSVD_SHUFFLE_LATENCY -u DSVD_TASK_OVERHEAD DSVD_PRECISION=f32 \
     cargo test -q --test lowrank_accuracy
