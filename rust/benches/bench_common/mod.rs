@@ -66,7 +66,8 @@ pub fn metrics_json(m: &Metrics) -> String {
          \"spill_bytes_written\": {}, \"peak_resident_bytes\": {}, \
          \"faults_injected\": {}, \"tasks_retried\": {}, \"speculative_launches\": {}, \
          \"recoveries\": {}, \"health_checks_run\": {}, \"probe_matvecs\": {}, \
-         \"adaptive_rounds\": {}, \"final_rank\": {}",
+         \"adaptive_rounds\": {}, \"final_rank\": {}, \"sketch_updates\": {}, \
+         \"rows_absorbed\": {}, \"queries_served\": {}",
         m.cpu_time,
         m.wall_clock,
         m.driver_elapsed,
@@ -87,7 +88,10 @@ pub fn metrics_json(m: &Metrics) -> String {
         m.health_checks_run,
         m.probe_matvecs,
         m.adaptive_rounds,
-        m.final_rank
+        m.final_rank,
+        m.sketch_updates,
+        m.rows_absorbed,
+        m.queries_served
     )
 }
 

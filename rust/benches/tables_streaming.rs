@@ -1,0 +1,218 @@
+//! One-pass streaming SVD vs the multi-pass Algorithm 7, plus the
+//! absorption-throughput sweep and the resident-service query timing.
+//!
+//! Three record suites land in BENCH_streaming.json:
+//!
+//!   STREAM_BATCH  Algorithm 9 (one pass total) vs Algorithm 7 at the
+//!                 same rank (2·iters+2 passes): passes, wall-clock,
+//!                 accuracy, and the coupling-matrix conditioning.
+//!   STREAM_SWEEP  the same decomposition built by slab absorption, for
+//!                 1/4/16 arrival slabs: absorbed rows, wall-clock, and
+//!                 the match against the batch one-pass run.
+//!   STREAM_SERVICE  resident SvdService query latency (batched
+//!                 projections and row reconstructions per second).
+//!
+//! Boolean gates scripts/verify.sh greps for:
+//!
+//!   one_pass_ledger      batch Algorithm 9 charges a_passes == 1; slab
+//!                        absorption of resident dense rows charges 0
+//!                        (and never re-reads absorbed rows)
+//!   stream_matches_batch streamed recon/orth agree with the batch
+//!                        one-pass run (same Ω/Ψ streams, same probe)
+//!   within_hmt_envelope  recon ≤ 10·√(2/π)·(√n+4)·σ_{rank+1} — the
+//!                        HMT envelope around the optimal rank-r error
+//!
+//!     cargo bench --bench tables_streaming
+
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::{bench_config, metrics_json, write_bench_json};
+use dsvd::algs::{StreamingOpts, SvdService};
+use dsvd::dist::DistRowMatrix;
+use dsvd::gen::{spectrum_geometric, DctBlockTestMatrix};
+use dsvd::harness::{
+    run_lowrank_prepared, run_one_pass_prepared, run_streaming, sci, LrAlg, Spectrum,
+};
+use dsvd::linalg::Matrix;
+
+fn main() {
+    let (cfg_base, be, scale) = bench_config();
+    let n = 128usize;
+    let m = (8192 / scale).max(n * 2);
+    let rank = 10usize;
+
+    let mut cfg = cfg_base.clone();
+    cfg.cols_per_part = n; // single block column at this scale
+    cfg.rows_per_part = (m / 16).max(1); // 16 row partitions
+
+    let ctx = cfg.context();
+    let sigma = spectrum_geometric(n);
+    let gen = DctBlockTestMatrix::new(m, n, &sigma);
+    let a = gen.generate(&ctx, be.as_ref(), cfg.rows_per_part, cfg.cols_per_part);
+
+    // HMT envelope around the optimal rank-r error σ_{r+1}
+    let envelope =
+        10.0 * (2.0 / std::f64::consts::PI).sqrt() * ((n as f64).sqrt() + 4.0) * sigma[rank];
+
+    let mut records = Vec::new();
+
+    println!("================================================================");
+    println!(
+        "One-pass / streaming SVD — m={m} n={n} rank={rank} geometric spectrum, backend={}",
+        be.name()
+    );
+    println!("----------------------------------------------------------------");
+
+    // ---- Algorithm 9 (one pass) vs Algorithm 7 at matched rank ---------
+    let (one_pass, diag) = run_one_pass_prepared(&cfg, be.as_ref(), &a, rank);
+    let alg7 = run_lowrank_prepared(&cfg, be.as_ref(), &a, rank, 2, LrAlg::A7);
+
+    let one_pass_ledger = one_pass.metrics.a_passes == 1;
+    let within_hmt_envelope = one_pass.recon <= envelope;
+    println!(
+        "{:>11}  {:>7}  {:>10}  {:>10}  {:>10}  {:>10}",
+        "alg", "passes", "wall", "recon", "u_orth", "envelope"
+    );
+    for (label, row) in [("9 (1-pass)", &one_pass), ("7 (i=2)", &alg7)] {
+        println!(
+            "{:>11}  {:>7}  {:>10}  {:>10}  {:>10}  {:>10}",
+            label,
+            row.metrics.a_passes,
+            sci(row.metrics.wall_clock),
+            sci(row.recon),
+            sci(row.u_orth),
+            sci(envelope)
+        );
+    }
+    println!(
+        "coupling Q*Psi: rank {} of {}x{}, condition {}",
+        diag.cross_rank,
+        diag.sketch_cols,
+        diag.coupling_cols,
+        sci(diag.cross_cond)
+    );
+    for (gate, ok) in
+        [("one_pass_ledger", one_pass_ledger), ("within_hmt_envelope", within_hmt_envelope)]
+    {
+        if !ok {
+            println!("  !! gate {gate} FAILED");
+        }
+    }
+    records.push(format!(
+        "\"suite\": \"STREAM_BATCH\", \"m\": {m}, \"n\": {n}, \"rank\": {rank}, \
+         \"algorithm\": \"9\", {}, \"recon\": {:e}, \"u_orth\": {:e}, \"v_orth\": {:e}, \
+         \"cross_cond\": {:e}, \"cross_rank\": {}, \"sketch_cols\": {}, \
+         \"coupling_cols\": {}, \"envelope\": {:e}, \"alg7_a_passes\": {}, \
+         \"alg7_wall_clock\": {:e}, \"alg7_recon\": {:e}, \
+         \"one_pass_ledger\": {one_pass_ledger}, \
+         \"within_hmt_envelope\": {within_hmt_envelope}",
+        metrics_json(&one_pass.metrics),
+        one_pass.recon,
+        one_pass.u_orth,
+        one_pass.v_orth,
+        diag.cross_cond,
+        diag.cross_rank,
+        diag.sketch_cols,
+        diag.coupling_cols,
+        envelope,
+        alg7.metrics.a_passes,
+        alg7.metrics.wall_clock,
+        alg7.recon,
+    ));
+
+    // ---- absorption-throughput sweep over slab counts ------------------
+    println!("----------------------------------------------------------------");
+    println!(
+        "{:>6}  {:>8}  {:>8}  {:>10}  {:>10}  {:>10}",
+        "slabs", "absorbed", "queries", "wall", "recon", "vs batch"
+    );
+    for slabs in [1usize, 4, 16] {
+        // same seed → same synthetic matrix and the same Ω/Ψ streams as
+        // the batch run above; only the arrival slabbing varies
+        let run = run_streaming(&cfg, be.as_ref(), m, n, rank, slabs, 32, Spectrum::Geometric);
+        let drift = (run.row.recon - one_pass.recon).abs();
+        let stream_matches_batch = drift <= 1e-6 * one_pass.recon.max(1e-12)
+            && run.row.u_orth <= 1e-13
+            && run.row.v_orth <= 1e-13;
+        let one_pass_ledger = run.row.metrics.a_passes == 0
+            && run.row.metrics.sketch_updates == slabs
+            && run.row.metrics.rows_absorbed == m;
+        let within_hmt_envelope = run.row.recon <= envelope;
+        println!(
+            "{:>6}  {:>8}  {:>8}  {:>10}  {:>10}  {:>10}",
+            slabs,
+            run.row.metrics.rows_absorbed,
+            run.row.metrics.queries_served,
+            sci(run.row.metrics.wall_clock),
+            sci(run.row.recon),
+            sci(drift)
+        );
+        for (gate, ok) in [
+            ("one_pass_ledger", one_pass_ledger),
+            ("stream_matches_batch", stream_matches_batch),
+            ("within_hmt_envelope", within_hmt_envelope),
+        ] {
+            if !ok {
+                println!("  !! gate {gate} FAILED");
+            }
+        }
+        records.push(format!(
+            "\"suite\": \"STREAM_SWEEP\", \"m\": {m}, \"n\": {n}, \"rank\": {rank}, \
+             \"algorithm\": \"9-stream\", \"slabs\": {slabs}, {}, \"recon\": {:e}, \
+             \"u_orth\": {:e}, \"v_orth\": {:e}, \"cross_cond\": {:e}, \
+             \"batch_recon_drift\": {:e}, \"envelope\": {:e}, \
+             \"one_pass_ledger\": {one_pass_ledger}, \
+             \"stream_matches_batch\": {stream_matches_batch}, \
+             \"within_hmt_envelope\": {within_hmt_envelope}",
+            metrics_json(&run.row.metrics),
+            run.row.recon,
+            run.row.u_orth,
+            run.row.v_orth,
+            run.diag.cross_cond,
+            drift,
+            envelope,
+        ));
+    }
+
+    // ---- resident-service query latency --------------------------------
+    let mut opts = StreamingOpts::new(rank);
+    opts.rows_per_part = cfg.rows_per_part;
+    opts.ts = cfg.ts_opts();
+    let dense = a.collect(&ctx);
+    let mut svc = SvdService::new(&ctx, n, opts);
+    svc.absorb(&ctx, be.as_ref(), &DistRowMatrix::from_matrix(&dense, cfg.rows_per_part));
+    svc.refresh(&ctx, be.as_ref());
+
+    let width = 64usize;
+    let reps = 50usize;
+    let qs = Matrix::from_fn(n, width, |i, j| (((i + 2) * (j + 3)) % 97) as f64 / 97.0);
+    ctx.reset_metrics();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = svc.project_batch(&ctx, &qs).expect("fresh factors");
+    }
+    let project_secs = t0.elapsed().as_secs_f64();
+    let served = ctx.take_metrics().queries_served;
+
+    let rrows = 256usize.min(m);
+    let t1 = Instant::now();
+    let _ = svc.reconstruct_rows(&ctx, 0, rrows).expect("fresh factors");
+    let reconstruct_secs = t1.elapsed().as_secs_f64();
+
+    let qps = served as f64 / project_secs.max(1e-9);
+    println!("----------------------------------------------------------------");
+    println!(
+        "service: {served} projections in {:.3}s ({:.0}/s), {rrows} rows reconstructed in {:.3}s",
+        project_secs, qps, reconstruct_secs
+    );
+    records.push(format!(
+        "\"suite\": \"STREAM_SERVICE\", \"m\": {m}, \"n\": {n}, \"rank\": {rank}, \
+         \"batch_width\": {width}, \"batches\": {reps}, \"queries_served\": {served}, \
+         \"project_seconds\": {project_secs:e}, \"queries_per_second\": {qps:e}, \
+         \"reconstructed_rows\": {rrows}, \"reconstruct_seconds\": {reconstruct_secs:e}"
+    ));
+
+    write_bench_json("BENCH_streaming.json", &records);
+}

@@ -43,6 +43,14 @@ impl ArnoldiOpts {
     }
 }
 
+/// Split-stream index of the Krylov starting-vector draws. The starting
+/// vector (and restart refreshes) used to come from the RAW root stream
+/// `Rng::seed(seed)` — the same bits the verifier's probe and any other
+/// raw-seeded consumer would draw at an equal seed, so the verification
+/// probe started exactly along the baseline's own Krylov seed. Namespaced
+/// per consumer like every other draw site (pins in `verify::tests`).
+pub(crate) const ARNOLDI_START_STREAM: u64 = 0xA4AC_57A7;
+
 /// MLlib-style low-rank SVD via restarted Krylov iteration on `AᵀA`.
 /// Touches the input only through [`DistOp`] mat-vec products, exactly
 /// as MLlib's ARPACK wrapper touches its distributed matrix.
@@ -56,7 +64,7 @@ pub fn preexisting_lowrank(
     let l = opts.l.min(n.saturating_sub(1)).max(1);
     let ncv = if opts.ncv > 0 { opts.ncv.min(n) } else { (2 * l + 1).max(20).min(n) };
 
-    let mut rng = Rng::seed(opts.seed);
+    let mut rng = Rng::seed(opts.seed).split(ARNOLDI_START_STREAM);
     // the Gram-operator apply routes through the fused normal mat-vec:
     // one traversal of the stored operator per Krylov vector (implicit
     // blocks materialize once, not once per product) — bit-identical to

@@ -4,9 +4,12 @@
 //!   baseline (problem {1} of the paper).
 //! * [`lowrank`] — Algorithms 5–8 over block matrices (problem {2}).
 //! * [`arnoldi`] — the ARPACK-like Krylov baseline for problem {2}.
+//! * [`streaming`] — the one-pass two-sided sketch (HMT §5.5), its
+//!   slab-updatable form, and the resident query service.
 
 pub mod arnoldi;
 pub mod lowrank;
+pub mod streaming;
 pub mod tall_skinny;
 
 pub use arnoldi::{preexisting_lowrank, ArnoldiOpts};
@@ -15,6 +18,10 @@ pub use lowrank::{
     algorithm8_adaptive, try_algorithm5, try_algorithm5_adaptive, try_algorithm7,
     try_algorithm7_adaptive, try_algorithm8, try_algorithm8_adaptive, AdaptiveOpts, AdaptiveReport,
     AdaptiveRound, LowRankOpts, TsMethod,
+};
+pub use streaming::{
+    algorithm9, try_algorithm9, OnePassDiagnostics, ServiceError, StreamingOpts, StreamingSketch,
+    SvdService,
 };
 pub use tall_skinny::{
     algorithm1, algorithm1_csr, algorithm1_explicit_q, algorithm2, algorithm2_csr, algorithm3,

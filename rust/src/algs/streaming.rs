@@ -1,0 +1,740 @@
+//! One-pass streaming SVD (HMT §5.5) + the incremental sketch service.
+//!
+//! * [`algorithm9`] — the one-pass two-sided sketch: `Y = A·Ω` and
+//!   `W = Aᵀ·Ψ` from a SINGLE traversal of the stored operator (one
+//!   [`DistOp::fused_two_sided_sketch`] call), `Q` from TSQR over Y,
+//!   and the small factor solved on the driver as `B = W·X⁺` with
+//!   `X = Qᵀ·Ψ` — A is never read again after the sketch. This is the
+//!   regime Algorithms 5–8 cannot serve: data that is seen once
+//!   (revisiting it is impossible or as expensive as the whole run).
+//! * [`StreamingSketch`] — the updatable form: row slabs arrive one at
+//!   a time via [`StreamingSketch::absorb`]; each absorption is one
+//!   fused traversal of the NEW slab plus a single TSQR R-merge, and
+//!   absorbed rows are never revisited ([`Metrics::a_passes`] gated —
+//!   see `tests/streaming.rs`).
+//! * [`SvdService`] — a resident decomposition over the sketch:
+//!   `factors()` / `project(x)` / `reconstruct_rows(..)` answer against
+//!   the cached factors, with typed staleness ([`ServiceError::Stale`])
+//!   once further rows have been absorbed, cleared by
+//!   [`SvdService::refresh`].
+//!
+//! **Math.** With Ω (n×k) and Ψ (m×l) independent Gaussians, k = 2r+1
+//! and l = 4r+3 for a rank-r target, the sketch `Y = A·Ω`, `W = Aᵀ·Ψ`
+//! determines the approximation `A ≈ Q·Bᵀ` without another look at A:
+//! `Q = orth(Y)`, and from `W = Aᵀ·Ψ ≈ (Qᵀ·A)ᵀ·(Qᵀ·Ψ)` the small
+//! factor is the least-squares solve `B = W·X⁺`, `X = Qᵀ·Ψ` (k'×l).
+//! The conditioning of X governs the extra error of the one-pass
+//! estimate over the two-pass `B = Aᵀ·Q`; [`OnePassDiagnostics`]
+//! reports its singular values so callers can see that margin.
+//!
+//! **Absorption.** The slab update never rebuilds the sketch: for a new
+//! slab Aₛ (nₛ×n) the fused traversal yields `yₛ = Aₛ·Ω` and
+//! `wₛ = Aₛᵀ·Ψₛ`; `W += wₛ` and `Z += yₛᵀ·Ψₛ` accumulate driver-side,
+//! the running R factor of Y merges with `tsqr_r(yₛ)` in one small QR,
+//! and Y grows by a zero-copy [`DistRowMatrix::vstack`]. Ψ's rows are
+//! drawn per GLOBAL row index (see `psi_row_rng`), so slab boundaries
+//! do not change the sketch — absorbing in any slabbing matches the
+//! batch run on the concatenated matrix up to floating-point summation
+//! order. `refresh()` reconstitutes `Q = Y·S` implicitly from the
+//! running R and recovers `X = Qᵀ·Ψ = Sᵀ·Z` from the accumulator — no
+//! stored Ψ, no pass over A.
+//!
+//! **RNG streams.** Ω and Ψ draw from split streams of the run seed
+//! ([`OMEGA_STREAM`] / [`PSI_STREAM`]), never from `Rng::seed(seed)`
+//! directly — the raw root stream is what every consumer used to share,
+//! correlating sketch, verifier probe, and Arnoldi starting vectors at
+//! equal seeds (see `verify::spectral_norm` and `algs::arnoldi` for the
+//! matching fix, and the pins in this module's tests).
+//!
+//! [`Metrics::a_passes`]: crate::dist::Metrics
+
+use super::tall_skinny::{check_svd_health, DistSvd, TallSkinnyOpts};
+use crate::dist::{catch_dsvd, tsqr_r, Context, DistOp, DistRowMatrix, DsvdError, HealthCheck};
+use crate::linalg::qr::{significant_prefix, thin_qr, tri_inverse_upper};
+use crate::linalg::svd::svd;
+use crate::linalg::{blas, Matrix};
+use crate::rng::Rng;
+use crate::runtime::compute::Compute;
+use std::fmt;
+
+/// Split-stream index of the Ω (right sketch) draw — shared by
+/// [`algorithm9`] and [`StreamingSketch`] so the streaming run sketches
+/// against the very same Ω as the batch run at equal seeds.
+pub(crate) const OMEGA_STREAM: u64 = 0xA9_03E6;
+
+/// Split-stream index of the Ψ (left coupling) draws. Each ROW of Ψ is
+/// its own sub-stream keyed by the global row index, so the Ψ rows a
+/// slab sees are independent of where the slab boundaries fall.
+pub(crate) const PSI_STREAM: u64 = 0xA9_0951;
+
+/// The Ω draw stream: the root `Rng::seed(seed)` split by
+/// [`OMEGA_STREAM`].
+fn omega_rng(ts: &TallSkinnyOpts) -> Rng {
+    Rng::seed(ts.seed).split(OMEGA_STREAM)
+}
+
+/// The Ψ draw stream for one global row: split by [`PSI_STREAM`], then
+/// by the row index — deterministic in `(seed, row)` alone.
+fn psi_row_rng(ts: &TallSkinnyOpts, row: usize) -> Rng {
+    Rng::seed(ts.seed).split(PSI_STREAM).split(row as u64)
+}
+
+/// Ψ rows for the global row range `[global_r0, global_r0 + rows)`,
+/// distributed with slab-LOCAL offsets (ready to ride along a fused
+/// sketch of an operator with that many rows). Driver-side Gaussian
+/// draws; no stage tasks.
+fn psi_slab(
+    ctx: &Context,
+    ts: &TallSkinnyOpts,
+    global_r0: usize,
+    rows: usize,
+    l: usize,
+    rows_per_part: usize,
+) -> DistRowMatrix {
+    let local = ctx.driver(|| {
+        let mut m = Matrix::zeros(rows, l);
+        for i in 0..rows {
+            let mut rng = psi_row_rng(ts, global_r0 + i);
+            for x in m.row_mut(i).iter_mut() {
+                *x = rng.gauss();
+            }
+        }
+        m
+    });
+    DistRowMatrix::from_matrix(&local, rows_per_part)
+}
+
+/// The working-precision prefix solve `S = [R₁₁⁻¹; 0]` (r.cols() × k')
+/// such that `Q = Y·S` orthonormalizes Y against its R factor — the
+/// same construction as `implicit_q`, but handing back the small
+/// right-transform itself so the streaming refresh can push it through
+/// the `Z = Yᵀ·Ψ` accumulator instead of a stored Ψ.
+fn prefix_solve(ctx: &Context, r: &Matrix, wp: f64) -> Matrix {
+    let k = significant_prefix(r, wp);
+    assert!(k > 0, "sketch is numerically zero at the working precision");
+    let r11 = r.slice(0, k, 0, k);
+    ctx.driver(|| {
+        let rinv = tri_inverse_upper(&r11);
+        let mut solve = Matrix::zeros(r.cols(), k);
+        for i in 0..k {
+            solve.row_mut(i).copy_from_slice(rinv.row(i));
+        }
+        solve
+    })
+}
+
+/// Conditioning report on the one-pass coupling matrix `X = Qᵀ·Ψ` — the
+/// quantity whose (pseudo-)inversion separates the one-pass estimate
+/// from the two-pass `B = Aᵀ·Q`. A well-conditioned X (l comfortably
+/// above k keeps it so) means the one-pass factors carry essentially
+/// the two-pass error; a cross condition number near 1/working-precision
+/// means the margin is gone.
+#[derive(Clone, Debug)]
+pub struct OnePassDiagnostics {
+    /// Singular values of X, descending (all of them, kept or not).
+    pub cross_singulars: Vec<f64>,
+    /// σ₁(X)/σ_k'(X) over the KEPT prefix.
+    pub cross_cond: f64,
+    /// Columns of X kept by the working-precision rule (= the rank the
+    /// least-squares solve actually inverted).
+    pub cross_rank: usize,
+    /// Ω columns (the paper's k = 2r+1 by default).
+    pub sketch_cols: usize,
+    /// Ψ columns (the oversampled l = 4r+3 by default).
+    pub coupling_cols: usize,
+}
+
+/// Options for the one-pass / streaming drivers.
+#[derive(Clone, Debug)]
+pub struct StreamingOpts {
+    /// Target rank r of the returned factors.
+    pub rank: usize,
+    /// Ω columns k; 0 means the HMT default 2·rank + 1.
+    pub sketch_cols: usize,
+    /// Ψ columns l; 0 means the HMT default 4·rank + 3 (l > k keeps the
+    /// coupling matrix X well-conditioned).
+    pub coupling_cols: usize,
+    /// Partitioning for Ψ and other derived tall-skinny matrices.
+    pub rows_per_part: usize,
+    /// Seed / working precision, shared with the tall-skinny stack.
+    pub ts: TallSkinnyOpts,
+}
+
+impl StreamingOpts {
+    pub fn new(rank: usize) -> Self {
+        StreamingOpts {
+            rank,
+            sketch_cols: 0,
+            coupling_cols: 0,
+            rows_per_part: 1024,
+            ts: TallSkinnyOpts::default(),
+        }
+    }
+
+    /// Effective Ω width.
+    pub fn k(&self) -> usize {
+        if self.sketch_cols == 0 { 2 * self.rank + 1 } else { self.sketch_cols }
+    }
+
+    /// Effective Ψ width.
+    pub fn l(&self) -> usize {
+        if self.coupling_cols == 0 { 4 * self.rank + 3 } else { self.coupling_cols }
+    }
+}
+
+/// Shared tail of the batch and streaming one-pass drivers: given the
+/// orthonormal Q, the coupling matrix `X = Qᵀ·Ψ` (k'×l), and the
+/// accumulated `W = Aᵀ·Ψ` (n×l), solve `B = W·X⁺` on the driver, SVD
+/// it, and rotate Q into the left singular vectors — one distributed
+/// small product, zero passes over A.
+fn finish_one_pass(
+    ctx: &Context,
+    be: &dyn Compute,
+    q: &DistRowMatrix,
+    x: &Matrix,
+    w: &Matrix,
+    rank: usize,
+    k: usize,
+    l: usize,
+    wp: f64,
+) -> (DistSvd, OnePassDiagnostics) {
+    // X⁺ by SVD with the working-precision cutoff — the one inversion
+    // that distinguishes one-pass from two-pass, reported in full.
+    let (xp, xs, xrank) = ctx.driver(|| {
+        let f = svd(x);
+        let smax = f.s.first().copied().unwrap_or(0.0);
+        let kept = f.s.iter().take_while(|&&s| s > smax * wp && s > 0.0).count();
+        assert!(kept > 0, "coupling matrix QᵀΨ is numerically zero at the working precision");
+        let mut vk = f.v.take_cols(kept); // l×kept
+        for j in 0..kept {
+            vk.scale_col(j, 1.0 / f.s[j]);
+        }
+        let p = blas::matmul_nt(&vk, &f.u.take_cols(kept)); // l×k'
+        (p, f.s, kept)
+    });
+    // B = W·X⁺ (n×k'), then B = U_B Σ V_Bᵀ and A ≈ Q·Bᵀ = (Q·V_B)·Σ·U_Bᵀ
+    let f = ctx.driver(|| svd(&blas::matmul(w, &xp)));
+    let keep = rank.min(f.s.len());
+    let u = q.matmul_small(ctx, be, &f.v.take_cols(keep));
+    let diag = OnePassDiagnostics {
+        cross_cond: xs[0] / xs[xrank - 1],
+        cross_singulars: xs,
+        cross_rank: xrank,
+        sketch_cols: k,
+        coupling_cols: l,
+    };
+    (DistSvd { u, s: f.s[..keep].to_vec(), v: f.u.take_cols(keep) }, diag)
+}
+
+/// Algorithm 9: one-pass randomized SVD (HMT §5.5) of a distributed
+/// operator. Reads A exactly ONCE — the single
+/// [`DistOp::fused_two_sided_sketch`] traversal — and finishes from the
+/// sketch alone: TSQR + implicit double orthonormalization of Y (both
+/// over derived data), the driver-side least-squares solve `B = W·X⁺`,
+/// and one small distributed product for U. On block and CSR storage
+/// the [`Metrics::a_passes`](crate::dist::Metrics) ledger reads exactly
+/// 1 afterwards.
+pub fn algorithm9(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &dyn DistOp,
+    opts: &StreamingOpts,
+) -> (DistSvd, OnePassDiagnostics) {
+    let (m, n) = (a.rows(), a.cols());
+    let k = opts.k();
+    let l = opts.l();
+    assert!(opts.rank >= 1 && k < m.min(n), "need 0 < rank with 2·rank+1 < min(m, n)");
+    assert!(l >= k, "need l ≥ k for a stable coupling solve");
+
+    let mut rng = omega_rng(&opts.ts);
+    let omega = ctx.driver(|| Matrix::from_fn(n, k, |_, _| rng.gauss()));
+    let psi = psi_slab(ctx, &opts.ts, 0, m, l, opts.rows_per_part);
+
+    // the ONE pass over A
+    let (y, w) = a.fused_two_sided_sketch(ctx, be, &omega, &psi);
+
+    // double orthonormalization of Y — zero further passes (Y is derived)
+    let wp = opts.ts.working_precision;
+    let s1 = prefix_solve(ctx, &tsqr_r(ctx, &y), wp);
+    let q1 = y.matmul_small(ctx, be, &s1);
+    let s2 = prefix_solve(ctx, &tsqr_r(ctx, &q1), wp);
+    let q = q1.matmul_small(ctx, be, &s2);
+
+    let x = q.rmatmul_small(ctx, be, &psi); // X = Qᵀ·Ψ (k'×l, driver)
+    finish_one_pass(ctx, be, &q, &x, &w, opts.rank, k, l, wp)
+}
+
+/// Fault-tolerant [`algorithm9`]: unrecovered stage failures come back
+/// as typed [`DsvdError`]s and the finished factors pass the SVD health
+/// screen (finite U/Σ/V + U orthonormality drift) before they are
+/// handed out — same contract as `try_algorithm7`.
+pub fn try_algorithm9(
+    ctx: &Context,
+    be: &dyn Compute,
+    a: &dyn DistOp,
+    opts: &StreamingOpts,
+    health: &HealthCheck,
+) -> Result<(DistSvd, OnePassDiagnostics), DsvdError> {
+    let (out, diag) = catch_dsvd(|| algorithm9(ctx, be, a, opts))?;
+    check_svd_health(ctx, be, &out, health)?;
+    Ok((out, diag))
+}
+
+/// The updatable one-pass sketch: row slabs arrive via [`absorb`], each
+/// costing one fused traversal of the NEW slab plus a single TSQR
+/// R-merge — rows already absorbed are never read again (their entire
+/// contribution lives in Y, the running R, and the W/Z accumulators).
+/// [`refresh`] reconstitutes the factors from that state with zero
+/// passes over any data.
+///
+/// [`absorb`]: StreamingSketch::absorb
+/// [`refresh`]: StreamingSketch::refresh
+pub struct StreamingSketch {
+    opts: StreamingOpts,
+    /// Ω (n×k), drawn once up front — every slab sketches against it.
+    omega: Matrix,
+    /// Y = A·Ω so far, grown by zero-copy vstack per slab.
+    y: Option<DistRowMatrix>,
+    /// Running R factor of Y (merged per slab: `qr([R; tsqr_r(yₛ)])`).
+    r: Option<Matrix>,
+    /// W = Aᵀ·Ψ accumulated (n×l).
+    w: Matrix,
+    /// Z = Yᵀ·Ψ accumulated (k×l) — lets refresh form X = Qᵀ·Ψ = Sᵀ·Z
+    /// without storing Ψ or revisiting anything.
+    z: Matrix,
+    rows_absorbed: usize,
+    version: u64,
+}
+
+impl StreamingSketch {
+    /// A fresh sketch over matrices with `cols` columns. Ω is drawn
+    /// here, from the same [`OMEGA_STREAM`] as [`algorithm9`], so the
+    /// streamed factors target the same sketch as a batch run.
+    pub fn new(ctx: &Context, cols: usize, opts: StreamingOpts) -> Self {
+        let k = opts.k();
+        let l = opts.l();
+        assert!(opts.rank >= 1 && k < cols, "need 0 < rank with 2·rank+1 < the column count");
+        assert!(l >= k, "need l ≥ k for a stable coupling solve");
+        let mut rng = omega_rng(&opts.ts);
+        let omega = ctx.driver(|| Matrix::from_fn(cols, k, |_, _| rng.gauss()));
+        StreamingSketch {
+            omega,
+            y: None,
+            r: None,
+            w: Matrix::zeros(cols, l),
+            z: Matrix::zeros(k, l),
+            rows_absorbed: 0,
+            version: 0,
+            opts,
+        }
+    }
+
+    /// Total rows absorbed so far.
+    pub fn rows_absorbed(&self) -> usize {
+        self.rows_absorbed
+    }
+
+    /// Bumped once per absorption — the staleness token [`SvdService`]
+    /// checks queries against.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Column count every slab must match.
+    pub fn cols(&self) -> usize {
+        self.omega.rows()
+    }
+
+    /// Absorb one row slab (any [`DistOp`] backend — dense row slabs,
+    /// CSR, blocks): ONE fused traversal of the slab, driver-side
+    /// accumulator updates, one small R-merge. Never touches previously
+    /// absorbed rows; charges the
+    /// [`Metrics::sketch_updates`](crate::dist::Metrics) /
+    /// `rows_absorbed` ledger.
+    pub fn absorb(&mut self, ctx: &Context, be: &dyn Compute, slab: &dyn DistOp) {
+        assert_eq!(slab.cols(), self.omega.rows(), "slab column count differs from the sketch");
+        let ns = slab.rows();
+        assert!(ns > 0, "cannot absorb an empty slab");
+        let l = self.opts.l();
+
+        // Ψ rows for this slab's GLOBAL row range — slab boundaries do
+        // not change what any individual row is sketched against.
+        let psi = psi_slab(ctx, &self.opts.ts, self.rows_absorbed, ns, l, self.opts.rows_per_part);
+
+        // the one traversal of the new rows
+        let (y_slab, w_slab) = slab.fused_two_sided_sketch(ctx, be, &self.omega, &psi);
+
+        // accumulators: W += Aₛᵀ·Ψₛ, Z += yₛᵀ·Ψₛ (both small, driver)
+        let z_slab = y_slab.rmatmul_small(ctx, be, &psi);
+        ctx.driver(|| {
+            self.w.add_assign(&w_slab);
+            self.z.add_assign(&z_slab);
+        });
+
+        // single TSQR R-merge of the slab's contribution
+        let r_slab = tsqr_r(ctx, &y_slab);
+        let merged = match self.r.take() {
+            Some(r) => ctx.driver(|| thin_qr(&r.vstack(&r_slab)).r),
+            None => r_slab,
+        };
+        self.r = Some(merged);
+
+        // grow Y without moving or re-reading any existing slab
+        self.y = Some(match self.y.take() {
+            Some(y) => y.vstack(&y_slab),
+            None => y_slab,
+        });
+        self.rows_absorbed += ns;
+        self.version += 1;
+        ctx.add_sketch_update(ns);
+    }
+
+    /// Factors of everything absorbed so far, reconstituted from the
+    /// sketch state alone: `Q = Y·S` implicitly from the running R
+    /// (double orthonormalization, as in the batch driver), then
+    /// `X = Qᵀ·Ψ = (S₁·S₂)ᵀ·Z` from the accumulator — no stored Ψ, no
+    /// pass over A, absorbed rows untouched.
+    pub fn refresh(&self, ctx: &Context, be: &dyn Compute) -> (DistSvd, OnePassDiagnostics) {
+        let y = self.y.as_ref().expect("refresh before any slab was absorbed");
+        let r = self.r.as_ref().expect("refresh before any slab was absorbed");
+        let wp = self.opts.ts.working_precision;
+        let (k, l) = (self.opts.k(), self.opts.l());
+
+        let s1 = prefix_solve(ctx, r, wp);
+        let q1 = y.matmul_small(ctx, be, &s1);
+        let s2 = prefix_solve(ctx, &tsqr_r(ctx, &q1), wp);
+        let q = q1.matmul_small(ctx, be, &s2);
+
+        // Q = Y·(S₁·S₂) exactly, so Qᵀ·Ψ = (S₁·S₂)ᵀ·(Yᵀ·Ψ) = S₁₂ᵀ·Z
+        let x = ctx.driver(|| blas::matmul_tn(&blas::matmul(&s1, &s2), &self.z));
+        finish_one_pass(ctx, be, &q, &x, &self.w, self.opts.rank, k, l, wp)
+    }
+}
+
+/// Why a [`SvdService`] query could not be answered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Rows were absorbed after the last [`SvdService::refresh`]; the
+    /// cached factors cover only `rows_factored` of the
+    /// `rows_absorbed` rows. Refresh and retry.
+    Stale { rows_absorbed: usize, rows_factored: usize },
+    /// No factorization has been computed yet (absorb, then refresh).
+    Empty,
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Stale { rows_absorbed, rows_factored } => write!(
+                f,
+                "factors are stale: {rows_factored} rows factored, {rows_absorbed} absorbed — refresh() first"
+            ),
+            ServiceError::Empty => write!(f, "no factors yet: absorb a slab and refresh() first"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+struct CachedFactors {
+    svd: DistSvd,
+    diag: OnePassDiagnostics,
+    version: u64,
+    rows_factored: usize,
+}
+
+/// A resident decomposition over a [`StreamingSketch`]: queries are
+/// answered from the cached factors (no recomputation per query), and
+/// any absorption since the last [`refresh`](SvdService::refresh) turns
+/// every query into a typed [`ServiceError::Stale`] instead of a
+/// silently-outdated answer. Query traffic is charged to the
+/// [`Metrics::queries_served`](crate::dist::Metrics) ledger — batched
+/// calls charge their batch width.
+pub struct SvdService {
+    sketch: StreamingSketch,
+    cached: Option<CachedFactors>,
+}
+
+impl SvdService {
+    pub fn new(ctx: &Context, cols: usize, opts: StreamingOpts) -> Self {
+        SvdService { sketch: StreamingSketch::new(ctx, cols, opts), cached: None }
+    }
+
+    /// The underlying sketch (rows absorbed, version, …).
+    pub fn sketch(&self) -> &StreamingSketch {
+        &self.sketch
+    }
+
+    /// Absorb one row slab — see [`StreamingSketch::absorb`]. The
+    /// cached factors (if any) become stale until the next refresh.
+    pub fn absorb(&mut self, ctx: &Context, be: &dyn Compute, slab: &dyn DistOp) {
+        self.sketch.absorb(ctx, be, slab);
+    }
+
+    /// Recompute and cache the factors from the current sketch state
+    /// (no pass over absorbed data), clearing staleness.
+    pub fn refresh(&mut self, ctx: &Context, be: &dyn Compute) -> &DistSvd {
+        let (svd, diag) = self.sketch.refresh(ctx, be);
+        self.cached = Some(CachedFactors {
+            svd,
+            diag,
+            version: self.sketch.version(),
+            rows_factored: self.sketch.rows_absorbed(),
+        });
+        &self.cached.as_ref().unwrap().svd
+    }
+
+    fn fresh(&self) -> Result<&CachedFactors, ServiceError> {
+        let c = self.cached.as_ref().ok_or(ServiceError::Empty)?;
+        if c.version != self.sketch.version() {
+            return Err(ServiceError::Stale {
+                rows_absorbed: self.sketch.rows_absorbed(),
+                rows_factored: c.rows_factored,
+            });
+        }
+        Ok(c)
+    }
+
+    /// The cached factors + one-pass diagnostics.
+    pub fn factors(&self) -> Result<(&DistSvd, &OnePassDiagnostics), ServiceError> {
+        let c = self.fresh()?;
+        Ok((&c.svd, &c.diag))
+    }
+
+    /// Project one vector (length n) onto the right singular basis:
+    /// `Vᵀ·x`. Charges one served query.
+    pub fn project(&self, ctx: &Context, x: &[f64]) -> Result<Vec<f64>, ServiceError> {
+        let c = self.fresh()?;
+        assert_eq!(x.len(), c.svd.v.rows(), "query length differs from the column count");
+        ctx.add_queries_served(1);
+        Ok(ctx.driver(|| blas::gemv_t(&c.svd.v, x)))
+    }
+
+    /// Batched projection: `xs` is n×q (one query per column), answered
+    /// as ONE driver product `Vᵀ·xs` (k×q). Charges q served queries.
+    pub fn project_batch(&self, ctx: &Context, xs: &Matrix) -> Result<Matrix, ServiceError> {
+        let c = self.fresh()?;
+        assert_eq!(xs.rows(), c.svd.v.rows(), "query length differs from the column count");
+        ctx.add_queries_served(xs.cols());
+        Ok(ctx.driver(|| blas::matmul_tn(&c.svd.v, xs)))
+    }
+
+    /// Reconstruct rows `[r0, r1)` of the absorbed matrix from the
+    /// factors: `U[r0..r1]·Σ·Vᵀ`. Charges `r1 − r0` served queries.
+    pub fn reconstruct_rows(
+        &self,
+        ctx: &Context,
+        r0: usize,
+        r1: usize,
+    ) -> Result<Matrix, ServiceError> {
+        let c = self.fresh()?;
+        assert!(r0 < r1 && r1 <= c.svd.u.rows(), "row range out of bounds");
+        ctx.add_queries_served(r1 - r0);
+        let mut us = c.svd.u.rows_slice(r0, r1);
+        Ok(ctx.driver(|| {
+            for (j, &sj) in c.svd.s.iter().enumerate() {
+                us.scale_col(j, sj);
+            }
+            blas::matmul_nt(&us, &c.svd.v)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::DistBlockMatrix;
+    use crate::runtime::compute::NativeCompute;
+
+    /// An exactly rank-`sigma.len()` m×n matrix with the given spectrum.
+    fn lowrank_dense(m: usize, n: usize, sigma: &[f64], seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let r = sigma.len();
+        let q1 = thin_qr(&Matrix::from_fn(m, r, |_, _| rng.gauss())).q;
+        let q2 = thin_qr(&Matrix::from_fn(n, r, |_, _| rng.gauss())).q;
+        let mut qs = q1.clone();
+        for (j, &s) in sigma.iter().enumerate() {
+            qs.scale_col(j, s);
+        }
+        blas::matmul_nt(&qs, &q2)
+    }
+
+    fn orth_err(q: &Matrix) -> f64 {
+        blas::matmul_tn(q, q).sub(&Matrix::eye(q.cols())).max_abs()
+    }
+
+    #[test]
+    fn omega_psi_and_root_streams_are_pairwise_distinct() {
+        // the collision class this PR fixes: consumers drawing from the
+        // raw root stream all see the same bits at equal seeds
+        let ts = TallSkinnyOpts::default();
+        let mut root = Rng::seed(ts.seed);
+        let mut om = omega_rng(&ts);
+        let mut psi0 = psi_row_rng(&ts, 0);
+        let mut psi1 = psi_row_rng(&ts, 1);
+        let draws = [root.next_u64(), om.next_u64(), psi0.next_u64(), psi1.next_u64()];
+        for i in 0..draws.len() {
+            for j in (i + 1)..draws.len() {
+                assert_ne!(draws[i], draws[j], "streams {i} and {j} collide");
+            }
+        }
+        // and the streams are reproducible
+        assert_eq!(omega_rng(&ts).next_u64(), draws[1]);
+    }
+
+    #[test]
+    fn psi_rows_do_not_depend_on_slab_boundaries() {
+        let ctx = Context::new(4);
+        let ts = TallSkinnyOpts::default();
+        let whole = psi_slab(&ctx, &ts, 0, 9, 5, 4).collect(&ctx);
+        let a = psi_slab(&ctx, &ts, 3, 3, 5, 4).collect(&ctx);
+        let b = psi_slab(&ctx, &ts, 6, 3, 5, 4).collect(&ctx);
+        assert_eq!(whole.slice(3, 6, 0, 5).data(), a.data());
+        assert_eq!(whole.slice(6, 9, 0, 5).data(), b.data());
+    }
+
+    #[test]
+    fn one_pass_recovers_exact_lowrank_factors() {
+        let ctx = Context::new(6);
+        let sigma = [5.0, 3.0, 1.5, 0.7];
+        let a = lowrank_dense(37, 23, &sigma, 901);
+        let d = DistRowMatrix::from_matrix(&a, 8);
+        let (out, diag) = algorithm9(&ctx, &NativeCompute, &d, &StreamingOpts::new(4));
+
+        assert_eq!(out.s.len(), 4);
+        for (j, &sj) in sigma.iter().enumerate() {
+            assert!((out.s[j] - sj).abs() / sj < 1e-9, "σ_{j}: {} vs {sj}", out.s[j]);
+        }
+        let u = out.u.collect(&ctx);
+        assert!(orth_err(&u) < 1e-13, "U orth {}", orth_err(&u));
+        assert!(orth_err(&out.v) < 1e-13, "V orth {}", orth_err(&out.v));
+        let mut us = u.clone();
+        for (j, &sj) in out.s.iter().enumerate() {
+            us.scale_col(j, sj);
+        }
+        let recon = blas::matmul_nt(&us, &out.v);
+        assert!(recon.sub(&a).max_abs() < 1e-9 * sigma[0], "recon {}", recon.sub(&a).max_abs());
+        // the sketch of an exactly rank-4 matrix keeps exactly 4 columns
+        assert_eq!(diag.cross_rank, 4);
+        assert_eq!(diag.sketch_cols, 9);
+        assert_eq!(diag.coupling_cols, 19);
+        assert!(diag.cross_cond >= 1.0 && diag.cross_cond < 1e6, "cond {}", diag.cross_cond);
+    }
+
+    #[test]
+    fn one_pass_reads_block_storage_exactly_once() {
+        let ctx = Context::new(6);
+        let a = lowrank_dense(40, 21, &[4.0, 2.0, 1.0], 902);
+        let blocks = DistBlockMatrix::from_matrix(&a, 16, 8);
+        ctx.reset_metrics();
+        let (out, _) = algorithm9(&ctx, &NativeCompute, &blocks, &StreamingOpts::new(3));
+        let m = ctx.metrics();
+        assert_eq!(m.a_passes, 1, "one-pass driver must traverse A exactly once");
+        assert_eq!(out.s.len(), 3);
+    }
+
+    #[test]
+    fn streaming_absorption_matches_batch_one_pass() {
+        let ctx = Context::new(6);
+        let sigma = [6.0, 2.5, 1.0, 0.4];
+        let a = lowrank_dense(44, 19, &sigma, 903);
+        let opts = StreamingOpts::new(4);
+
+        let batch = DistRowMatrix::from_matrix(&a, 8);
+        let (bref, _) = algorithm9(&ctx, &NativeCompute, &batch, &opts);
+
+        ctx.reset_metrics();
+        let mut sk = StreamingSketch::new(&ctx, 19, opts);
+        for (r0, r1) in [(0usize, 13usize), (13, 30), (30, 44)] {
+            let slab = DistRowMatrix::from_matrix(&a.slice(r0, r1, 0, 19), 8);
+            sk.absorb(&ctx, &NativeCompute, &slab);
+        }
+        let (out, diag) = sk.refresh(&ctx, &NativeCompute);
+
+        let m = ctx.metrics();
+        assert_eq!(m.sketch_updates, 3);
+        assert_eq!(m.rows_absorbed, 44);
+        // dense row slabs are derived-data: nothing at rest was re-read,
+        // and refresh adds no passes either
+        assert_eq!(m.a_passes, 0, "absorption/refresh must not re-read rows");
+
+        assert_eq!(out.s.len(), bref.s.len());
+        for j in 0..out.s.len() {
+            assert!(
+                (out.s[j] - bref.s[j]).abs() / bref.s[j] < 1e-8,
+                "σ_{j}: stream {} vs batch {}",
+                out.s[j],
+                bref.s[j]
+            );
+        }
+        let u = out.u.collect(&ctx);
+        assert!(orth_err(&u) < 1e-13);
+        let mut us = u.clone();
+        for (j, &sj) in out.s.iter().enumerate() {
+            us.scale_col(j, sj);
+        }
+        let recon = blas::matmul_nt(&us, &out.v);
+        assert!(recon.sub(&a).max_abs() < 1e-8 * sigma[0], "recon {}", recon.sub(&a).max_abs());
+        assert_eq!(diag.cross_rank, 4);
+    }
+
+    #[test]
+    fn service_staleness_is_typed_and_queries_are_charged() {
+        let ctx = Context::new(4);
+        let a = lowrank_dense(30, 17, &[3.0, 1.2], 904);
+        let mut svc = SvdService::new(&ctx, 17, StreamingOpts::new(2));
+
+        assert_eq!(svc.factors().unwrap_err(), ServiceError::Empty);
+
+        let top = DistRowMatrix::from_matrix(&a.slice(0, 18, 0, 17), 8);
+        svc.absorb(&ctx, &NativeCompute, &top);
+        assert_eq!(svc.factors().unwrap_err(), ServiceError::Empty);
+        svc.refresh(&ctx, &NativeCompute);
+        let (f, diag) = svc.factors().expect("fresh factors");
+        assert_eq!(f.s.len(), 2);
+        assert_eq!(diag.sketch_cols, 5);
+
+        ctx.reset_metrics();
+        let x = vec![1.0; 17];
+        let p = svc.project(&ctx, &x).unwrap();
+        assert_eq!(p.len(), 2);
+        let xs = Matrix::from_fn(17, 3, |i, j| (i * 3 + j) as f64);
+        let pb = svc.project_batch(&ctx, &xs).unwrap();
+        assert_eq!(pb.shape(), (2, 3));
+        let rows = svc.reconstruct_rows(&ctx, 2, 6).unwrap();
+        assert_eq!(rows.shape(), (4, 17));
+        assert_eq!(ctx.metrics().queries_served, 1 + 3 + 4);
+
+        // absorbing more rows makes every query typed-stale
+        let rest = DistRowMatrix::from_matrix(&a.slice(18, 30, 0, 17), 8);
+        svc.absorb(&ctx, &NativeCompute, &rest);
+        let stale = ServiceError::Stale { rows_absorbed: 30, rows_factored: 18 };
+        assert_eq!(svc.factors().unwrap_err(), stale);
+        assert_eq!(svc.project(&ctx, &x).unwrap_err(), stale);
+        assert_eq!(svc.reconstruct_rows(&ctx, 0, 4).unwrap_err(), stale);
+
+        // refresh clears it, and the new factors cover all 30 rows
+        svc.refresh(&ctx, &NativeCompute);
+        let (f, _) = svc.factors().expect("refreshed factors");
+        assert_eq!(f.u.rows(), 30);
+        let recon = svc.reconstruct_rows(&ctx, 0, 30).unwrap();
+        assert!(recon.sub(&a).max_abs() < 1e-9 * 3.0, "recon {}", recon.sub(&a).max_abs());
+    }
+
+    #[test]
+    fn batch_projection_matches_single_projection_bits() {
+        let ctx = Context::new(4);
+        let a = lowrank_dense(26, 15, &[2.0, 0.9], 905);
+        let mut svc = SvdService::new(&ctx, 15, StreamingOpts::new(2));
+        svc.absorb(&ctx, &NativeCompute, &DistRowMatrix::from_matrix(&a, 8));
+        svc.refresh(&ctx, &NativeCompute);
+        let xs = Matrix::from_fn(15, 4, |i, j| ((i + 1) * (j + 2)) as f64 / 7.0);
+        let pb = svc.project_batch(&ctx, &xs).unwrap();
+        for j in 0..4 {
+            let single = svc.project(&ctx, &xs.col(j)).unwrap();
+            for i in 0..single.len() {
+                assert_eq!(pb[(i, j)], single[i], "batched projection differs at ({i}, {j})");
+            }
+        }
+    }
+}

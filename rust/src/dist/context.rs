@@ -655,6 +655,26 @@ impl Context {
     pub(crate) fn set_final_rank(&self, rank: usize) {
         self.metrics_guard().final_rank = rank;
     }
+
+    /// Charge `n` verifier probe matvecs issued outside an adaptive
+    /// round (the `probe_matvecs` ledger — see [`Metrics`]).
+    pub(crate) fn add_probe_matvecs(&self, n: usize) {
+        self.metrics_guard().add_probe_matvecs(n);
+    }
+
+    /// Record one streaming-slab absorption covering `rows` new rows
+    /// (the `sketch_updates` / `rows_absorbed` ledger — see
+    /// [`Metrics`]).
+    pub(crate) fn add_sketch_update(&self, rows: usize) {
+        self.metrics_guard().add_sketch_update(rows);
+    }
+
+    /// Record `n` queries the resident SVD service answered from its
+    /// cached decomposition (the `queries_served` ledger — see
+    /// [`Metrics`]).
+    pub(crate) fn add_queries_served(&self, n: usize) {
+        self.metrics_guard().add_queries_served(n);
+    }
 }
 
 /// Stamp a [`DsvdError::TaskPanicked`] with its stage/task coordinates

@@ -257,6 +257,22 @@ impl DistRowMatrix {
         DistRowMatrix { parts, rows: self.rows, cols: self.cols + other.cols }
     }
 
+    /// Row-append a distributed factor: `[self; other]`, the slab-append
+    /// path of the streaming sketch (`algs::streaming`). The appended
+    /// matrix reuses both inputs' slabs as-is — `other`'s slabs are
+    /// renumbered below `self`'s rows, no task runs, no data moves, and
+    /// critically no existing slab is re-read: absorbing a new row slab
+    /// into a sketch must never revisit absorbed rows (the one-pass
+    /// ledger invariant `tests/streaming.rs` pins).
+    pub fn vstack(&self, other: &DistRowMatrix) -> DistRowMatrix {
+        assert_eq!(self.cols, other.cols, "vstack: column-count mismatch");
+        let mut parts = self.parts.clone();
+        for p in &other.parts {
+            parts.push(RowPartition { row_start: self.rows + p.row_start, data: p.data.clone() });
+        }
+        DistRowMatrix { parts, rows: self.rows + other.rows, cols: self.cols }
+    }
+
     /// Subtract a co-partitioned distributed factor in place (one task
     /// per slab pair) — the projection step `Y ← Y − Q·(QᵀY)` of the
     /// adaptive range finder, kept distributed end-to-end.
@@ -511,6 +527,55 @@ impl DistRowMatrix {
         )
         .unwrap_or_else(|| Matrix::zeros(self.cols, w.cols()));
         (y, z)
+    }
+
+    /// The one-pass two-sided sketch `(Y, W) = (A·Ω, Aᵀ·Ψ)` — the
+    /// row-slab face of [`super::DistOp::fused_two_sided_sketch`]. Each
+    /// partition task streams its rows once, emitting its Y slab
+    /// (`slab·Ω`) and its n×l W-partial (`slabᵀ·Ψ_slab`) together; the
+    /// partials treeAggregate exactly like
+    /// [`DistRowMatrix::rmatmul_small`]'s, so the result is
+    /// bit-identical to the unfused two-call pair.
+    pub fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        assert_eq!(self.cols, omega.rows(), "fused_two_sided_sketch: cols vs Ω rows");
+        assert_eq!(self.rows, psi.rows(), "fused_two_sided_sketch: rows vs Ψ rows");
+        let tasks: Vec<Box<dyn FnOnce() -> (RowPartition, Matrix) + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let y = be.matmul(&p.data, omega);
+                    let qs = psi.rows_slice(p.row_start, p.row_start + p.data.rows());
+                    let w = be.matmul_tn(&p.data, &qs);
+                    (RowPartition { row_start: p.row_start, data: y }, w)
+                }) as Box<dyn FnOnce() -> (RowPartition, Matrix) + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut parts = Vec::with_capacity(results.len());
+        let mut partials = Vec::with_capacity(results.len());
+        for (part, w) in results {
+            parts.push(part);
+            partials.push(w);
+        }
+        let y = DistRowMatrix { parts, rows: self.rows, cols: omega.cols() };
+        let w = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, psi.cols()));
+        (y, w)
     }
 
     /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))`: one
@@ -1934,6 +1999,100 @@ impl DistBlockMatrix {
         })
     }
 
+    /// The one-pass two-sided sketch `(Y, W) = (A·Ω, Aᵀ·Ψ)` with every
+    /// grid block accessed exactly **once** — the block-matrix face of
+    /// [`super::DistOp::fused_two_sided_sketch`]. Unlike
+    /// [`DistBlockMatrix::fused_power_step`], the right-hand factor Ψ is
+    /// independent of Y, so even on wide grids each block's view serves
+    /// both products inside one task with no second sweep dependency:
+    /// the block's Y contribution (`block·Ω_strip`) and W partial
+    /// (`blockᵀ·Ψ_rows`) are emitted together. Per-block-column partials
+    /// reduce through the same fan-in-chunked fold as
+    /// [`DistBlockMatrix::rmatmul_small`], so the result is
+    /// bit-identical to the unfused `matmul_small` + `rmatmul_small`
+    /// pair for dense grids and for deterministic generators.
+    pub fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        expect_spill(self.try_fused_two_sided_sketch(ctx, be, omega, psi))
+    }
+
+    /// Fallible [`DistBlockMatrix::fused_two_sided_sketch`] — spill
+    /// faults surface as [`SpillError`] instead of panicking.
+    pub fn try_fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> Result<(DistRowMatrix, Matrix), SpillError> {
+        assert_eq!(self.cols, omega.rows(), "fused_two_sided_sketch: block cols vs Ω rows");
+        assert_eq!(self.rows, psi.rows(), "fused_two_sided_sketch: block rows vs Ψ rows");
+        self.with_spill_ledger(ctx, || {
+            let k = omega.cols();
+            let l = psi.cols();
+            let cb = &self.col_bounds;
+            let rb = &self.row_bounds;
+            let nbc = cb.len() - 1;
+            let nbr = rb.len() - 1;
+            let pf = ctx.pipelined();
+            ctx.add_pass(nbr * nbc);
+
+            type SketchOut = Result<(RowPartition, Vec<Matrix>), SpillError>;
+            let tasks: Vec<Box<dyn FnOnce() -> SketchOut + Send + '_>> = self
+                .grid
+                .iter()
+                .enumerate()
+                .map(|(bi, row_blocks)| {
+                    let r0 = rb[bi];
+                    let r1 = rb[bi + 1];
+                    Box::new(move || {
+                        let qs = psi.rows_slice(r0, r1);
+                        let mut acc = Matrix::zeros(r1 - r0, k);
+                        let mut partials = Vec::with_capacity(row_blocks.len());
+                        for (bj, b) in row_blocks.iter().enumerate() {
+                            // double buffering: page the next cell in
+                            // behind this cell's acquisition
+                            if pf {
+                                if let Some(next) = row_blocks.get(bj + 1) {
+                                    next.prefetch_hint();
+                                }
+                            }
+                            // one view per stored cell: implicit cells
+                            // run their generator once, spilled cells
+                            // page in once, and both products are
+                            // served before the view drops
+                            let v = b.try_view()?;
+                            let ws = omega.slice(cb[bj], cb[bj + 1], 0, k);
+                            acc.add_assign(&v.matmul(be, &ws));
+                            partials.push(v.matmul_tn(be, &qs));
+                        }
+                        Ok((RowPartition { row_start: r0, data: acc }, partials))
+                    }) as Box<dyn FnOnce() -> SketchOut + Send + '_>
+                })
+                .collect();
+            let results: Result<Vec<(RowPartition, Vec<Matrix>)>, SpillError> =
+                ctx.stage(tasks).into_iter().collect();
+
+            let mut parts = Vec::with_capacity(nbr);
+            let mut by_col: Vec<Vec<Matrix>> =
+                (0..nbc).map(|_| Vec::with_capacity(nbr)).collect();
+            for (part, partials) in results? {
+                parts.push(part);
+                for (bj, p) in partials.into_iter().enumerate() {
+                    by_col[bj].push(p);
+                }
+            }
+            let y = DistRowMatrix { parts, rows: self.rows, cols: k };
+            let w = self.reduce_column_strips(ctx, by_col, l);
+            Ok((y, w))
+        })
+    }
+
     /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))` — one
     /// grid traversal instead of the `matvec` + `rmatvec` pair, the
     /// step the Krylov baseline issues per basis vector. Implicit cells
@@ -2294,6 +2453,41 @@ mod tests {
         let mut dm = da.clone();
         dm.sub_assign(&ctx, &DistRowMatrix::from_matrix(&c, 8));
         assert!(dm.collect(&ctx).sub(&a.sub(&c)).max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn vstack_appends_slabs_and_matches_dense() {
+        let ctx = Context::new(4);
+        let a = randmat(25, 17, 5);
+        let b = randmat(26, 9, 5);
+        let da = DistRowMatrix::from_matrix(&a, 8);
+        let db = DistRowMatrix::from_matrix(&b, 4);
+
+        let cat = da.vstack(&db);
+        assert_eq!(cat.rows(), 26);
+        assert_eq!(cat.cols(), 5);
+        // dense reference: vertical concatenation
+        let mut want = Matrix::zeros(26, 5);
+        for i in 0..17 {
+            want.row_mut(i).copy_from_slice(a.row(i));
+        }
+        for i in 0..9 {
+            want.row_mut(17 + i).copy_from_slice(b.row(i));
+        }
+        assert_eq!(cat.collect(&ctx), want);
+        // pure slab append: both inputs' slabs survive untouched, the
+        // appended ones renumbered past self's rows — and no stage ran
+        assert_eq!(cat.num_partitions(), da.num_partitions() + db.num_partitions());
+        assert_eq!(cat.parts[da.num_partitions()].row_start, 17);
+        assert_eq!(ctx.metrics().tasks, 0, "vstack must not launch tasks");
+    }
+
+    #[test]
+    #[should_panic(expected = "column-count mismatch")]
+    fn vstack_rejects_mismatched_cols() {
+        let a = DistRowMatrix::from_matrix(&randmat(27, 10, 3), 4);
+        let b = DistRowMatrix::from_matrix(&randmat(28, 10, 4), 4);
+        let _ = a.vstack(&b);
     }
 
     #[test]

@@ -182,6 +182,19 @@ pub struct Metrics {
     /// Rank the adaptive run settled on (columns of the final basis
     /// after the working-precision discard); 0 for fixed-rank runs.
     pub final_rank: usize,
+    /// Slab absorptions the streaming sketch performed this window
+    /// (one per `StreamingSketch::absorb`, each a single TSQR R-merge
+    /// of the new slab's contribution — absorbed rows are never
+    /// revisited).
+    pub sketch_updates: usize,
+    /// Total rows the streaming sketch absorbed this window (the sum of
+    /// slab heights over `sketch_updates` absorptions).
+    pub rows_absorbed: usize,
+    /// Queries the resident [`SvdService`](crate::algs::streaming)
+    /// answered from the cached decomposition this window (each
+    /// projected/reconstructed vector counts as one query; batched
+    /// calls charge their batch width).
+    pub queries_served: usize,
 }
 
 /// Per-stage tallies the fault-tolerant stage loop hands to
@@ -384,6 +397,26 @@ impl Metrics {
         self.final_rank = rank;
     }
 
+    /// Charge `n` verifier probe matvecs outside an adaptive round —
+    /// `verify::spectral_norm` charges one per power iteration so BENCH
+    /// cost columns count verification work uniformly with the adaptive
+    /// estimator's probes.
+    pub(crate) fn add_probe_matvecs(&mut self, n: usize) {
+        self.probe_matvecs += n;
+    }
+
+    /// Fold one streaming-slab absorption into the window: the sketch
+    /// took one rank-preserving update covering `rows` new rows.
+    pub(crate) fn add_sketch_update(&mut self, rows: usize) {
+        self.sketch_updates += 1;
+        self.rows_absorbed += rows;
+    }
+
+    /// Fold `n` answered service queries into the window.
+    pub(crate) fn add_queries_served(&mut self, n: usize) {
+        self.queries_served += n;
+    }
+
     /// Record a driver-bound gather (e.g. `collect`): the whole cluster
     /// stalls while the bytes drain to the driver, so the per-byte
     /// charge lands on the wall clock directly.
@@ -580,6 +613,24 @@ mod tests {
         // the adaptive ledger is bookkeeping, not time or passes
         assert_eq!(m.cpu_time, 0.0);
         assert_eq!(m.a_passes, 0);
+    }
+
+    #[test]
+    fn streaming_and_probe_ledgers_accumulate() {
+        let mut m = Metrics::default();
+        m.add_sketch_update(512);
+        m.add_sketch_update(256);
+        m.add_queries_served(3);
+        m.add_queries_served(1);
+        m.add_probe_matvecs(100);
+        assert_eq!(m.sketch_updates, 2);
+        assert_eq!(m.rows_absorbed, 768);
+        assert_eq!(m.queries_served, 4);
+        assert_eq!(m.probe_matvecs, 100);
+        // the streaming ledger is bookkeeping, not time or passes
+        assert_eq!(m.cpu_time, 0.0);
+        assert_eq!(m.a_passes, 0);
+        assert_eq!(m.adaptive_rounds, 0, "probe charges must not fabricate rounds");
     }
 
     #[test]

@@ -144,6 +144,36 @@ pub trait DistOp {
     ) -> Vec<Matrix> {
         qs.iter().map(|q| self.rmatmul_small(ctx, be, q)).collect()
     }
+
+    /// The one-pass **two-sided sketch** `(Y, W) = (A·Ω, Aᵀ·Ψ)` —
+    /// the product pair of the HMT single-pass SVD (arXiv 0909.4061
+    /// §5.5, `algs::streaming::algorithm9`). Unlike
+    /// [`fused_power_step`](DistOp::fused_power_step), the right-hand
+    /// factor Ψ is an *independent* test matrix, not `A·Ω` itself, so
+    /// both sketches can be served from a **single traversal** of the
+    /// stored operator: per grid block, the local Y-panel and the
+    /// local W-partial are computed inside the same task. That makes
+    /// one pass over A the whole data cost of a factorization — the
+    /// regime for data too large to revisit.
+    ///
+    /// `omega` is driver-held (n×k); `psi` is distributed row-conformal
+    /// with A (m×l). Returns Y distributed in A's row tiling and W
+    /// (n×l) on the driver. The default is the two-call fallback (two
+    /// passes); storage-aware layouts override it with a genuinely
+    /// single-pass plan that must stay bit-identical (pinned by
+    /// `tests/streaming.rs`), measured by the pass ledger: one pass
+    /// fused vs two unfused.
+    fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        let y = self.matmul_small(ctx, be, omega);
+        let w = self.rmatmul_small(ctx, be, psi);
+        (y, w)
+    }
 }
 
 /// Ablation wrapper that pins an operator to the trait's **unfused**
@@ -185,8 +215,9 @@ impl<'a> DistOp for UnfusedOp<'a> {
         self.0.rmatvec(ctx, y)
     }
     // fused_power_step / fused_normal_matvec / fused_normal_matvec_sub /
-    // *_batch deliberately NOT forwarded: the trait defaults decompose
-    // them into the unfused per-product traversals above.
+    // fused_two_sided_sketch / *_batch deliberately NOT forwarded: the
+    // trait defaults decompose them into the unfused per-product
+    // traversals above.
 }
 
 impl DistOp for DistBlockMatrix {
@@ -257,6 +288,16 @@ impl DistOp for DistBlockMatrix {
     ) -> Vec<Matrix> {
         DistBlockMatrix::rmatmul_small_batch(self, ctx, be, qs)
     }
+
+    fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        DistBlockMatrix::fused_two_sided_sketch(self, ctx, be, omega, psi)
+    }
 }
 
 impl DistOp for DistRowMatrix {
@@ -310,6 +351,16 @@ impl DistOp for DistRowMatrix {
     ) -> (Vec<f64>, Vec<f64>) {
         DistRowMatrix::fused_normal_matvec_sub(self, ctx, x, c)
     }
+
+    fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        DistRowMatrix::fused_two_sided_sketch(self, ctx, be, omega, psi)
+    }
     // the batched defaults are already optimal for resident row slabs:
     // every partition is dense in memory, so k traversals read the same
     // bytes k times whether or not they share a stage
@@ -354,9 +405,10 @@ impl DistOp for DistRowMatrixF32 {
     ) -> (DistRowMatrix, Matrix) {
         DistRowMatrixF32::fused_power_step(self, ctx, be, w)
     }
-    // fused_normal_matvec / *_sub / the batched paths keep the trait
-    // defaults: resident f32 slabs re-read the same bytes either way,
-    // exactly like the dense row layout's rationale above
+    // fused_normal_matvec / *_sub / fused_two_sided_sketch / the
+    // batched paths keep the trait defaults: resident f32 slabs re-read
+    // the same bytes either way, exactly like the dense row layout's
+    // rationale above
 }
 
 impl DistOp for DistRowCsrMatrix {
@@ -425,6 +477,16 @@ impl DistOp for DistRowCsrMatrix {
         qs: &[&DistRowMatrix],
     ) -> Vec<Matrix> {
         DistRowCsrMatrix::rmatmul_small_batch(self, ctx, be, qs)
+    }
+
+    fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        DistRowCsrMatrix::fused_two_sided_sketch(self, ctx, be, omega, psi)
     }
 }
 
@@ -518,6 +580,41 @@ mod tests {
             let want = op.matmul_small(&ctx, &be, w);
             assert_eq!(got.collect(&ctx).data(), want.collect(&ctx).data());
         }
+    }
+
+    /// Through the trait object, the one-pass two-sided sketch must
+    /// reproduce the unfused product pair exactly and cost a single
+    /// ledger pass where the `UnfusedOp` fallback costs two.
+    #[test]
+    fn two_sided_sketch_contract_through_the_trait_object() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = randmat(81, 40, 11);
+        let omega = randmat(82, 11, 5);
+        let psi = DistRowMatrix::from_matrix(&randmat(83, 40, 7), 9);
+        let block = DistBlockMatrix::from_matrix(&a, 9, 4);
+        let op: &dyn DistOp = &block;
+        let unfused = UnfusedOp(op);
+
+        ctx.reset_metrics();
+        let (yf, wf) = op.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+        let fused_passes = ctx.take_metrics().a_passes;
+        ctx.reset_metrics();
+        let (yu, wu) = unfused.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+        let unfused_passes = ctx.take_metrics().a_passes;
+        assert_eq!(yf.collect(&ctx).data(), yu.collect(&ctx).data());
+        assert_eq!(wf.data(), wu.data());
+        assert_eq!(fused_passes, 1);
+        assert_eq!(unfused_passes, 2);
+
+        // the row layout agrees with the block layout within roundoff
+        let row: &dyn DistOp = &DistRowMatrix::from_matrix(&a, 7);
+        let (yr, wr) = row.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+        let psi_local = psi.collect(&ctx);
+        assert!(yr.collect(&ctx).sub(&blas::matmul(&a, &omega)).max_abs() < 1e-12);
+        assert!(wr.sub(&blas::matmul_tn(&a, &psi_local)).max_abs() < 1e-12);
+        assert!(yf.collect(&ctx).sub(&blas::matmul(&a, &omega)).max_abs() < 1e-12);
+        assert!(wf.sub(&blas::matmul_tn(&a, &psi_local)).max_abs() < 1e-12);
     }
 
     /// The f32 slab layout serves the same contract through the trait

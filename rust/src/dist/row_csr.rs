@@ -473,6 +473,58 @@ impl DistRowCsrMatrix {
         (y, z)
     }
 
+    /// The one-pass two-sided sketch `(Y, W) = (A·Ω, Aᵀ·Ψ)` — the
+    /// sparse row-slab face of
+    /// [`super::DistOp::fused_two_sided_sketch`]. Each slab task serves
+    /// both products from its resident CSR arrays before returning
+    /// (`slab·Ω` and `slabᵀ·Ψ_rows` in one task, one ledger pass of the
+    /// data at rest); the W partials treeAggregate exactly like
+    /// [`DistRowCsrMatrix::rmatmul_small`]'s, so the result is
+    /// bit-identical to the unfused two-call pair at half the passes.
+    pub fn fused_two_sided_sketch(
+        &self,
+        ctx: &Context,
+        _be: &dyn Compute,
+        omega: &Matrix,
+        psi: &DistRowMatrix,
+    ) -> (DistRowMatrix, Matrix) {
+        assert_eq!(self.cols, omega.rows(), "fused_two_sided_sketch: cols vs Ω rows");
+        assert_eq!(self.rows, psi.rows(), "fused_two_sided_sketch: rows vs Ψ rows");
+        ctx.add_pass(self.parts.len());
+        type SketchOut = (RowPartition, Matrix);
+        let tasks: Vec<Box<dyn FnOnce() -> SketchOut + Send + '_>> = self
+            .parts
+            .iter()
+            .map(|p| {
+                Box::new(move || {
+                    let y = p.data.matmul(omega);
+                    let qs = psi.rows_slice(p.row_start, p.row_start + p.data.rows());
+                    let w = p.data.matmul_tn(&qs);
+                    (RowPartition { row_start: p.row_start, data: y }, w)
+                }) as Box<dyn FnOnce() -> SketchOut + Send + '_>
+            })
+            .collect();
+        let results = ctx.stage(tasks);
+        let mut parts = Vec::with_capacity(results.len());
+        let mut partials = Vec::with_capacity(results.len());
+        for (part, w) in results {
+            parts.push(part);
+            partials.push(w);
+        }
+        let y = DistRowMatrix::from_parts(parts, self.rows, omega.cols());
+        let w = tree_aggregate(
+            ctx,
+            partials,
+            |mut a, b| {
+                a.add_assign(&b);
+                a
+            },
+            |m| 8 * m.rows() * m.cols(),
+        )
+        .unwrap_or_else(|| Matrix::zeros(self.cols, psi.cols()));
+        (y, w)
+    }
+
     /// Fused normal-operator mat-vec `(y, z) = (A·x, Aᵀ·(A·x))`: one
     /// nnz sweep per slab instead of the `matvec` + `rmatvec` pair;
     /// bit-identical to the two separate calls.
@@ -640,6 +692,29 @@ mod tests {
         let zs_u = d.rmatvec(&ctx, &ys_u);
         assert_eq!(ys_f, ys_u);
         assert_eq!(zs_f, zs_u);
+    }
+
+    #[test]
+    fn two_sided_sketch_bit_identical_and_single_pass() {
+        let ctx = Context::new(4);
+        let be = NativeCompute;
+        let a = sparseish(11, 50, 13);
+        let d = DistRowCsrMatrix::from_matrix(&a, 8); // 7 slabs
+        let omega = randmat(12, 13, 4);
+        let psi = DistRowMatrix::from_matrix(&randmat(13, 50, 6), 8);
+
+        ctx.reset_metrics();
+        let (y_f, w_f) = d.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+        let fused = ctx.take_metrics();
+        assert_eq!(fused.a_passes, 1);
+        assert_eq!(fused.blocks_materialized, 7);
+
+        ctx.reset_metrics();
+        let y_u = d.matmul_small(&ctx, &be, &omega);
+        let w_u = d.rmatmul_small(&ctx, &be, &psi);
+        assert_eq!(ctx.take_metrics().a_passes, 2);
+        assert_eq!(y_f.collect(&ctx).data(), y_u.collect(&ctx).data());
+        assert_eq!(w_f.data(), w_u.data());
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! `dsvd` — the launcher (L3 leader entrypoint).
 //!
 //! Subcommands:
-//!   svd       thin SVD of a synthetic tall-skinny matrix (Algorithms 1–4, pre)
-//!   lowrank   rank-l approximation of a synthetic block matrix (7, 8, pre)
-//!   table     reproduce one (or all) of the paper's tables, scaled
-//!   gen       time test-matrix synthesis (Tables 27–29)
-//!   info      environment / backend / artifact status
+//!   svd         thin SVD of a synthetic tall-skinny matrix (Algorithms 1–4, pre)
+//!   svd stream  one-pass streaming SVD: slab absorption + resident service
+//!   lowrank     rank-l approximation of a synthetic block matrix (7, 8, pre)
+//!   table       reproduce one (or all) of the paper's tables, scaled
+//!   gen         time test-matrix synthesis (Tables 27–29)
+//!   info        environment / backend / artifact status
 //!
 //! Global flags (any order): --executors N --rows-per-part N
 //! --cols-per-part N --fan-in N --workers N --working-precision X
@@ -17,8 +18,8 @@ use std::process::ExitCode;
 
 use dsvd::config::{parse_flags, RunConfig};
 use dsvd::harness::{
-    self, paper_tables, run_generation, run_lowrank, run_tall_skinny, LrAlg, Spectrum, TableRow,
-    TsAlg,
+    self, paper_tables, run_generation, run_lowrank, run_streaming, run_tall_skinny, LrAlg,
+    Spectrum, TableRow, TsAlg,
 };
 
 fn main() -> ExitCode {
@@ -27,7 +28,11 @@ fn main() -> ExitCode {
         eprintln!("{USAGE}");
         return ExitCode::FAILURE;
     };
-    let (cfg, extra) = match parse_flags(rest) {
+    // `svd stream` is the one two-word subcommand: peel the mode word
+    // off before flag parsing
+    let stream = cmd == "svd" && rest.first().map(String::as_str) == Some("stream");
+    let flag_args = if stream { &rest[1..] } else { rest };
+    let (cfg, extra) = match parse_flags(flag_args) {
         Ok(x) => x,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -35,6 +40,7 @@ fn main() -> ExitCode {
         }
     };
     let result = match cmd.as_str() {
+        "svd" if stream => cmd_stream(&cfg, &extra),
         "svd" => cmd_svd(&cfg, &extra),
         "lowrank" => cmd_lowrank(&cfg, &extra),
         "table" => cmd_table(&cfg, &extra),
@@ -110,6 +116,46 @@ fn cmd_svd(cfg: &RunConfig, extra: &Extra) -> CmdResult {
         .map(|&a| run_tall_skinny(cfg, be.as_ref(), m, n, spectrum, a))
         .collect();
     print_rows(&format!("svd m={m} n={n} {spectrum:?} backend={}", be.name()), &rows);
+    Ok(())
+}
+
+fn cmd_stream(cfg: &RunConfig, extra: &Extra) -> CmdResult {
+    let m: usize = get(extra, "m", 8192)?;
+    let n: usize = get(extra, "n", 1024)?;
+    let rank: usize = get(extra, "rank", 10)?;
+    let slabs: usize = get(extra, "slabs", 8)?;
+    let queries: usize = get(extra, "queries", 32)?;
+    if slabs == 0 || slabs > m {
+        return Err(format!("--slabs must be in 1..={m}").into());
+    }
+    let spectrum = match spectrum_arg(extra, rank)? {
+        Spectrum::Geometric => Spectrum::LowRank(rank), // paper's (5) is the default here
+        Spectrum::Staircase(_) => Spectrum::Staircase(rank),
+        s => s,
+    };
+    let be = cfg.compute()?;
+    let r = run_streaming(cfg, be.as_ref(), m, n, rank, slabs, queries, spectrum);
+    println!(
+        "stream: {} slabs absorbed ({} rows), {} queries served, a_passes={} (absorbed rows are never re-read)",
+        r.row.metrics.sketch_updates,
+        r.row.metrics.rows_absorbed,
+        r.row.metrics.queries_served,
+        r.row.metrics.a_passes
+    );
+    println!(
+        "one-pass coupling Q*Psi: rank {} of {}x{}, condition {}",
+        r.diag.cross_rank,
+        r.diag.sketch_cols,
+        r.diag.coupling_cols,
+        harness::sci(r.diag.cross_cond)
+    );
+    print_rows(
+        &format!(
+            "svd stream m={m} n={n} rank={rank} slabs={slabs} {spectrum:?} backend={}",
+            be.name()
+        ),
+        &[r.row],
+    );
     Ok(())
 }
 
@@ -241,6 +287,10 @@ usage: dsvd <command> [flags]
 
 commands:
   svd      --m N --n N [--spectrum geometric|staircase] [--alg 1|2|3|4|pre|all]
+  svd stream  --m N --n N --rank N --slabs N --queries N [--spectrum ...]
+           one-pass streaming SVD: rows arrive in --slabs slabs, each is
+           absorbed with ONE fused traversal (never re-read), and the
+           resident service answers --queries projections from the factors
   lowrank  --m N --n N --l N --i N [--spectrum lowrank|staircase] [--alg 7|8|pre|all]
            with --tolerance X: adaptive (tolerance-first) execution — the
            run picks the rank, growing the sketch by --block-size per round

@@ -1,0 +1,250 @@
+//! Integration suite for the one-pass / streaming layer (ISSUE 10):
+//!
+//! * absorbing every slab reproduces the batch `algorithm9` run on the
+//!   concatenated matrix, and both land inside the HMT error envelope
+//!   around σ_{r+1} with factors orthonormal to ≤ 1e-13;
+//! * the pass ledger certifies the one-pass claim — a batch run reads
+//!   stored A exactly once, absorption reads each arriving slab exactly
+//!   once and never re-reads absorbed rows (refresh adds zero passes);
+//! * the streamed factorization is bit-deterministic across worker
+//!   counts 1/2/4 under both the barrier and the pipelined scheduler;
+//! * `fused_two_sided_sketch` agrees with the unfused two-call pair on
+//!   every storage backend (dense / CSR / implicit / spilled blocks,
+//!   dense and CSR row slabs) at half the ledger passes.
+
+use std::f64::consts::PI;
+
+use dsvd::algs::{algorithm9, DistSvd, StreamingOpts, StreamingSketch};
+use dsvd::dist::{
+    BlockStorage, CommsModel, Context, DistBlockMatrix, DistOp, DistRowCsrMatrix, DistRowMatrix,
+    SchedMode, SpillStore, UnfusedOp,
+};
+use dsvd::gen::DctBlockTestMatrix;
+use dsvd::gen::SparseRandTestMatrix;
+use dsvd::linalg::qr::thin_qr;
+use dsvd::linalg::{blas, Matrix};
+use dsvd::rng::Rng;
+use dsvd::runtime::compute::NativeCompute;
+use dsvd::verify::{
+    max_entry_gram_minus_identity, max_entry_gram_minus_identity_local, spectral_norm, ResidualOp,
+};
+
+fn opts(rank: usize, rows_per_part: usize) -> StreamingOpts {
+    let mut o = StreamingOpts::new(rank);
+    o.rows_per_part = rows_per_part;
+    o
+}
+
+/// An exactly rank-`sigma.len()` m×n matrix with the given spectrum.
+fn lowrank_dense(m: usize, n: usize, sigma: &[f64], seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let r = sigma.len();
+    let q1 = thin_qr(&Matrix::from_fn(m, r, |_, _| rng.gauss())).q;
+    let q2 = thin_qr(&Matrix::from_fn(n, r, |_, _| rng.gauss())).q;
+    let mut qs = q1;
+    for (j, &s) in sigma.iter().enumerate() {
+        qs.scale_col(j, s);
+    }
+    blas::matmul_nt(&qs, &q2)
+}
+
+/// `U diag(s) Vᵀ` gathered densely — a basis-independent way to compare
+/// two factorizations of the same operator.
+fn reconstruction(ctx: &Context, out: &DistSvd) -> Matrix {
+    let mut us = out.u.collect(ctx);
+    for (j, &s) in out.s.iter().enumerate() {
+        us.scale_col(j, s);
+    }
+    blas::matmul_nt(&us, &out.v)
+}
+
+#[test]
+fn streaming_matches_batch_within_hmt_envelope() {
+    let ctx = Context::new(8);
+    let be = NativeCompute;
+    let (m, n, rank) = (96usize, 64usize, 8usize);
+    // a full spectrum with a genuine tail, so the envelope gate is a
+    // real statement about σ_{r+1}, not a 0 ≤ 0 tautology
+    let sigma: Vec<f64> = (0..n).map(|j| 0.5f64.powi(j as i32)).collect();
+    let gen = DctBlockTestMatrix::new(m, n, &sigma);
+    let a = gen.generate(&ctx, &be, 32, 32);
+    let dense = a.collect(&ctx);
+
+    let (batch, batch_diag) = algorithm9(&ctx, &be, &a, &opts(rank, 16));
+
+    // same seed, same Ω/Ψ streams — the rows just arrive in three slabs
+    let mut sk = StreamingSketch::new(&ctx, n, opts(rank, 16));
+    for (r0, r1) in [(0usize, 31usize), (31, 70), (70, 96)] {
+        let slab = DistRowMatrix::from_matrix(&dense.slice(r0, r1, 0, n), 16);
+        sk.absorb(&ctx, &be, &slab);
+    }
+    let (stream, stream_diag) = sk.refresh(&ctx, &be);
+
+    // identical sketches up to floating summation order
+    assert_eq!(stream.s.len(), batch.s.len());
+    for j in 0..stream.s.len() {
+        assert!(
+            (stream.s[j] - batch.s[j]).abs() / batch.s[j] < 1e-8,
+            "σ_{j}: stream {} vs batch {}",
+            stream.s[j],
+            batch.s[j]
+        );
+    }
+    let d = reconstruction(&ctx, &stream).sub(&reconstruction(&ctx, &batch)).max_abs();
+    assert!(d <= 1e-8, "streamed reconstruction differs from batch by {d}");
+    assert_eq!(stream_diag.cross_rank, batch_diag.cross_rank);
+
+    // HMT §10: the expected one-pass error sits within a modest factor
+    // of σ_{r+1}; gate both runs on the standard envelope
+    let envelope = 10.0 * (2.0 / PI).sqrt() * ((n as f64).sqrt() + 4.0) * sigma[rank];
+    for (label, out) in [("batch", &batch), ("stream", &stream)] {
+        let resid = ResidualOp { a: &a, u: &out.u, s: &out.s, v: &out.v };
+        let err = spectral_norm(&ctx, &resid, 40, 7);
+        assert!(err <= envelope, "{label}: ‖A−UΣVᵀ‖₂ = {err} > envelope {envelope}");
+        let u_orth = max_entry_gram_minus_identity(&ctx, &be, &out.u);
+        assert!(u_orth <= 1e-13, "{label}: MaxEntry(|UᵀU−I|) = {u_orth}");
+        let v_orth = max_entry_gram_minus_identity_local(&out.v);
+        assert!(v_orth <= 1e-13, "{label}: MaxEntry(|VᵀV−I|) = {v_orth}");
+    }
+}
+
+#[test]
+fn one_pass_ledger_on_stored_backends_and_absorption_never_rereads() {
+    let ctx = Context::new(8);
+    let be = NativeCompute;
+    let mut rng = Rng::seed(0x57A1);
+    let a = Matrix::from_fn(80, 40, |_, _| rng.gauss());
+
+    // batch algorithm9 over stored backends: A is traversed exactly once
+    let blocks = DistBlockMatrix::from_matrix(&a, 16, 16);
+    ctx.reset_metrics();
+    let _ = algorithm9(&ctx, &be, &blocks, &opts(5, 16));
+    assert_eq!(ctx.metrics().a_passes, 1, "block storage: one traversal total");
+
+    let csr = DistRowCsrMatrix::from_matrix(&a, 16);
+    ctx.reset_metrics();
+    let _ = algorithm9(&ctx, &be, &csr, &opts(5, 16));
+    assert_eq!(ctx.metrics().a_passes, 1, "CSR storage: one traversal total");
+
+    // absorption: each arriving CSR slab is read exactly once, and
+    // neither later absorbs nor refresh ever touch it again
+    ctx.reset_metrics();
+    let mut sk = StreamingSketch::new(&ctx, 40, opts(5, 16));
+    for (i, (r0, r1)) in [(0usize, 30usize), (30, 56), (56, 80)].into_iter().enumerate() {
+        let slab = DistRowCsrMatrix::from_matrix(&a.slice(r0, r1, 0, 40), 16);
+        sk.absorb(&ctx, &be, &slab);
+        assert_eq!(ctx.metrics().a_passes, i + 1, "slab {i}: exactly one read on arrival");
+        let _ = sk.refresh(&ctx, &be);
+        assert_eq!(ctx.metrics().a_passes, i + 1, "refresh after slab {i} must not re-read");
+    }
+    let m = ctx.metrics();
+    assert_eq!(m.sketch_updates, 3);
+    assert_eq!(m.rows_absorbed, 80);
+}
+
+#[test]
+fn streaming_is_bit_deterministic_across_workers_and_scheds() {
+    const COMMS: CommsModel = CommsModel { byte_latency: 1e-4, task_overhead: 1e-3 };
+    let (m, n) = (60usize, 24usize);
+    let a = lowrank_dense(m, n, &[4.0, 2.0, 1.0, 0.5], 0xB17_5EED);
+    let be = NativeCompute;
+
+    type Snapshot = (Vec<f64>, Vec<f64>, Vec<Vec<f64>>);
+    let mut reference: Option<Snapshot> = None;
+    for sched in [SchedMode::Barrier, SchedMode::Pipelined] {
+        for workers in [1usize, 2, 4] {
+            let ctx = Context::new(8).with_workers(workers).with_comms(COMMS).with_sched(sched);
+            let mut sk = StreamingSketch::new(&ctx, n, opts(4, 16));
+            for (r0, r1) in [(0usize, 20usize), (20, 41), (41, 60)] {
+                let slab = DistRowMatrix::from_matrix(&a.slice(r0, r1, 0, n), 16);
+                sk.absorb(&ctx, &be, &slab);
+            }
+            let (out, _) = sk.refresh(&ctx, &be);
+            let snap: Snapshot = (
+                out.s.clone(),
+                out.v.data().to_vec(),
+                out.u.parts.iter().map(|p| p.data.data().to_vec()).collect(),
+            );
+            match &reference {
+                None => reference = Some(snap),
+                Some(r) => {
+                    let tag = format!("{sched:?} workers={workers}");
+                    assert_eq!(&snap.0, &r.0, "{tag}: Σ changed bits");
+                    assert_eq!(&snap.1, &r.1, "{tag}: V changed bits");
+                    assert_eq!(&snap.2, &r.2, "{tag}: U changed bits");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_two_sided_sketch_matches_unfused_on_every_backend() {
+    let g = SparseRandTestMatrix::new(96, 64, 0.25, 0xD15C);
+    let ctx = Context::new(8);
+    let be = NativeCompute;
+    let mut rng = Rng::seed(0xD15D);
+    let omega = Matrix::from_fn(64, 7, |_, _| rng.gauss());
+    let psi = DistRowMatrix::from_matrix(&Matrix::from_fn(96, 11, |_, _| rng.gauss()), 32);
+
+    // block-layout backends, including blocks spilled to disk (the
+    // budget holds two of the six blocks, so the store genuinely evicts)
+    let dense = g.generate(&ctx, 32, 32, BlockStorage::Dense);
+    let store = SpillStore::with_budget(2 * 32 * 32 * 8).expect("spill store");
+    let spilled = dense.spill(&ctx, &store).expect("spill");
+    let variants: Vec<(&str, DistBlockMatrix)> = vec![
+        ("dense", dense),
+        ("csr", g.generate(&ctx, 32, 32, BlockStorage::SparseCsr)),
+        ("implicit", g.generate(&ctx, 32, 32, BlockStorage::Implicit)),
+        ("spilled", spilled),
+    ];
+    for (name, a) in &variants {
+        let op: &dyn DistOp = a;
+        let unfused = UnfusedOp(op);
+        ctx.reset_metrics();
+        let (yf, wf) = op.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+        let fused_passes = ctx.take_metrics().a_passes;
+        ctx.reset_metrics();
+        let (yu, wu) = unfused.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+        let unfused_passes = ctx.take_metrics().a_passes;
+        assert_eq!(fused_passes, 1, "{name}: fused sketch must charge one pass");
+        assert_eq!(unfused_passes, 2, "{name}: unfused pair charges two");
+        let (yf, yu) = (yf.collect(&ctx), yu.collect(&ctx));
+        if *name == "dense" || *name == "spilled" {
+            // same dense per-block kernels, same fold order → exact
+            assert_eq!(yf.data(), yu.data(), "{name}: Y changed bits");
+            assert_eq!(wf.data(), wu.data(), "{name}: W changed bits");
+        } else {
+            let dy = yf.sub(&yu).max_abs();
+            let dw = wf.sub(&wu).max_abs();
+            assert!(dy <= 1e-12, "{name}: Y differs by {dy}");
+            assert!(dw <= 1e-12, "{name}: W differs by {dw}");
+        }
+    }
+
+    // row layouts: the fused slab task IS the two-call pair, fused —
+    // bit-identical on both the dense and the CSR slabs
+    let flat = Matrix::from_fn(96, 64, |i, j| g.entry(i, j));
+    let rows = DistRowMatrix::from_matrix(&flat, 16);
+    let row_op: &dyn DistOp = &rows;
+    let row_unfused = UnfusedOp(row_op);
+    ctx.reset_metrics();
+    let (yf, wf) = row_op.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+    let (yu, wu) = row_unfused.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+    // resident dense row slabs are derived data — no ledger pass either way
+    assert_eq!(ctx.take_metrics().a_passes, 0, "dense rows: derived data charges nothing");
+    assert_eq!(yf.collect(&ctx).data(), yu.collect(&ctx).data(), "dense rows: Y changed bits");
+    assert_eq!(wf.data(), wu.data(), "dense rows: W changed bits");
+
+    let csr_rows = DistRowCsrMatrix::from_matrix(&flat, 16);
+    let csr_op: &dyn DistOp = &csr_rows;
+    let csr_unfused = UnfusedOp(csr_op);
+    ctx.reset_metrics();
+    let (yf, wf) = csr_op.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+    assert_eq!(ctx.take_metrics().a_passes, 1, "CSR rows: fused sketch charges one pass");
+    ctx.reset_metrics();
+    let (yu, wu) = csr_unfused.fused_two_sided_sketch(&ctx, &be, &omega, &psi);
+    assert_eq!(ctx.take_metrics().a_passes, 2, "CSR rows: unfused pair charges two");
+    assert_eq!(yf.collect(&ctx).data(), yu.collect(&ctx).data(), "CSR rows: Y changed bits");
+    assert_eq!(wf.data(), wu.data(), "CSR rows: W changed bits");
+}

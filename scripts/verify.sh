@@ -8,10 +8,12 @@
 #                                BENCH_gen.json, BENCH_sparse.json,
 #                                BENCH_fused.json, BENCH_ooc.json,
 #                                BENCH_faults.json, BENCH_adaptive.json,
-#                                BENCH_pipeline.json, BENCH_kernels.json
+#                                BENCH_pipeline.json, BENCH_streaming.json,
+#                                BENCH_kernels.json
 #                                (fails if any record was not written; the
 #                                fused, out-of-core, fault, adaptive,
-#                                scheduler, and kernel benches also gate),
+#                                scheduler, streaming, and kernel benches
+#                                also gate),
 #                                then the DSVD_KERNEL / DSVD_SCHED /
 #                                DSVD_PRECISION feature matrix in
 #                                separate processes
@@ -135,6 +137,17 @@ DSVD_BENCH_POWER="$POWER" \
 DSVD_BENCH_JSON="BENCH_pipeline.json" \
     cargo bench --bench tables_pipeline
 
+# the one-pass/streaming sweep is a GATE: every record carries boolean
+# gate fields (the fused sketch charged exactly one A pass in batch and
+# zero extra passes during slab absorption, the streamed factors match
+# the batch one-pass run, and the reconstruction error sits inside the
+# HMT envelope around the optimal rank-r error)
+echo "== scaled bench + streaming gates: tables_streaming (DSVD_BENCH_SCALE=${SCALE})"
+DSVD_BENCH_SCALE="$SCALE" \
+DSVD_BENCH_POWER="$POWER" \
+DSVD_BENCH_JSON="BENCH_streaming.json" \
+    cargo bench --bench tables_streaming
+
 # the kernel trajectory is a GATE: the blocked SIMD microkernels must
 # clear 1.5x over the scalar reference on matmul/matmul_tn/gram (while
 # agreeing to 1e-12 — the bench asserts that itself), and the f32
@@ -147,7 +160,7 @@ DSVD_BENCH_JSON="BENCH_kernels.json" \
 # every expected perf record must exist and be non-empty
 for f in BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json \
          BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json \
-         BENCH_pipeline.json BENCH_kernels.json; do
+         BENCH_pipeline.json BENCH_streaming.json BENCH_kernels.json; do
     if [ ! -s "$f" ]; then
         echo "!! missing perf record: $f" >&2
         exit 1
@@ -210,6 +223,19 @@ for gate in bit_identical pipelined_not_slower tsqr_fanin_speedup_ok peak_within
         exit 1
     fi
 done
+# every streaming record must hold the one-pass ledger (one A pass in
+# batch, zero during absorption), match the batch one-pass factors, and
+# land inside the HMT envelope
+for gate in one_pass_ledger stream_matches_batch within_hmt_envelope; do
+    if ! grep -q "\"$gate\": true" BENCH_streaming.json; then
+        echo "!! BENCH_streaming.json lacks the $gate gate field" >&2
+        exit 1
+    fi
+    if grep -q "\"$gate\": false" BENCH_streaming.json; then
+        echo "!! a streaming record failed the $gate gate" >&2
+        exit 1
+    fi
+done
 # the blocked microkernels must have cleared the 1.5x bar on all three
 # dense kernels, and the f32 storage runs must have halved the byte
 # ledgers while keeping the error columns inside their envelopes
@@ -224,7 +250,7 @@ for gate in blocked_matmul_speedup_ok blocked_matmul_tn_speedup_ok blocked_gram_
         exit 1
     fi
 done
-echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json BENCH_pipeline.json BENCH_kernels.json"
+echo "== perf records: BENCH_tall_skinny.json BENCH_lowrank.json BENCH_gen.json BENCH_sparse.json BENCH_fused.json BENCH_ooc.json BENCH_faults.json BENCH_adaptive.json BENCH_pipeline.json BENCH_streaming.json BENCH_kernels.json"
 
 # feature matrix: the kernel and precision knobs are cached per process,
 # so each leg runs in its own test invocation. The scalar reference path
